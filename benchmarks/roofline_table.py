@@ -1,0 +1,66 @@
+"""Render the roofline table (EXPERIMENTS.md §Roofline) from the dry-run
+cell JSONs.  Each row: arch, shape, three terms, dominant, MODEL_FLOPS,
+useful fraction, memory per device."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+OUT = pathlib.Path("experiments/dryrun")
+
+
+def load_cells(out_dir=OUT):
+    cells = []
+    for p in sorted(out_dir.glob("*.json")):
+        cells.append(json.loads(p.read_text()))
+    return cells
+
+
+def fmt_row(c):
+    if "skipped" in c:
+        return f"| {c['arch']} | {c['shape']} | — | — | — | skipped | — | — | — |"
+    if "error" in c:
+        return f"| {c['arch']} | {c['shape']} | — | — | — | ERROR | — | — | — |"
+    r = c["roofline"]
+    if "singlepod" not in c:      # aligner cells carry memory at top level
+        mem = c["memory"]
+        gb = (mem["argument_bytes"] + mem["temp_bytes"]) / 2**30
+        return ("| {arch} | {shape} | {c:.4f} | {m:.4f} | {x:.4f} | {dom} | "
+                "int-ops {io:.2e} | — | {gb:.1f} |").format(
+            arch=c["arch"], shape=c["shape"], c=r["compute_s"],
+            m=r["memory_s"], x=r["collective_s"], dom=r["dominant"],
+            io=r["int_ops_per_chip"], gb=gb)
+    mem = c["singlepod"]["memory"]
+    gb = (mem["argument_bytes"] + mem["temp_bytes"]) / 2**30
+    return ("| {arch} | {shape} | {c:.4f} | {m:.4f} | {x:.4f} | {dom} | "
+            "{mf:.2e} | {uf:.2f} | {gb:.1f} |").format(
+        arch=c["arch"], shape=c["shape"], c=r["compute_s"], m=r["memory_s"],
+        x=r["collective_s"], dom=r["dominant"], mf=r["model_flops"],
+        uf=r["useful_fraction"], gb=gb)
+
+
+def markdown_table(out_dir=OUT) -> str:
+    head = ("| arch | shape | compute_s | memory_s | collective_s | dominant "
+            "| MODEL_FLOPS | useful_frac | GB/dev (args+temp) |\n"
+            "|---|---|---|---|---|---|---|---|---|")
+    return "\n".join([head] + [fmt_row(c) for c in load_cells(out_dir)])
+
+
+def rows():
+    """CSV-style rows for benchmarks.run."""
+    out = []
+    for c in load_cells():
+        if "roofline" not in c:
+            continue
+        r = c["roofline"]
+        bound = r.get("bound_s", max(r["compute_s"], r["memory_s"],
+                                     r["collective_s"]))
+        useful = r.get("useful_fraction")
+        extra = f",useful={useful:.2f}" if useful is not None else ""
+        out.append((f"roofline/{c['arch']}/{c['shape']}",
+                    bound * 1e6, f"dominant={r['dominant']}{extra}"))
+    return out, {}
+
+
+if __name__ == "__main__":
+    print(markdown_table())

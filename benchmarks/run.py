@@ -1,0 +1,65 @@
+"""Benchmark harness — one function per paper table.
+Prints ``name,us_per_call,derived`` CSV (assignment format).
+
+  PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller problem sizes (CI)")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    all_derived = {}
+
+    from benchmarks import bench_aligners
+    rows, derived = bench_aligners.table(
+        n_reads=8 if args.fast else 24, read_len=500 if args.fast else 1000)
+    for n, us, d in rows:
+        print(f"{n},{us:.1f},{d}")
+    all_derived["aligners"] = derived
+    print(f"aligners/speedup_improved_vs_unimproved,0.0,"
+          f"{derived['improved_vs_unimproved']:.2f}x_paper_cpu1.9x")
+    print(f"aligners/speedup_improved_vs_edlib_like,0.0,"
+          f"{derived['improved_vs_edlib_like']:.2f}x_paper_cpu1.7x")
+    print(f"aligners/speedup_improved_vs_edlib_banded_model,0.0,"
+          f"{derived['improved_vs_edlib_banded_model']:.2f}x")
+    print(f"aligners/speedup_improved_vs_ksw2_like,0.0,"
+          f"{derived['improved_vs_ksw2_like']:.2f}x_paper_cpu15.2x")
+    print(f"aligners/speedup_dc_engine_vs_edlib_like,0.0,"
+          f"{derived['dc_engine_vs_edlib_like']:.2f}x_paper_cpu1.7x")
+
+    from benchmarks import bench_memory
+    rows, derived = bench_memory.table()
+    for n, us, d in rows:
+        print(f"{n},{us:.1f},{d}")
+    all_derived["memory"] = {k: {kk: float(vv) for kk, vv in v.items()}
+                             for k, v in derived.items()}
+
+    from benchmarks import bench_kernel
+    rows, derived = bench_kernel.table(B=1024 if args.fast else 4096)
+    for n, us, d in rows:
+        print(f"{n},{us:.1f},{d}")
+    all_derived["kernel"] = derived
+
+    try:
+        from benchmarks import roofline_table
+        rows, _ = roofline_table.rows()
+        for n, us, d in rows:
+            print(f"{n},{us:.1f},{d}")
+    except Exception as e:  # dry-run cells not generated yet
+        print(f"roofline/unavailable,0.0,{e}")
+
+    print("# derived summary (JSON):")
+    print(json.dumps(all_derived, indent=1, default=float))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Render the §Results-delta table: baseline snapshots vs final cells.
+
+  PYTHONPATH=src python experiments/delta.py
+"""
+import json
+import pathlib
+
+HERE = pathlib.Path(__file__).parent
+FINAL = HERE / "dryrun"
+BASES = [("iter1(naive)", HERE / "dryrun_baseline_iter1"),
+         ("iter2(pre-donation)", HERE / "dryrun_baseline_iter2")]
+
+
+def load(d, name):
+    p = d / name
+    if not p.exists():
+        return None
+    r = json.loads(p.read_text())
+    return r if "roofline" in r else None
+
+
+def fmt(r):
+    rf = r["roofline"]
+    mem = r["singlepod"]["memory"]
+    gb = (mem["argument_bytes"] + mem["temp_bytes"]) / 2**30
+    return rf, gb
+
+
+def main():
+    rows = ["| cell | baseline | GB/dev | bound_s | dominant | → final GB/dev"
+            " | bound_s | dominant |",
+            "|---|---|---|---|---|---|---|---|"]
+    for p in sorted(FINAL.glob("*__*.json")):
+        name = p.name
+        if name.startswith("genasm-aligner"):
+            continue
+        fin = load(FINAL, name)
+        if fin is None:
+            continue
+        base = None
+        tag = ""
+        for t, d in BASES:
+            b = load(d, name)
+            if b is not None:
+                base, tag = b, t
+                break
+        if base is None:
+            continue
+        bf, bgb = fmt(base)
+        ff, fgb = fmt(fin)
+        # only show cells where something moved >10%
+        if abs(bgb - fgb) / max(bgb, 1e-9) < 0.10 and \
+           abs(bf["bound_s"] - ff["bound_s"]) / max(bf["bound_s"], 1e-9) < 0.10:
+            continue
+        rows.append(
+            f"| {fin['arch']}/{fin['shape']} | {tag} | {bgb:.1f} | "
+            f"{bf['bound_s']:.3f} | {bf['dominant']} | **{fgb:.1f}** | "
+            f"**{ff['bound_s']:.3f}** | {ff['dominant']} |")
+    print("\n".join(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Assert every runnable final cell compiled on BOTH meshes and summarize
+the pod axis's effect on the collective schedule (EXPERIMENTS §Dry-run)."""
+import json
+import pathlib
+
+HERE = pathlib.Path(__file__).parent / "dryrun"
+
+rows = ["| cell | singlepod colls | multipod colls | Δall-reduce |",
+        "|---|---|---|---|"]
+bad = []
+for p in sorted(HERE.glob("*__*.json")):
+    r = json.loads(p.read_text())
+    if "skipped" in r or "error" in r or "singlepod" not in r:
+        if "error" in r:
+            bad.append(p.name)
+        continue
+    if "multipod" not in r:
+        if not p.name.startswith("genasm-aligner"):
+            bad.append(p.name + " (no multipod)")
+        continue
+    sp = r["singlepod"]["collectives_schedule"]["counts"]
+    mp = r["multipod"]["collectives_schedule"]["counts"]
+    dar = mp.get("all-reduce", 0) - sp.get("all-reduce", 0)
+    rows.append(f"| {r['arch']}/{r['shape']} | {sum(sp.values())} | "
+                f"{sum(mp.values())} | {dar:+d} |")
+print("\n".join(rows))
+if bad:
+    print("\nFAILED CELLS:", bad)
+    raise SystemExit(1)
+print("\nall runnable cells compiled on both meshes")

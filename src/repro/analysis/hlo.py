@@ -1,0 +1,60 @@
+"""Parse optimized HLO text for collective traffic (roofline §collective).
+
+cost_analysis() does not expose collective bytes, so we scan the compiled
+module for all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops and sum their tensor sizes (shapes in partitioned
+HLO are per-device).  Wire-byte convention (documented in EXPERIMENTS.md):
+all-reduce counts 2x (reduce-scatter + all-gather phases); others 1x; the
+(n-1)/n ring factor is folded to 1.  Ops inside `while` bodies appear once —
+the dry-run's two-point depth extrapolation recovers trip counts.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+         "collective-permute")
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+
+
+def _shape_bytes(segment: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(segment):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Returns {'total_wire_bytes', 'by_op': {op: bytes}, 'counts': {op: n}}."""
+    by_op = defaultdict(int)
+    counts = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        result_seg, op, suffix = m.group(1), m.group(2), m.group(3)
+        if suffix == "-done":
+            continue  # counted at -start
+        size = _shape_bytes(result_seg)
+        wire = 2 * size if op == "all-reduce" else size
+        by_op[op] += wire
+        counts[op] += 1
+    return {"total_wire_bytes": int(sum(by_op.values())),
+            "by_op": dict(by_op), "counts": dict(counts)}

@@ -1,0 +1,35 @@
+"""Roofline term calculator (TPU v5e constants from the assignment)."""
+from __future__ import annotations
+
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+# model-FLOPs conventions: 6·N·D train, 2·N·D inference (per generated token)
+TRAIN_FACTOR, INFER_FACTOR = 6, 2
+
+
+def roofline_terms(flops_global: float, bytes_global: float,
+                   coll_bytes_per_dev: float, chips: int) -> dict:
+    compute_t = flops_global / (chips * PEAK_FLOPS)
+    memory_t = bytes_global / (chips * HBM_BW)
+    coll_t = coll_bytes_per_dev / ICI_BW   # HLO shapes are already per-device
+    terms = {"compute_s": compute_t, "memory_s": memory_t,
+             "collective_s": coll_t}
+    dom = max(terms, key=terms.get)
+    terms["dominant"] = dom.replace("_s", "")
+    terms["bound_s"] = terms[dom]
+    return terms
+
+
+def model_flops(n_active_params: float, tokens: float, train: bool) -> float:
+    return (TRAIN_FACTOR if train else INFER_FACTOR) * n_active_params * tokens
+
+
+def useful_fraction(model_fl: float, hlo_flops_global: float) -> float:
+    return model_fl / hlo_flops_global if hlo_flops_global else 0.0
+
+
+def count_params(params_tree) -> int:
+    import jax
+    return sum(int(p.size) for p in jax.tree_util.tree_leaves(params_tree))

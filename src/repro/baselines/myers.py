@@ -1,0 +1,152 @@
+"""Edlib-style baseline: Myers' (1999) bit-parallel NW edit distance.
+
+Multi-word (block) variant with explicit carry chains, batched over pairs
+and jit-compiled — the algorithmic core of Edlib [Šošić & Šikić 2017].
+Edlib additionally skips out-of-band blocks (Ukkonen banding); we report
+that as a modeled factor (words_in_band / words_total) in the benchmark
+rather than implementing the dynamic block window (see DESIGN.md §5).
+
+Convention here is Myers' original: Peq bit i == 1 iff P[i] == c
+(1-active, opposite of GenASM's).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+WORD = 32
+_U1 = jnp.uint32(1)
+_UF = jnp.uint32(0xFFFFFFFF)
+
+
+def build_peq(pat_codes, nw: int, n_symbols: int = 4):
+    """(B, n_symbols+1, NW); bit set where pattern char equals symbol.
+    Padding rows (>= m_len) match nothing."""
+    m_pad = nw * WORD
+    pad = m_pad - pat_codes.shape[-1]
+    if pad:
+        pat_codes = jnp.pad(pat_codes, ((0, 0), (0, pad)), constant_values=255)
+    sym = jnp.arange(n_symbols, dtype=pat_codes.dtype)
+    eq = (pat_codes[:, None, :] == sym[None, :, None]).astype(jnp.uint32)
+    eq = eq.reshape(eq.shape[0], n_symbols, nw, WORD)
+    w = _U1 << jnp.arange(WORD, dtype=jnp.uint32)
+    peq = jnp.sum(eq * w, axis=-1, dtype=jnp.uint32)
+    zero = jnp.zeros((peq.shape[0], 1, nw), jnp.uint32)
+    return jnp.concatenate([peq, zero], axis=1)
+
+
+def _add_carry(a, b):
+    """Multi-word addition a + b over the word axis (axis=-1, LSW first).
+    Word count is small; the carry chain is unrolled."""
+    nw = a.shape[-1]
+    outs = []
+    carry = jnp.zeros(a.shape[:-1], jnp.uint32)
+    for w in range(nw):
+        s1 = a[..., w] + b[..., w]
+        c1 = (s1 < a[..., w]).astype(jnp.uint32)
+        s2 = s1 + carry
+        c2 = (s2 < s1).astype(jnp.uint32)
+        outs.append(s2)
+        carry = c1 | c2
+    return jnp.stack(outs, axis=-1)
+
+
+def _shift1(v, carry_in):
+    hi = v >> jnp.uint32(WORD - 1)
+    carry = jnp.concatenate(
+        [jnp.broadcast_to(jnp.asarray(carry_in, jnp.uint32), v[..., :1].shape),
+         hi[..., :-1]], axis=-1)
+    return (v << _U1) | carry
+
+
+@partial(jax.jit, static_argnames=("nw", "n"))
+def myers_distance(pat_codes, text_codes, m_len, n_len, *, nw: int, n: int):
+    """Global (NW) edit distance per pair.  pat_codes (B, <=32*nw) with 255
+    padding; text_codes (B, n) with out-of-alphabet padding past n_len."""
+    B = pat_codes.shape[0]
+    peq = build_peq(pat_codes, nw)
+    n_sym = peq.shape[1] - 1
+
+    # mask of valid pattern bits; the score is tracked at bit m_len-1
+    tgt_word = (m_len - 1) // WORD
+    tgt_off = ((m_len - 1) % WORD).astype(jnp.uint32)
+
+    VP = jnp.full((B, nw), 0xFFFFFFFF, jnp.uint32)
+    VN = jnp.zeros((B, nw), jnp.uint32)
+    score = jnp.asarray(m_len, jnp.int32)
+
+    def step(carry, j):
+        VP, VN, score = carry
+        c = jnp.clip(text_codes[:, j].astype(jnp.int32), 0, n_sym)
+        Eq = jnp.take_along_axis(peq, c[:, None, None], axis=1)[:, 0]
+        Xv = Eq | VN
+        Xh = (_add_carry(Eq & VP, VP) ^ VP) | Eq
+        Ph = VN | ~(Xh | VP)
+        Mh = VP & Xh
+        # score update at the target bit (per-problem m_len)
+        ph_t = (jnp.take_along_axis(Ph, tgt_word[:, None], axis=1)[:, 0]
+                >> tgt_off) & _U1
+        mh_t = (jnp.take_along_axis(Mh, tgt_word[:, None], axis=1)[:, 0]
+                >> tgt_off) & _U1
+        live = j < n_len
+        score = score + jnp.where(live, ph_t.astype(jnp.int32)
+                                  - mh_t.astype(jnp.int32), 0)
+        # NW: first column is a gap column -> horizontal delta shift-in is +1
+        Ph = _shift1(Ph, 1)
+        Mh = _shift1(Mh, 0)
+        VP_new = Mh | ~(Xv | Ph)
+        VN_new = Ph & Xv
+        keep = live[:, None]
+        VP = jnp.where(keep, VP_new, VP)
+        VN = jnp.where(keep, VN_new, VN)
+        return (VP, VN, score), None
+
+    (VP, VN, score), _ = jax.lax.scan(step, (VP, VN, score), jnp.arange(n))
+    return score
+
+
+def banded_traceback(p: np.ndarray, t: np.ndarray, k: int):
+    """Host-side banded DP traceback used to recover the CIGAR once the
+    bit-parallel distance is known (Edlib recomputes the path similarly).
+    Returns (dist, ops front-first) or (None, None) if |ED| > k."""
+    from ..core.oracle import OP_DEL, OP_INS, OP_MATCH, OP_SUBST
+    m, n = len(p), len(t)
+    bw = 2 * k + 1
+    INF = 10 ** 9
+    D = np.full((m + 1, bw), INF, np.int64)
+    off0 = k  # column j maps to band slot j - i + k
+    D[0, k:min(bw, k + n + 1)] = np.arange(min(n + 1, bw - k))
+    for i in range(1, m + 1):
+        lo = max(0, i - k)
+        hi = min(n, i + k)
+        for j in range(lo, hi + 1):
+            s = j - i + k
+            best = INF
+            if j > 0 and 0 <= s <= bw - 1:
+                dd = D[i - 1, s] + (p[i - 1] != t[j - 1])
+                best = min(best, dd)
+            if s + 1 <= bw - 1:
+                best = min(best, D[i - 1, s + 1] + 1)  # I (consume read)
+            if j > 0 and s - 1 >= 0:
+                best = min(best, D[i, s - 1] + 1)      # D (consume ref)
+            D[i, s] = best
+    if n - m + k < 0 or n - m + k >= bw or D[m, n - m + k] > k:
+        return None, None
+    dist = int(D[m, n - m + k])
+    ops = []
+    i, j = m, n
+    while i > 0 or j > 0:
+        s = j - i + k
+        d = D[i, s]
+        if i > 0 and j > 0 and D[i - 1, s] + (p[i - 1] != t[j - 1]) == d:
+            ops.append(OP_MATCH if p[i - 1] == t[j - 1] else OP_SUBST)
+            i -= 1; j -= 1
+        elif j > 0 and s - 1 >= 0 and D[i, s - 1] + 1 == d:
+            ops.append(OP_DEL); j -= 1
+        else:
+            ops.append(OP_INS); i -= 1
+    ops.reverse()
+    return dist, np.array(ops, np.uint8)

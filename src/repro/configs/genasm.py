@@ -1,0 +1,7 @@
+"""The paper's own configuration: GenASM window geometry + improvements."""
+from ..core.config import AlignerConfig
+
+CONFIG = AlignerConfig(W=64, O=24, k=12, store="band", early_term=True)
+
+# unimproved baseline (GenASM as in MICRO'20: 4 edge bitvectors, no ET)
+BASELINE = AlignerConfig(W=64, O=24, k=12, store="edges4", early_term=False)

@@ -1,0 +1,102 @@
+"""Public aligner API: batch alignment of (read, candidate-ref) pairs with
+failure rescue, host-side padding, and CIGAR decoding."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from .config import AlignerConfig
+from .oracle import OP_CHARS
+from .cigar import ops_to_string
+from .traceback import OP_NONE
+from .windowing import SENTINEL_REF, align_pairs, self_tail_width
+
+DNA = "ACGT"
+
+
+def encode(seq: str) -> np.ndarray:
+    lut = np.full(128, 255, np.uint8)
+    for i, c in enumerate(DNA):
+        lut[ord(c)] = i
+        lut[ord(c.lower())] = i
+    return lut[np.frombuffer(seq.encode(), np.uint8)]
+
+
+@dataclasses.dataclass
+class AlignResult:
+    dist: np.ndarray          # (B,) edit cost of the produced alignment
+    cigars: list[str]         # run-length encoded, front-first, '=XID'
+    ops: list[np.ndarray]     # raw op arrays
+    failed: np.ndarray        # (B,) True if unalignable within rescue budget
+    k_used: np.ndarray        # (B,) per-window threshold that succeeded
+
+
+class GenASMAligner:
+    """Batch long-read aligner implementing the paper's improved GenASM.
+
+    cfg.store/early_term select the variant (defaults = all three paper
+    improvements on).  Pairs whose per-window edit distance exceeds cfg.k
+    are retried with doubled k up to `rescue_rounds` times (host-side),
+    mirroring common practice for threshold-based aligners.
+    """
+
+    def __init__(self, cfg: AlignerConfig = AlignerConfig(), rescue_rounds: int = 2):
+        self.cfg = cfg
+        self.rescue_rounds = rescue_rounds
+
+    def _pad(self, seqs, width, pad_val):
+        B = len(seqs)
+        out = np.full((B, width), pad_val, np.uint8)
+        lens = np.zeros(B, np.int32)
+        for i, s in enumerate(seqs):
+            lens[i] = len(s)
+            out[i, :len(s)] = s
+        return out, lens
+
+    def align(self, reads, refs) -> AlignResult:
+        """reads/refs: lists of np.uint8 code arrays (see `encode`)."""
+        assert len(reads) == len(refs)
+        B = len(reads)
+        max_r = max(len(r) for r in reads)
+        cfg = self.cfg
+        dist = np.zeros(B, np.int64)
+        failed = np.ones(B, bool)
+        k_used = np.zeros(B, np.int32)
+        all_ops: list[np.ndarray | None] = [None] * B
+        todo = np.arange(B)
+        for rnd in range(self.rescue_rounds + 1):
+            if len(todo) == 0:
+                break
+            sub_reads = [reads[i] for i in todo]
+            sub_refs = [refs[i] for i in todo]
+            max_read_len = max(len(r) for r in sub_reads)
+            wt = self_tail_width(cfg)
+            rpad, rlen = self._pad(sub_reads, max_read_len + cfg.W + 1, 255)
+            fpad, flen = self._pad(sub_refs,
+                                   max(len(f) for f in sub_refs) + cfg.W + wt + 1,
+                                   SENTINEL_REF)
+            out = align_pairs(jnp.asarray(rpad), jnp.asarray(rlen),
+                              jnp.asarray(fpad), jnp.asarray(flen),
+                              cfg=cfg, max_read_len=max_read_len)
+            ops = np.asarray(out["ops"])
+            n_ops = np.asarray(out["n_ops"])
+            ok = ~np.asarray(out["failed"])
+            d = np.asarray(out["dist"])
+            for loc, glob in enumerate(todo):
+                if ok[loc]:
+                    all_ops[glob] = ops[loc, :n_ops[loc]]
+                    dist[glob] = d[loc]
+                    failed[glob] = False
+                    k_used[glob] = cfg.k
+            todo = todo[~ok[np.arange(len(todo))]] if len(todo) else todo
+            todo = np.array([g for g in todo if failed[g]])
+            # rescue: double k (capped below W so the band math stays valid)
+            new_k = min(cfg.k * 2, cfg.W - 1)
+            if new_k == cfg.k:
+                break
+            cfg = dataclasses.replace(cfg, k=new_k)
+        cigars = [ops_to_string(o) if o is not None else "" for o in all_ops]
+        ops_out = [o if o is not None else np.zeros(0, np.uint8) for o in all_ops]
+        return AlignResult(dist, cigars, ops_out, failed, k_used)

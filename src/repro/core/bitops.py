@@ -1,0 +1,113 @@
+"""Multi-word bitvector primitives for the GenASM family of algorithms.
+
+TPU adaptation: TPU integer lanes are 32-bit, so an m-bit status vector is a
+vector of ``NW = ceil(m/32)`` uint32 words, word 0 = least significant.  All
+operations are elementwise VPU-friendly ops batched over arbitrary leading
+dimensions; the word dimension is always the innermost axis.
+
+Bit convention (GenASM / Wu-Manber "0-active"): bit i == 0 means *active*
+("pattern prefix P[0..i] is alignable under the current budget").
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+WORD_BITS = 32
+_U1 = jnp.uint32(1)
+_UFULL = jnp.uint32(0xFFFFFFFF)
+
+
+def n_words(m_bits: int) -> int:
+    return -(-m_bits // WORD_BITS)
+
+
+def shift1(v: jnp.ndarray, carry_in) -> jnp.ndarray:
+    """Shift a (..., NW) uint32 word-vector left by one bit.
+
+    ``carry_in`` (0/1, scalar or broadcastable to v[..., 0]) enters at bit 0.
+    GenASM uses this for the M/S/I terms; the carry bit encodes the DP's
+    first-column boundary condition (see genasm.py).
+    """
+    carry_in = jnp.asarray(carry_in, jnp.uint32)
+    hi = v >> jnp.uint32(WORD_BITS - 1)
+    carry = jnp.concatenate(
+        [jnp.broadcast_to(carry_in, v[..., :1].shape), hi[..., :-1]], axis=-1
+    )
+    return (v << _U1) | carry
+
+
+def get_bit(v: jnp.ndarray, idx) -> jnp.ndarray:
+    """Extract bit ``idx`` (int array broadcastable over v's batch dims) from a
+    (..., NW) word vector.  Returns uint32 in {0, 1}."""
+    idx = jnp.broadcast_to(jnp.asarray(idx, jnp.int32), v.shape[:-1])
+    word = idx // WORD_BITS
+    off = (idx % WORD_BITS).astype(jnp.uint32)
+    w = jnp.take_along_axis(v, word[..., None], axis=-1)[..., 0]
+    return (w >> off) & _U1
+
+
+def ones_below(d, nw: int) -> jnp.ndarray:
+    """Word vector whose ``d`` lowest bits are 0 and the rest 1:  ~0 << d.
+
+    This is the GenASM-DC init for error level d (d pattern chars can be
+    consumed by insertions before any text is read).  ``d`` may be an array;
+    result shape = d.shape + (nw,).
+    """
+    d = jnp.asarray(d, jnp.int32)[..., None]
+    base = jnp.arange(nw, dtype=jnp.int32) * WORD_BITS
+    lo = jnp.clip(d - base, 0, WORD_BITS)
+    # lo lowest bits of each word are zero
+    return jnp.where(
+        lo >= WORD_BITS,
+        jnp.uint32(0),
+        _UFULL << lo.astype(jnp.uint32),
+    )
+
+
+def build_pm(pat_codes: jnp.ndarray, nw: int, n_symbols: int = 4) -> jnp.ndarray:
+    """Pattern bitmasks PM[c]: bit i == 0 iff P[i] == c.
+
+    pat_codes: (..., m) integer codes; positions past the true pattern length
+    must hold an out-of-alphabet sentinel (e.g. 255) so their bits are 1
+    (inactive). Returns (..., n_symbols, NW) uint32.
+    """
+    m_pad = nw * WORD_BITS
+    pad = m_pad - pat_codes.shape[-1]
+    if pad:
+        pat_codes = jnp.pad(pat_codes, [(0, 0)] * (pat_codes.ndim - 1) + [(0, pad)],
+                            constant_values=255)
+    sym = jnp.arange(n_symbols, dtype=pat_codes.dtype)
+    # mismatch bit = 1 where P[i] != c
+    mm = (pat_codes[..., None, :] != sym[:, None]).astype(jnp.uint32)
+    mm = mm.reshape(*mm.shape[:-1], nw, WORD_BITS)
+    weights = _U1 << jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    return jnp.sum(mm * weights, axis=-1, dtype=jnp.uint32)
+
+
+def extract_window(v: jnp.ndarray, base, nwb: int) -> jnp.ndarray:
+    """Funnel-shift extraction of an *unaligned* 32*nwb-bit window starting at
+    bit ``base`` from a (..., NW) word vector.  This is the DENT sub-word
+    store: only the traceback-reachable band of each bitvector is kept.
+
+    base: int array broadcastable over batch dims, 0 <= base <= 32*NW - 32*nwb.
+    Returns (..., nwb) uint32.
+    """
+    nw = v.shape[-1]
+    base = jnp.asarray(base, jnp.int32)
+    w0 = base // WORD_BITS
+    s = (base % WORD_BITS).astype(jnp.uint32)
+    idx = w0[..., None] + jnp.arange(nwb + 1, dtype=jnp.int32)
+    idx = jnp.clip(idx, 0, nw - 1)
+    words = jnp.take_along_axis(v, idx, axis=-1)  # (..., nwb+1)
+    lo, hi = words[..., :nwb], words[..., 1:]
+    s = s[..., None]
+    # s == 0 must not compute hi << 32 (UB); select explicitly.
+    shifted = jnp.where(s == 0, lo, (lo >> s) | (hi << (jnp.uint32(WORD_BITS) - s)))
+    return shifted
+
+
+def window_bit(win: jnp.ndarray, base, idx) -> jnp.ndarray:
+    """Read absolute bit ``idx`` from a window stored with ``extract_window``
+    at bit offset ``base``.  Caller guarantees base <= idx < base + 32*nwb."""
+    return get_bit(win, jnp.asarray(idx, jnp.int32) - jnp.asarray(base, jnp.int32))

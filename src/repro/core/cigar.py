@@ -1,0 +1,44 @@
+"""CIGAR utilities: 2-bit packing, run-length encoding, host-side decode."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .oracle import OP_CHARS
+from .traceback import OP_NONE
+
+
+def pack_ops(ops: jnp.ndarray) -> jnp.ndarray:
+    """Pack (B, L) uint8 op codes (0..3; OP_NONE padding -> 0) into
+    (B, ceil(L/16)) uint32 words, 2 bits per op."""
+    B, L = ops.shape
+    pad = (-L) % 16
+    o = jnp.pad(ops, ((0, 0), (0, pad)))
+    o = jnp.where(o == OP_NONE, 0, o).astype(jnp.uint32)
+    o = o.reshape(B, -1, 16)
+    sh = (jnp.arange(16, dtype=jnp.uint32) * 2)
+    return jnp.sum(o << sh, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_ops(packed: np.ndarray, n_ops: np.ndarray) -> list[np.ndarray]:
+    """Host-side inverse of pack_ops."""
+    out = []
+    for row, n in zip(np.asarray(packed), np.asarray(n_ops)):
+        # op t lives in word t//16 at bit offset 2*(t%16)
+        ops = np.stack([(row >> np.uint32(2 * i)) & 3 for i in range(16)],
+                       axis=1).reshape(-1)
+        out.append(ops[:n].astype(np.uint8))
+    return out
+
+
+def ops_to_string(ops: np.ndarray) -> str:
+    """Run-length encode an op array into a CIGAR string (=XID alphabet)."""
+    ops = np.asarray(ops)
+    if ops.size == 0:
+        return ""
+    change = np.nonzero(np.diff(ops))[0] + 1
+    bounds = np.concatenate([[0], change, [len(ops)]])
+    return "".join(
+        f"{bounds[i+1]-bounds[i]}{OP_CHARS[ops[bounds[i]]]}"
+        for i in range(len(bounds) - 1)
+    )

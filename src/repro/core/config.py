@@ -1,0 +1,69 @@
+"""Aligner configuration (the paper's knobs, plus TPU-mapping knobs)."""
+from __future__ import annotations
+
+import dataclasses
+
+from .bitops import WORD_BITS, n_words
+
+
+@dataclasses.dataclass(frozen=True)
+class AlignerConfig:
+    """GenASM window/threshold configuration.
+
+    W, O follow GenASM (MICRO'20): align W-char windows, commit the first
+    W-O traceback operations, advance.  ``k`` is the per-window edit budget.
+
+    store:
+      'edges4' — unimproved GenASM-TB: all four M/S/D/I bitvectors per entry
+      'and'    — paper idea 1 (SENE): only R = M & S & D & I per entry
+      'band'   — ideas 1+3 (SENE + DENT): only the traceback-reachable
+                 diagonal band words of R, for the reachable columns
+    early_term — paper idea 2 (ET): level-major fill stops once a level
+                 holds the solution.
+    """
+    W: int = 64
+    O: int = 24
+    k: int = 12
+    store: str = "band"
+    early_term: bool = True
+    tb_margin: int = 3          # extra stored columns beyond the provable band
+    backend: str = "jnp"        # 'jnp' | 'pallas' (interpret on CPU)
+    n_symbols: int = 4
+
+    def __post_init__(self):
+        assert 0 < self.O < self.W
+        assert 0 < self.k < self.W
+        assert self.store in ("edges4", "and", "band")
+
+    @property
+    def nw(self) -> int:
+        """words per full bitvector (pattern dim padded to words)"""
+        return n_words(self.W)
+
+    @property
+    def m_pad(self) -> int:
+        return self.nw * WORD_BITS
+
+    @property
+    def nwb(self) -> int:
+        """words per DENT band window: covers [center-k-1, center+k+1]."""
+        need = 2 * self.k + 3
+        return min(self.nw, -(-need // WORD_BITS))
+
+    @property
+    def stride(self) -> int:
+        return self.W - self.O
+
+    @property
+    def ncols_band(self) -> int:
+        """columns (incl. col 0) kept by DENT column pruning: the traceback
+        commits <= W-O read chars, hence visits <= W-O+k text columns."""
+        return min(self.W + 1, self.stride + self.k + self.tb_margin)
+
+    def band_base(self, j, m_pad: int | None = None):
+        """Lowest stored bit of column j's band window (static per column
+        for square W x W windows: band center = j-1)."""
+        m_pad = m_pad or self.m_pad
+        lo = j - 2 - self.k
+        hi = m_pad - WORD_BITS * self.nwb
+        return max(0, min(lo, hi)) if isinstance(j, int) else None

@@ -1,0 +1,79 @@
+"""Analytic DP-table footprint / memory-access model (paper §I claims).
+
+GenASM-DC keeps its running bitvectors in registers; the *memory* pressure
+is (a) writing the traceback table and (b) the traceback's reads.  These
+counters mirror that accounting for each variant, in 32-bit words:
+
+  baseline  (edges4, no ET, full vectors, all columns)   — GenASM (MICRO'20)
+  +SENE     (store only R = M&S&D&I)                     — paper idea 1
+  +ET       (only levels 0..d_min computed/stored)       — paper idea 2
+  +DENT     (band words of reachable columns only)       — paper idea 3
+
+Validated against instrumented empirical counts in tests/test_counting.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from .config import AlignerConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class WindowCounts:
+    footprint_words: int     # allocated traceback storage
+    dc_writes: int           # words written to the traceback table
+    tb_reads: int            # words read back by the traceback
+
+
+def baseline_counts(cfg: AlignerConfig, tb_steps: float) -> WindowCounts:
+    """Unimproved GenASM-TB: 4 full bitvectors per (column, level)."""
+    cells = cfg.W * (cfg.k + 1)
+    words = 4 * cfg.nw
+    # traceback inspects the 4 stored edge vectors of the current cell
+    return WindowCounts(cells * words, cells * words,
+                        int(tb_steps * 4 * cfg.nw))
+
+
+def improved_counts(cfg: AlignerConfig, tb_steps: float,
+                    levels_run: float) -> WindowCounts:
+    """SENE + DENT (+ET via levels_run = average levels actually filled)."""
+    cols = cfg.ncols_band
+    alloc = cols * (cfg.k + 1) * cfg.nwb
+    writes = int(cols * levels_run * cfg.nwb)
+    # SENE recomputation reads R[d][j-1], R[d-1][j-1], R[d-1][j] per step
+    reads = int(tb_steps * 3 * cfg.nwb)
+    return WindowCounts(alloc, writes, reads)
+
+
+def sene_only_counts(cfg: AlignerConfig, tb_steps: float) -> WindowCounts:
+    cells = cfg.W * (cfg.k + 1)
+    return WindowCounts(cells * cfg.nw, cells * cfg.nw,
+                        int(tb_steps * 3 * cfg.nw))
+
+
+def reduction_report(cfg: AlignerConfig, avg_levels: float,
+                     tb_steps: float | None = None) -> dict:
+    """Footprint / access reduction factors for a steady-state main window.
+
+    avg_levels: measured average of (d_min+1) per window (ET).
+    tb_steps:   traceback walk length; defaults to stride + avg window cost.
+    """
+    if tb_steps is None:
+        tb_steps = cfg.stride + (avg_levels - 1.0)
+    base = baseline_counts(cfg, tb_steps)
+    sene = sene_only_counts(cfg, tb_steps)
+    impr = improved_counts(cfg, tb_steps, avg_levels)
+    impr_alloc_touched = cfg.ncols_band * avg_levels * cfg.nwb
+    return {
+        "baseline_footprint_words": base.footprint_words,
+        "improved_footprint_words": impr.footprint_words,
+        "improved_touched_words": impr_alloc_touched,
+        "footprint_reduction_alloc": base.footprint_words / impr.footprint_words,
+        "footprint_reduction_touched": base.footprint_words / impr_alloc_touched,
+        "sene_only_reduction": base.footprint_words / sene.footprint_words,
+        "baseline_accesses": base.dc_writes + base.tb_reads,
+        "improved_accesses": impr.dc_writes + impr.tb_reads,
+        "access_reduction": (base.dc_writes + base.tb_reads)
+                            / max(1, impr.dc_writes + impr.tb_reads),
+        "vmem_bytes_per_problem": impr.footprint_words * 4,
+    }

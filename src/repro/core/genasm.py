@@ -1,0 +1,222 @@
+"""GenASM-DC (distance calculation) in JAX — baseline and improved variants.
+
+Semantics (exact, testable): after consuming j text chars, bit i of R_j[d]
+is 0  ⟺  Levenshtein(P[0..i], T[0..j-1]) <= d.  The recurrence is GenASM's
+(MICRO'20 Alg. 1) with exact first-column boundary bits carried as scalars:
+
+    M = (R_{j-1}[d]   << 1 | [j-1 >  d  ]) | PM[T[j-1]]
+    S = (R_{j-1}[d-1] << 1 | [j-1 >= d  ])
+    D =  R_{j-1}[d-1]
+    I = (R_j  [d-1]   << 1 | [j-1 >= d-1])
+    R_j[d] = M & S & D & I            (R_j[0] = M)
+
+Two fill orders are provided:
+  * ``dc_jmajor`` — text-major streaming fill (the unimproved GenASM order),
+    storing full bitvectors per (column, level): 'edges4' (all of M,S,D,I —
+    baseline GenASM-TB) or 'and' (SENE, paper idea 1).
+  * ``dc_dmajor`` — level-major fill with early termination (paper idea 2)
+    and DENT band storage (paper idea 3): only the traceback-reachable
+    diagonal band words of R are stored, for the reachable columns only.
+    Requires uniform square windows (m = n = W), the windowed long-read
+    path's steady state.
+
+Inputs are *reversed* windows (GenASM processes text right-to-left) so that
+the traceback emits operations front-first and can stop after W-O commits.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .bitops import WORD_BITS, build_pm, extract_window, get_bit, ones_below, shift1
+from .config import AlignerConfig
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("dist", "solved", "r_final", "store", "levels_run"),
+         meta_fields=())
+@dataclasses.dataclass
+class DCResult:
+    dist: jnp.ndarray          # (B,) int32; k+1 where no level solved
+    solved: jnp.ndarray        # (B,) bool
+    r_final: jnp.ndarray       # (B, k+1, NW) final column (full modes) or last col
+    store: dict                # storage for traceback, mode-dependent
+    levels_run: jnp.ndarray    # () int32: levels actually computed (ET)
+
+
+def _boundary_bits(j, d):
+    """Shift-in bits for column j, level d (see module docstring)."""
+    t = j - 1
+    bM = (t > d).astype(jnp.uint32)
+    bS = (t >= d).astype(jnp.uint32)
+    bI = (t >= d - 1).astype(jnp.uint32)
+    return bM, bS, bI
+
+
+def _lookup_pm(pm, codes_j):
+    """pm: (B, n_sym+1, NW); codes_j: (B,) — returns (B, NW).  Out-of-alphabet
+    (sentinel) text chars map to the all-ones mask (row n_sym)."""
+    n_sym = pm.shape[1] - 1
+    idx = jnp.clip(codes_j.astype(jnp.int32), 0, n_sym)
+    return jnp.take_along_axis(pm, idx[:, None, None], axis=1)[:, 0]
+
+
+def build_pm_ext(pat_codes, nw, n_symbols=4):
+    """PM with an extra all-ones row for sentinel text characters."""
+    pm = build_pm(pat_codes, nw, n_symbols)
+    ones = jnp.full(pm.shape[:-2] + (1, pm.shape[-1]), 0xFFFFFFFF, jnp.uint32)
+    return jnp.concatenate([pm, ones], axis=-2)
+
+
+def _dist_from_final(r_final, m_len, k):
+    """min d whose target bit (m_len-1) is 0, else k+1."""
+    bits = get_bit(r_final, jnp.asarray(m_len)[:, None] - 1)  # (B, k+1)
+    d_arange = jnp.arange(k + 1, dtype=jnp.int32)
+    cand = jnp.where(bits == 0, d_arange[None, :], k + 1)
+    dist = jnp.min(cand, axis=1).astype(jnp.int32)
+    return dist, dist <= k
+
+
+@partial(jax.jit, static_argnames=("k", "n", "store", "nw"))
+def dc_jmajor(pat_codes, text_codes, m_len, n_len, *, k: int, n: int,
+              nw: int, store: str = "and") -> DCResult:
+    """Text-major GenASM-DC with full-bitvector storage.
+
+    pat_codes: (B, <=m_pad) int; positions >= m_len hold sentinel 255.
+    text_codes: (B, n) int; positions >= n_len hold sentinel (>=n_symbols).
+    Returns storage with column axis leading: (n+1, B, k+1, NW[, 4]).
+    """
+    B = pat_codes.shape[0]
+    pm = build_pm_ext(pat_codes, nw)
+    d_ar = jnp.arange(k + 1, dtype=jnp.int32)
+    r0 = jnp.broadcast_to(ones_below(d_ar, nw), (B, k + 1, nw))
+
+    def step(r_prev, j):
+        cj = text_codes[:, j - 1]
+        pm_j = _lookup_pm(pm, cj)[:, None, :]                   # (B,1,NW)
+        bM, bS, bI = _boundary_bits(j, d_ar)                    # (k+1,)
+        # All-level match term (vectorized over d); the I term couples levels
+        # sequentially, resolved with an unrolled level pass below.
+        M = shift1(r_prev, bM[None, :, None]) | pm_j
+        S = shift1(r_prev[:, :-1], bS[None, 1:, None])
+        Dl = r_prev[:, :-1]
+        rows = [M[:, 0]]
+        full = jnp.full_like(rows[0], 0xFFFFFFFF)
+        Ms, Ss, Ds, Is = [M[:, 0]], [full], [full], [full]
+        for d in range(1, k + 1):
+            I = shift1(rows[d - 1], bI[d])
+            r_d = M[:, d] & S[:, d - 1] & Dl[:, d - 1] & I
+            rows.append(r_d)
+            if store == "edges4":
+                Ms.append(M[:, d]); Ss.append(S[:, d - 1])
+                Ds.append(Dl[:, d - 1]); Is.append(I)
+        r_new = jnp.stack(rows, axis=1)
+        # freeze columns beyond each problem's true text length
+        live = (j <= n_len)[:, None, None]
+        r_new = jnp.where(live, r_new, r_prev)
+        if store == "edges4":
+            edges = jnp.stack([jnp.stack(v, 1) for v in (Ms, Ss, Ds, Is)], -1)
+            ys = (r_new, jnp.where(live[..., None], edges,
+                                   jnp.full_like(edges, 0xFFFFFFFF)))
+        else:
+            ys = (r_new, None)
+        return r_new, ys
+
+    r_fin, (r_cols, edge_cols) = jax.lax.scan(step, r0, jnp.arange(1, n + 1))
+    r_cols = jnp.concatenate([r0[None], r_cols], axis=0)        # (n+1,B,k+1,NW)
+    dist, solved = _dist_from_final(r_fin, m_len, k)
+    st = {"R": r_cols}
+    if store == "edges4":
+        init_edges = jnp.full((1,) + edge_cols.shape[1:], 0xFFFFFFFF, jnp.uint32)
+        st["edges"] = jnp.concatenate([init_edges, edge_cols], axis=0)
+    return DCResult(dist, solved, r_fin, st, jnp.int32(k + 1))
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def dc_dmajor(pat_codes, text_codes, *, cfg: AlignerConfig) -> DCResult:
+    """Level-major improved GenASM-DC: ET + SENE + DENT band storage.
+
+    Uniform square windows: pat_codes (B, m_pad) with sentinel padding past W,
+    text_codes (B, W).  Whole-batch early termination: the level loop stops
+    as soon as every problem's solution is contained in the computed levels
+    (per-problem ET is accounted exactly by `levels_needed` = dist+1).
+    """
+    B = pat_codes.shape[0]
+    W, k, nw, nwb = cfg.W, cfg.k, cfg.nw, cfg.nwb
+    n = W
+    ncb = cfg.ncols_band
+    col0 = n + 1 - ncb
+    pm = build_pm_ext(pat_codes, nw)
+    tgt = jnp.int32(W - 1)
+
+    bases = jnp.array([cfg.band_base(j) for j in range(n + 1)], jnp.int32)
+
+    def fill_level(d, prev_row):
+        """Fill level d (traced, >= 1) given full prev row (n+1, B, NW)."""
+        def stepj(r_prev, j):
+            cj = text_codes[:, j - 1]
+            pm_j = _lookup_pm(pm, cj)
+            bM, bS, bI = _boundary_bits(j, d)
+            M = shift1(r_prev, bM) | pm_j
+            S = shift1(prev_row[j - 1], bS)
+            Dl = prev_row[j - 1]
+            I = shift1(prev_row[j], bI)
+            r = M & S & Dl & I
+            return r, r
+        r_init = ones_below(jnp.full((B,), d, jnp.int32), nw)
+        _, cols = jax.lax.scan(stepj, r_init, jnp.arange(1, n + 1))
+        return jnp.concatenate([r_init[None], cols], axis=0)   # (n+1, B, NW)
+
+    def extract_band(row):
+        # row: (n+1, B, NW) -> (ncb, B, NWB) band windows for stored columns
+        return extract_window(row[col0:], bases[col0:, None], nwb)
+
+    # --- level 0 (recurrence differs: R = M only) ---
+    def step0(r_prev, j):
+        pm_j = _lookup_pm(pm, text_codes[:, j - 1])
+        bM, _, _ = _boundary_bits(j, 0)
+        r = shift1(r_prev, bM) | pm_j
+        return r, r
+    r_init0 = ones_below(jnp.zeros((B,), jnp.int32), nw)
+    _, cols0 = jax.lax.scan(step0, r_init0, jnp.arange(1, n + 1))
+    row0 = jnp.concatenate([r_init0[None], cols0], axis=0)
+
+    band_buf = jnp.zeros((k + 1, ncb, B, nwb), jnp.uint32)
+    band_buf = band_buf.at[0].set(extract_band(row0))
+    dist = jnp.where(get_bit(row0[n], tgt) == 0, 0, k + 1).astype(jnp.int32)
+
+    # --- levels 1..k with (optional) whole-batch early termination ---
+    def level_body(state):
+        d, prev_row, band_buf, dist = state
+        row = fill_level(d, prev_row)
+        band_buf = band_buf.at[d].set(extract_band(row))
+        hit = get_bit(row[n], tgt) == 0
+        dist = jnp.where((dist > k) & hit, d, dist)
+        return d + 1, row, band_buf, dist
+
+    def level_cond(state):
+        d, _, _, dist = state
+        go = d <= k
+        if cfg.early_term:
+            go &= jnp.any(dist > k)
+        return go
+
+    d_end, _, band_buf, dist = jax.lax.while_loop(
+        level_cond, level_body, (jnp.int32(1), row0, band_buf, dist))
+
+    solved = dist <= k
+    store = {"Rb": band_buf}
+    r_fin = jnp.zeros((B, k + 1, nw), jnp.uint32)  # not used in band mode
+    return DCResult(dist, solved, r_fin, store, d_end)
+
+
+def dc(pat_codes, text_codes, m_len, n_len, cfg: AlignerConfig) -> DCResult:
+    """Dispatch: improved configs use the level-major banded fill when the
+    batch is uniform square (m_len = n_len = W); otherwise the full fill."""
+    if cfg.store == "band":
+        return dc_dmajor(pat_codes, text_codes, cfg=cfg)
+    return dc_jmajor(pat_codes, text_codes, m_len, n_len, k=cfg.k,
+                     n=text_codes.shape[1], nw=cfg.nw, store=cfg.store)

@@ -1,0 +1,189 @@
+"""GenASM-TB: batched traceback over the three storage modes.
+
+* 'edges4' (unimproved GenASM): reads the stored M/S/D/I edge bitvectors.
+* 'and'    (SENE): stores only R = M & S & D & I; edge availability is
+  *recomputed* from neighbouring stored R values + the pattern masks — the
+  paper's idea 1.
+* 'band'   (SENE+DENT): like 'and' but reads the stored sub-word band
+  windows; positions outside the band are provably unreachable (idea 3).
+
+All modes emit identical CIGARs (same =,X,D,I preference order); tests
+assert this equivalence, which is the correctness claim of the paper's
+compression ideas.
+
+The traceback runs forward over *reversed* windows, so operations come out
+front-first and the walk stops after ``commit_limit`` read chars — GenASM's
+windowing trick that bounds both the walk length and the reachable columns.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .bitops import WORD_BITS, get_bit
+from .config import AlignerConfig
+from .oracle import OP_DEL, OP_INS, OP_MATCH, OP_SUBST
+
+OP_NONE = 255
+
+
+def _zbit_full(r_bt, b_idx, d, j, i, k):
+    """bit i of stored R_j[d] == 0 (full-vector storage); i == -1 encodes the
+    DP's first column: ED(0, j) <= d  ⟺  j <= d.
+
+    r_bt: (B, C, K1, NW) — batch-leading, gathered with a vmapped dynamic
+    index so GSPMD keeps the lookup local to each batch shard (a flattened
+    (C*B*K1) gather forces a full all-gather of the store; §Perf)."""
+    B, C, K1, NW = r_bt.shape
+    jj = jnp.clip(j, 0, C - 1)
+    dd = jnp.clip(d, 0, K1 - 1)
+    words = jax.vmap(lambda rc, jx, dx: jax.lax.dynamic_index_in_dim(
+        jax.lax.dynamic_index_in_dim(rc, jx, 0, keepdims=False),
+        dx, 0, keepdims=False))(r_bt, jj, dd)
+    bit = get_bit(words, jnp.clip(i, 0, NW * WORD_BITS - 1))
+    return jnp.where(i < 0, j <= d, bit == 0)
+
+
+def _zbit_band(rb_bt, bases, col0, b_idx, d, j, i, k):
+    """bit i of the stored band window of column j, level d == 0.
+    rb_bt: (B, K1, CB, NWB) batch-leading (see _zbit_full note)."""
+    B, K1, CB, NWB = rb_bt.shape
+    s = jnp.clip(j - col0, 0, CB - 1)
+    dd = jnp.clip(d, 0, K1 - 1)
+    words = jax.vmap(lambda rc, dx, sx: jax.lax.dynamic_index_in_dim(
+        jax.lax.dynamic_index_in_dim(rc, dx, 0, keepdims=False),
+        sx, 0, keepdims=False))(rb_bt, dd, s)
+    off = i - bases[jnp.clip(j, 0, bases.shape[0] - 1)]
+    inband = (off >= 0) & (off < NWB * WORD_BITS)
+    bit = get_bit(words, jnp.clip(off, 0, NWB * WORD_BITS - 1))
+    return jnp.where(i < 0, j <= d, (bit == 0) & inband)
+
+
+def _ebit(edges_bt, b_idx, d, j, i, which):
+    """edges4 mode: stored edge bit (0=M,1=S,2=D,3=I) of column j, level d.
+    edges_bt: (B, C, K1, NW, 4) batch-leading."""
+    B, C, K1, NW, _ = edges_bt.shape
+    jj = jnp.clip(j, 0, C - 1)
+    dd = jnp.clip(d, 0, K1 - 1)
+    words = jax.vmap(lambda e, jx, dx: jax.lax.dynamic_index_in_dim(
+        jax.lax.dynamic_index_in_dim(e, jx, 0, keepdims=False),
+        dx, 0, keepdims=False))(edges_bt, jj, dd)[..., which]
+    return get_bit(words, jnp.clip(i, 0, NW * WORD_BITS - 1)) == 0
+
+
+@partial(jax.jit, static_argnames=("cfg", "mode", "max_ops", "max_steps"))
+def traceback(store, pat_codes, text_codes, m_len, n_len, dist, commit_limit,
+              *, cfg: AlignerConfig, mode: str, max_ops: int, max_steps: int):
+    """Walk the stored DP from the (m_len-1, n_len) corner.
+
+    Returns dict: ops (B, max_ops) uint8 front-first, n_ops, read_adv,
+    ref_adv, cost (edits spent on committed ops), ok (internal invariant).
+    Problems with dist > k are skipped (ok stays True, n_ops = 0).
+    """
+    B = pat_codes.shape[0]
+    k = cfg.k
+    b_idx = jnp.arange(B, dtype=jnp.int32)
+
+    if mode == "band":
+        rb_bt = jnp.transpose(store["Rb"], (2, 0, 1, 3))   # (B, K1, CB, NWB)
+        n = text_codes.shape[1]
+        col0 = n + 1 - cfg.ncols_band
+        bases = jnp.array([cfg.band_base(j, cfg.m_pad) for j in range(n + 1)],
+                          jnp.int32)
+        zbit = partial(_zbit_band, rb_bt, bases, col0, b_idx)
+    else:
+        r_bt = jnp.transpose(store["R"], (1, 0, 2, 3))     # (B, C, K1, NW)
+        zbit = partial(_zbit_full, r_bt, b_idx)
+
+    edges_bt = (jnp.transpose(store["edges"], (1, 0, 2, 3, 4))
+                if mode == "edges4" else None)
+
+    def avail(i, j, d):
+        """(mA, sA, dA, iA) edge availability at cell (i, j) level d."""
+        if mode == "edges4":
+            e = edges_bt
+            mA = (j > 0) & _ebit(e, b_idx, d, j, i, 0)
+            sA = (j > 0) & (d > 0) & _ebit(e, b_idx, d, j, i, 1)
+            dA = (j > 0) & (d > 0) & _ebit(e, b_idx, d, j, i, 2)
+            iA = (d > 0) & _ebit(e, b_idx, d, j, i, 3)
+        else:
+            pj = jnp.take_along_axis(
+                pat_codes, jnp.clip(i, 0, pat_codes.shape[1] - 1)[:, None],
+                axis=1)[:, 0]
+            tj = jnp.take_along_axis(
+                text_codes, jnp.clip(j - 1, 0, text_codes.shape[1] - 1)[:, None],
+                axis=1)[:, 0]
+            peq = pj == tj
+            mA = (j > 0) & peq & zbit(d, j - 1, i - 1, k)
+            sA = (j > 0) & (d > 0) & zbit(d - 1, j - 1, i - 1, k)
+            dA = (j > 0) & (d > 0) & zbit(d - 1, j - 1, i, k)
+            iA = (d > 0) & zbit(d - 1, j, i - 1, k)
+        return mA, sA, dA, iA
+
+    def body(state):
+        i, j, d, nops, ops, rd, rf, done, ok, steps = state
+        tail = i < 0
+        stopped = rd >= commit_limit
+        active = ~done & ~stopped
+
+        mA, sA, dA, iA = avail(i, j, d)
+        # tail: pattern exhausted, drain remaining text as deletions
+        tail_emit = tail & (j > 0)
+        mA &= ~tail; sA &= ~tail; dA &= ~tail; iA &= ~tail
+
+        any_edge = mA | sA | dA | iA | tail_emit
+        # exclusive choice with GenASM's =,X,D,I preference
+        cM = mA
+        cS = ~mA & sA
+        cD = ~mA & ~sA & dA
+        cI = ~mA & ~sA & ~dA & iA
+        op = jnp.where(cM, OP_MATCH,
+             jnp.where(cS, OP_SUBST,
+             jnp.where(cD, OP_DEL,
+             jnp.where(cI, OP_INS, OP_DEL))))  # tail_emit -> DEL
+
+        takes_read = active & (cM | cS | cI)
+        takes_ref = active & (cM | cS | cD | tail_emit)
+        costs = active & (cS | cD | cI | tail_emit)
+
+        new_i = jnp.where(takes_read, i - 1, i)
+        new_j = jnp.where(takes_ref, j - 1, j)
+        new_d = jnp.where(costs, d - 1, d)
+        new_rd = rd + takes_read
+        new_rf = rf + takes_ref
+
+        slot = jnp.where(active & any_edge, nops, max_ops)
+        ops = jax.vmap(lambda row, sx, ox: row.at[sx].set(ox, mode="drop"))(
+            ops, slot, op.astype(jnp.uint8))
+        nops = nops + (active & any_edge)
+
+        finished = (new_i < 0) & (new_j <= 0)
+        new_done = done | (active & finished)
+        # invariant: an active, unfinished cell always has an available edge
+        ok &= jnp.where(active & ~finished, any_edge | ((i < 0) & (j <= 0)), True)
+        return (new_i, new_j, new_d, nops, ops, new_rd, new_rf,
+                new_done | stopped, ok, steps + 1)
+
+    def cond(state):
+        *_, done, ok, steps = state
+        return jnp.any(~done) & (steps < max_steps)
+
+    skip = dist > k
+    init = (
+        jnp.asarray(m_len, jnp.int32) - 1,
+        jnp.asarray(n_len, jnp.int32),
+        jnp.asarray(dist, jnp.int32),
+        jnp.zeros((B,), jnp.int32),
+        jnp.full((B, max_ops), OP_NONE, jnp.uint8),
+        jnp.zeros((B,), jnp.int32),
+        jnp.zeros((B,), jnp.int32),
+        skip,
+        jnp.ones((B,), bool),
+        jnp.int32(0),
+    )
+    i, j, d, nops, ops, rd, rf, done, ok, _ = jax.lax.while_loop(cond, body, init)
+    cost = jnp.where(skip, 0, jnp.asarray(dist, jnp.int32) - d)
+    return {"ops": ops, "n_ops": nops, "read_adv": rd, "ref_adv": rf,
+            "cost": cost, "ok": ok, "d_final": d}

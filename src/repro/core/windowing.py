@@ -1,0 +1,146 @@
+"""Windowed long-read alignment (GenASM's W/O windowing, batched + jittable).
+
+A (read, candidate-ref-segment) pair is aligned as a sequence of W x W
+windows: DC+TB inside the window (on *reversed* window contents, so the
+traceback emits front-first ops), commit the first W-O read characters'
+worth of operations, advance read by exactly W-O and ref by the committed
+ref consumption, repeat.  The final <= W read chars are aligned in a single
+"tail" window against the remaining reference (end-to-end).
+
+All problems advance in lockstep (read stride is uniform); problems whose
+window edit distance exceeds k are flagged `failed` (callers may rescue by
+re-running those pairs with a larger k, see core.aligner).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .config import AlignerConfig
+from .genasm import dc_dmajor, dc_jmajor
+from .traceback import OP_NONE, traceback
+
+SENTINEL_READ = 255   # never matches (out of PM alphabet)
+SENTINEL_REF = 9      # maps to the all-ones PM row
+
+
+def n_main_windows(max_read_len: int, cfg: AlignerConfig) -> int:
+    """Windows before every problem's remaining read length is <= W."""
+    return max(0, -(-(max_read_len - cfg.W) // cfg.stride))
+
+
+def total_op_budget(max_read_len: int, cfg: AlignerConfig) -> int:
+    nm = n_main_windows(max_read_len, cfg)
+    return nm * (cfg.stride + cfg.k) + cfg.W + self_tail_width(cfg)
+
+
+def self_tail_width(cfg: AlignerConfig) -> int:
+    return cfg.W + 4 * cfg.k
+
+
+def _slice_rev(seq, pos, width, length):
+    """Per-problem: take seq[pos:pos+width], reversed, with the `length` real
+    chars packed at the front (sentinel padding after).  seq must be padded
+    with >= width sentinels at the end."""
+    def one(s, p, ln):
+        w = jax.lax.dynamic_slice(s, (p,), (width,))
+        rev = w[::-1]
+        idx = (jnp.arange(width) + (width - ln)) % width
+        return rev[idx]
+    return jax.vmap(one)(seq, pos, length)
+
+
+def _append_ops(buf, off, ops, nops, active):
+    """Scatter window ops into the per-problem op buffer at offset `off`
+    (vmapped per row: keeps the scatter local to each batch shard)."""
+    B, max_w = ops.shape
+    pos = off[:, None] + jnp.arange(max_w, dtype=jnp.int32)[None, :]
+    valid = (jnp.arange(max_w)[None, :] < nops[:, None]) & active[:, None]
+    pos = jnp.where(valid, pos, buf.shape[1])  # OOB -> dropped
+    return jax.vmap(lambda row, px, ox: row.at[px].set(ox, mode="drop"))(
+        buf, pos, ops)
+
+
+@partial(jax.jit, static_argnames=("cfg", "max_read_len"))
+def align_pairs(reads, read_len, refs, ref_len, *, cfg: AlignerConfig,
+                max_read_len: int):
+    """Batched windowed alignment.
+
+    reads: (B, Lr_pad) uint8 codes, sentinel-padded by >= W past read_len.
+    refs:  (B, Lf_pad) uint8 codes, sentinel-padded by >= W+4k past ref_len.
+    Returns dict with front-first op buffer, n_ops, dist, failed, read/ref
+    consumption, and window ET stats.
+    """
+    B = reads.shape[0]
+    W, O, k, stride = cfg.W, cfg.O, cfg.k, cfg.stride
+    nm = n_main_windows(max_read_len, cfg)
+    wt = self_tail_width(cfg)
+    op_budget = total_op_budget(max_read_len, cfg)
+    max_ops_w = stride + k + 2
+    max_steps_w = stride + k + 4
+    max_ops_t = W + wt
+    max_steps_t = W + wt + 4
+
+    read_len = jnp.asarray(read_len, jnp.int32)
+    ref_len = jnp.asarray(ref_len, jnp.int32)
+
+    def append_main(carry, _):
+        (read_pos, ref_pos, off, dist, failed, levels), buf = carry
+        active = (read_len - read_pos > W) & ~failed
+        wfull = jnp.full((B,), W, jnp.int32)
+        pat = _slice_rev(reads, read_pos, W, wfull)
+        txt = _slice_rev(refs, ref_pos, W, wfull)
+        if cfg.store == "band":
+            res = dc_dmajor(pat, txt, cfg=cfg)
+        else:  # unimproved GenASM ('edges4') / SENE-only ('and') baselines
+            res = dc_jmajor(pat, txt, wfull, wfull, k=k, n=W, nw=cfg.nw,
+                            store=cfg.store)
+        tb = traceback(res.store, pat, txt, wfull, wfull,
+                       res.dist, jnp.int32(stride), cfg=cfg, mode=cfg.store,
+                       max_ops=max_ops_w, max_steps=max_steps_w)
+        commit = active & res.solved
+        buf = _append_ops(buf, off, tb["ops"], jnp.where(commit, tb["n_ops"], 0),
+                          commit)
+        st = (
+            jnp.where(commit, read_pos + tb["read_adv"], read_pos),
+            jnp.where(commit, ref_pos + tb["ref_adv"], ref_pos),
+            jnp.where(commit, off + tb["n_ops"], off),
+            jnp.where(commit, dist + tb["cost"], dist),
+            failed | (active & ~res.solved),
+            levels + res.levels_run,
+        )
+        return (st, buf), None
+
+    buf = jnp.full((B, op_budget), OP_NONE, jnp.uint8)
+    state = (jnp.zeros((B,), jnp.int32), jnp.zeros((B,), jnp.int32),
+             jnp.zeros((B,), jnp.int32), jnp.zeros((B,), jnp.int32),
+             jnp.zeros((B,), bool), jnp.int32(0))
+    (state, buf), _ = jax.lax.scan(append_main, (state, buf), None, length=nm)
+    read_pos, ref_pos, off, dist, failed, levels = state
+
+    # ---- tail window: remaining read (in (O, W]) vs remaining ref, global ----
+    m_tail = jnp.clip(read_len - read_pos, 0, W)
+    n_rem = ref_len - ref_pos
+    n_tail = jnp.clip(n_rem, 0, wt)
+    tail_bad = (n_rem > wt) | (n_rem < jnp.maximum(m_tail - 2 * k, 0))
+    pat_t = _slice_rev(reads, read_pos, W, m_tail)
+    txt_t = _slice_rev(refs, ref_pos, wt, n_tail)
+    res_t = dc_jmajor(pat_t, txt_t, m_tail, n_tail, k=k, n=wt, nw=cfg.nw,
+                      store="and")
+    tb_t = traceback(res_t.store, pat_t, txt_t, m_tail, n_tail, res_t.dist,
+                     jnp.int32(2 * (W + wt)), cfg=cfg, mode="and",
+                     max_ops=max_ops_t, max_steps=max_steps_t)
+    t_ok = ~failed & ~tail_bad & res_t.solved
+    buf = _append_ops(buf, off, tb_t["ops"], jnp.where(t_ok, tb_t["n_ops"], 0),
+                      t_ok)
+    n_ops = jnp.where(t_ok, off + tb_t["n_ops"], off)
+    dist = jnp.where(t_ok, dist + tb_t["cost"], dist)
+    failed = failed | tail_bad | ~res_t.solved
+    read_end = jnp.where(t_ok, read_pos + tb_t["read_adv"], read_pos)
+    ref_end = jnp.where(t_ok, ref_pos + tb_t["ref_adv"], ref_pos)
+
+    return {"ops": buf, "n_ops": n_ops, "dist": dist, "failed": failed,
+            "read_consumed": read_end, "ref_consumed": ref_end,
+            "levels_run_total": levels, "n_main_windows": jnp.int32(nm)}

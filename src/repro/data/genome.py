@@ -1,0 +1,97 @@
+"""Synthetic genome + PBSIM2-like long-read simulator + candidate chains.
+
+The container is offline, so the paper's dataset (PBSIM2 reads from the
+human genome, minimap2 chains) is mirrored statistically: a seeded random
+genome, reads sampled with a PacBio CLR-like edit profile (default 10%
+errors split ~40/35/25 sub/ins/del), and candidate locations = the true
+locus (span from the simulator) plus optional decoy loci.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ReadSimConfig:
+    read_len: int = 10_000
+    error_rate: float = 0.10
+    sub_frac: float = 0.40
+    ins_frac: float = 0.35
+    del_frac: float = 0.25
+    seed: int = 0
+
+
+def synth_genome(length: int, seed: int = 0) -> np.ndarray:
+    return np.random.default_rng(seed).integers(0, 4, length).astype(np.uint8)
+
+
+def mutate(ref: np.ndarray, cfg: ReadSimConfig, rng) -> tuple[np.ndarray, int]:
+    """Emit a read by walking `ref` with the error profile.  Returns
+    (read[:read_len], ref_span_consumed)."""
+    p_err = cfg.error_rate
+    tot = cfg.sub_frac + cfg.ins_frac + cfg.del_frac
+    p_sub = p_err * cfg.sub_frac / tot
+    p_ins = p_err * cfg.ins_frac / tot
+    p_del = p_err * cfg.del_frac / tot
+    L = cfg.read_len
+    # vectorized draw with slack, then fix up lengths
+    n = int(L * (1 + p_err) + 64)
+    r = rng.random(n)
+    out = []
+    i = 0  # ref cursor
+    for x in r:
+        if len(out) >= L or i >= len(ref):
+            break
+        if x < p_del:
+            i += 1
+        elif x < p_del + p_ins:
+            out.append(rng.integers(0, 4))
+        elif x < p_del + p_ins + p_sub:
+            c = ref[i]
+            out.append((c + 1 + rng.integers(0, 3)) % 4)
+            i += 1
+        else:
+            out.append(ref[i])
+            i += 1
+    read = np.array(out[:L], dtype=np.uint8)
+    return read, i
+
+
+@dataclasses.dataclass
+class ReadSet:
+    reads: list[np.ndarray]
+    ref_segments: list[np.ndarray]   # true-locus candidate segments
+    true_pos: np.ndarray
+    spans: np.ndarray
+
+
+def simulate_reads(genome: np.ndarray, n_reads: int,
+                   cfg: ReadSimConfig = ReadSimConfig()) -> ReadSet:
+    rng = np.random.default_rng(cfg.seed + 1)
+    max_span = int(cfg.read_len * 1.3) + 64
+    reads, segs, pos, spans = [], [], [], []
+    for _ in range(n_reads):
+        p = int(rng.integers(0, len(genome) - max_span))
+        read, span = mutate(genome[p:p + max_span], cfg, rng)
+        reads.append(read)
+        segs.append(genome[p:p + span].copy())
+        pos.append(p)
+        spans.append(span)
+    return ReadSet(reads, segs, np.array(pos), np.array(spans))
+
+
+def candidate_chains(genome: np.ndarray, rs: ReadSet, decoys_per_read: int = 0,
+                     seed: int = 7) -> list[tuple[int, np.ndarray]]:
+    """minimap2 `-P`-like candidate list: for each read, the true-locus
+    segment plus `decoys_per_read` random loci (which should fail to align).
+    Returns list of (read_index, ref_segment)."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for i, seg in enumerate(rs.ref_segments):
+        out.append((i, seg))
+        for _ in range(decoys_per_read):
+            p = int(rng.integers(0, len(genome) - len(seg)))
+            out.append((i, genome[p:p + len(seg)].copy()))
+    return out

@@ -1,0 +1,47 @@
+"""Logical activation-sharding constraints, mesh-shape agnostic.
+
+Model code calls constrain(x, 'batch', None, 'model') with logical dims;
+the helper resolves them against whatever mesh the enclosing jit runs
+under ('batch' -> ('pod','data') when a pod axis exists), skips axes that
+don't divide, and is a no-op outside a mesh context (CPU unit tests)."""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def _mesh():
+    try:
+        m = jax.sharding.get_abstract_mesh()
+    except Exception:
+        return None
+    if m is None or not m.axis_names:
+        return None
+    return m
+
+
+def constrain(x, *dims):
+    mesh = _mesh()
+    if mesh is None:
+        return x
+    names = set(mesh.axis_names)
+    sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+
+    def resolve(d, dim_size):
+        if d == "batch":
+            axes = tuple(a for a in ("pod", "data") if a in names)
+        elif d is None:
+            return None
+        else:
+            axes = (d,) if d in names else ()
+        if not axes:
+            return None
+        n = 1
+        for a in axes:
+            n *= sizes[a]
+        if dim_size % n != 0:
+            return None
+        return axes if len(axes) > 1 else axes[0]
+
+    spec = P(*[resolve(d, s) for d, s in zip(dims, x.shape)])
+    return jax.lax.with_sharding_constraint(x, spec)

@@ -1,0 +1,212 @@
+"""Pallas TPU kernel: improved GenASM-DC (SENE + DENT + ET).
+
+TPU mapping (see DESIGN.md §2): one VPU *lane* per alignment problem — the
+innermost axis of every array is the problem tile (TB, a multiple of 128).
+Bitvector words live in small leading axes and are unrolled; all DP state
+is VMEM scratch, which is the paper's point: after the three improvements
+the entire traceback table fits on-chip (`vmem_bytes` below).
+
+Grid: one program per problem tile.  Per tile:
+  * level-0 row filled with a fori_loop over the W text columns,
+  * levels 1..k under a while_loop with whole-tile early termination,
+  * per column, the DENT band window (funnel-shift extracted, sub-word) is
+    stored for the traceback-reachable columns only.
+
+The pure-jnp oracle is kernels/ref.py (which defers to core.genasm); the
+jit'd wrapper with layout marshalling is kernels/ops.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..core.config import AlignerConfig
+
+WORD = 32
+
+
+def _band_base(j, k, m_pad, nwb):
+    lo = j - 2 - k
+    hi = m_pad - WORD * nwb
+    return jnp.clip(lo, 0, hi)
+
+
+def vmem_bytes(cfg: AlignerConfig, tile: int) -> int:
+    """On-chip working set per problem tile (the paper's 'fits in on-chip
+    memory' claim, checked against ~16MB VMEM in tests)."""
+    rows = 2 * (cfg.W + 1) * cfg.nw * tile * 4
+    band = (cfg.k + 1) * cfg.ncols_band * cfg.nwb * tile * 4
+    io = (5 * cfg.nw + cfg.W + 2) * tile * 4
+    return rows + band + io
+
+
+def _kernel(pm_ref, text_ref, band_ref, dist_ref, lvl_ref, rows_ref, *,
+            cfg: AlignerConfig):
+    W, k, nw, nwb = cfg.W, cfg.k, cfg.nw, cfg.nwb
+    m_pad = cfg.m_pad
+    ncb = cfg.ncols_band
+    col0 = W + 1 - ncb
+    tgt_w, tgt_o = (W - 1) // WORD, jnp.uint32((W - 1) % WORD)
+    n_sym = 4
+
+    def pm_lookup(cj):
+        """cj: (TB,) int32 -> (nw, TB) mask words (sentinel -> all ones)."""
+        out = []
+        for w in range(nw):
+            acc = jnp.full(cj.shape, 0xFFFFFFFF, jnp.uint32)
+            for c in range(n_sym):
+                acc = jnp.where(cj == c, pm_ref[c, w, :], acc)
+            out.append(acc)
+        return out
+
+    def shift1_words(words, carry_in):
+        """words: list of (TB,) uint32, LSW first."""
+        out = []
+        carry = carry_in
+        for w in range(nw):
+            out.append((words[w] << jnp.uint32(1)) | carry)
+            carry = words[w] >> jnp.uint32(WORD - 1)
+        return out
+
+    def ones_below(d):
+        """(nw, TB) init vector ~0 << d for traced scalar d."""
+        out = []
+        for w in range(nw):
+            lo = jnp.clip(d - w * WORD, 0, WORD)
+            val = jnp.where(lo >= WORD, jnp.uint32(0),
+                            jnp.uint32(0xFFFFFFFF) << lo.astype(jnp.uint32))
+            out.append(jnp.broadcast_to(val, text_ref.shape[1:]))
+        return out
+
+    def store_band(d, j, words):
+        """Funnel-shift extract the band window of column j and store it."""
+        base = _band_base(j, k, m_pad, nwb)
+        w0 = base // WORD
+        s = (base % WORD).astype(jnp.uint32)
+        for b in range(nwb):
+            lo = words[0]
+            hi = words[0]
+            for w in range(nw):          # dynamic word select, unrolled
+                lo = jnp.where(w0 + b == w, words[w], lo)
+                hi = jnp.where(w0 + b + 1 == w, words[w],
+                               jnp.where(w0 + b + 1 >= nw, jnp.uint32(0xFFFFFFFF),
+                                         hi))
+            win = jnp.where(s == 0, lo, (lo >> s) | (hi << (jnp.uint32(WORD) - s)))
+            @pl.when(j >= col0)
+            def _():
+                band_ref[d, j - col0, b, :] = win
+
+    def row_get(parity, j):
+        return [rows_ref[parity, j, w, :] for w in range(nw)]
+
+    def row_set(parity, j, words):
+        for w in range(nw):
+            rows_ref[parity, j, w, :] = words[w]
+
+    # ---------------- level 0 ----------------
+    r0 = ones_below(jnp.int32(0))
+    row_set(0, 0, r0)
+    store_band(0, 0, r0)
+
+    def col_body0(j, _):
+        prev = row_get(0, j - 1)
+        cj = text_ref[j - 1, :].astype(jnp.int32)
+        pm_j = pm_lookup(cj)
+        bM = ((j - 1) > 0).astype(jnp.uint32)
+        r = [a | b for a, b in zip(shift1_words(prev, bM), pm_j)]
+        row_set(0, j, r)
+        store_band(0, j, r)
+        return 0
+
+    jax.lax.fori_loop(1, W + 1, col_body0, 0)
+    last0 = row_get(0, W)
+    hit0 = ((last0[tgt_w] >> tgt_o) & jnp.uint32(1)) == 0
+    dist0 = jnp.where(hit0, 0, k + 1).astype(jnp.int32)
+
+    # ---------------- levels 1..k with early termination ----------------
+    def fill_level(d):
+        parity, prev_par = d % 2, (d - 1) % 2
+        rinit = ones_below(d)
+        row_set(parity, 0, rinit)
+        store_band(d, 0, rinit)
+
+        def col_body(j, _):
+            r_prev = row_get(parity, j - 1)        # R_{j-1}[d]
+            p_jm1 = row_get(prev_par, j - 1)       # R_{j-1}[d-1]
+            p_j = row_get(prev_par, j)             # R_j[d-1]
+            cj = text_ref[j - 1, :].astype(jnp.int32)
+            pm_j = pm_lookup(cj)
+            t = j - 1
+            bM = (t > d).astype(jnp.uint32)
+            bS = (t >= d).astype(jnp.uint32)
+            bI = (t >= d - 1).astype(jnp.uint32)
+            M = [a | b for a, b in zip(shift1_words(r_prev, bM), pm_j)]
+            S = shift1_words(p_jm1, bS)
+            I = shift1_words(p_j, bI)
+            r = [M[w] & S[w] & p_jm1[w] & I[w] for w in range(nw)]
+            row_set(parity, j, r)
+            store_band(d, j, r)
+            return 0
+
+        jax.lax.fori_loop(1, W + 1, col_body, 0)
+        last = row_get(parity, W)
+        return ((last[tgt_w] >> tgt_o) & jnp.uint32(1)) == 0
+
+    # NOTE: `dist` rides in the while carry (a cond reading a mutated VMEM
+    # ref would observe it one iteration late).
+    def lvl_cond(state):
+        d, dist = state
+        go = d <= k
+        if cfg.early_term:
+            go &= jnp.any(dist > k)
+        return go
+
+    def lvl_body(state):
+        d, dist = state
+        hit = fill_level(d)
+        dist = jnp.where((dist > k) & hit, d, dist).astype(jnp.int32)
+        return d + 1, dist
+
+    d_end, dist = jax.lax.while_loop(lvl_cond, lvl_body, (jnp.int32(1), dist0))
+    dist_ref[0, :] = dist
+    lvl_ref[0, :] = jnp.broadcast_to(d_end, lvl_ref.shape[1:]).astype(jnp.int32)
+
+
+def genasm_dc_pallas(pm, text, *, cfg: AlignerConfig, tile: int = 128,
+                     interpret: bool = True):
+    """pm: (5, NW, B) uint32; text: (W, B) int32 (kernel layout, problems
+    innermost).  Returns (dist (B,), band (k+1, ncb, nwb, B), levels (B,))."""
+    _, nw, B = pm.shape
+    W = text.shape[0]
+    assert W == cfg.W and nw == cfg.nw and B % tile == 0
+    ncb, nwb, k = cfg.ncols_band, cfg.nwb, cfg.k
+    grid = (B // tile,)
+    kern = functools.partial(_kernel, cfg=cfg)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((5, nw, tile), lambda i: (0, 0, i)),
+            pl.BlockSpec((W, tile), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((k + 1, ncb, nwb, tile), lambda i: (0, 0, 0, i)),
+            pl.BlockSpec((1, tile), lambda i: (0, i)),
+            pl.BlockSpec((1, tile), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k + 1, ncb, nwb, B), jnp.uint32),
+            jax.ShapeDtypeStruct((1, B), jnp.int32),
+            jax.ShapeDtypeStruct((1, B), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((2, W + 1, nw, tile), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(pm, text)
+    band, dist, lvl = out
+    return dist[0], band, lvl[0]

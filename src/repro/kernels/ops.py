@@ -1,0 +1,39 @@
+"""jit'd wrappers for the Pallas kernels (layout marshalling + dispatch).
+
+On this CPU container the kernels execute in interpret mode; on a real TPU
+pass interpret=False (the BlockSpecs/VMEM scratch are TPU-shaped).  The
+``backend`` knob in AlignerConfig selects jnp (core) vs pallas paths.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..core.config import AlignerConfig
+from ..core.genasm import build_pm_ext
+from .genasm_dc import genasm_dc_pallas
+
+
+@partial(jax.jit, static_argnames=("cfg", "tile", "interpret"))
+def genasm_dc_op(pat_codes, text_codes, *, cfg: AlignerConfig, tile: int = 128,
+                 interpret: bool = True):
+    """Standard layout in, standard layout out.
+
+    pat_codes/text_codes: (B, W).  Returns DCResult-like tuple
+    (dist (B,), band (k+1, ncb, B, nwb), levels ()) — same as core.dc_dmajor
+    store layout, so core.traceback consumes it unchanged.
+    """
+    B = pat_codes.shape[0]
+    pad = (-B) % tile
+    if pad:
+        pat_codes = jnp.pad(pat_codes, ((0, pad), (0, 0)), constant_values=255)
+        text_codes = jnp.pad(text_codes, ((0, pad), (0, 0)), constant_values=9)
+    pm = build_pm_ext(pat_codes, cfg.nw)                  # (B', 5, NW)
+    pm_k = jnp.transpose(pm, (1, 2, 0))                   # (5, NW, B')
+    text_k = jnp.transpose(text_codes.astype(jnp.int32), (1, 0))
+    dist, band, lvl = genasm_dc_pallas(pm_k, text_k, cfg=cfg, tile=tile,
+                                       interpret=interpret)
+    band = jnp.transpose(band, (0, 1, 3, 2))              # (K1, ncb, B', nwb)
+    return dist[:B], band[:, :, :B, :], jnp.max(lvl)

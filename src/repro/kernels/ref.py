@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the Pallas GenASM-DC kernel.
+
+Defers to core.genasm.dc_dmajor (itself validated against the classic
+Levenshtein DP in tests) and reshapes to the kernel's output layout.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..core.config import AlignerConfig
+from ..core.genasm import dc_dmajor
+
+
+def genasm_dc_ref(pat_codes, text_codes, *, cfg: AlignerConfig):
+    """pat/text: (B, W) standard layout.  Returns (dist (B,),
+    band (k+1, ncb, nwb, B), levels ()) matching kernels.genasm_dc."""
+    res = dc_dmajor(pat_codes, text_codes, cfg=cfg)
+    band = jnp.transpose(res.store["Rb"], (0, 1, 3, 2))  # (K1, ncb, nwb, B)
+    return res.dist, band, res.levels_run

@@ -1,0 +1,305 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape)
+cell on the production meshes, prove memory fits, and extract roofline
+terms.  (The two lines above MUST precede any jax import: jax locks the
+device count on first init.)
+
+Protocol per cell (see DESIGN.md 'Dry-run roofline protocol'):
+  1. full-depth compile (scan-over-layers) -> memory_analysis + collective
+     schedule; run on the single-pod (16,16) AND multi-pod (2,16,16) mesh.
+  2. two *unrolled* shallow compiles (L = unit, 2*unit) -> exact per-layer
+     FLOPs/bytes/collective-bytes by linear extrapolation (scan bodies are
+     cost-counted once regardless of trip count, verified; unrolling makes
+     depth visible to cost_analysis).
+
+Results cache to experiments/dryrun/<cell>.json (resumable); run cells in
+subprocesses to bound memory:  python -m repro.launch.dryrun --arch all
+"""
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..analysis.hlo import collective_bytes
+from ..analysis.roofline import (ICI_BW, model_flops, roofline_terms,
+                                 useful_fraction)
+from ..models.registry import (ARCH_IDS, SHAPES, get_config, get_model,
+                               input_specs, shape_applicable)
+from ..optim.adamw import AdamWConfig
+from ..train.step import abstract_state, make_train_step, state_partition_specs
+from .mesh import make_production_mesh
+
+OUT_DIR = pathlib.Path("experiments/dryrun")
+
+
+def _axis_size(mesh, axes):
+    n = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        if a not in mesh.shape:
+            return 0          # axis absent from this mesh -> can't shard
+        n *= mesh.shape[a]
+    return n
+
+
+def fit_pspec(shape, spec, mesh):
+    """Drop partition axes that don't divide the dimension (e.g. batch=1)."""
+    out = []
+    for i, dim in enumerate(shape):
+        ax = spec[i] if i < len(spec) else None
+        if ax is None:
+            out.append(None)
+            continue
+        sz = _axis_size(mesh, ax)
+        if sz and dim % sz == 0:
+            out.append(ax)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def _zero_over_pod(sp, mesh):
+    """ZeRO the parameter/optimizer shards across pods too: the logical
+    'data' axis in param specs widens to ('pod','data') on multi-pod meshes
+    (§Perf iteration 7 — otherwise every pod replicates the fp32 state)."""
+    if "pod" not in mesh.axis_names:
+        return sp
+    return tuple(("pod", "data") if a == "data" else a for a in sp)
+
+
+def tree_shardings(sds_tree, spec_tree, mesh, zero_pod: bool = False):
+    def one(s, sp):
+        sp = tuple(sp)
+        if zero_pod:
+            sp = _zero_over_pod(sp, mesh)
+        return NamedSharding(mesh, fit_pspec(s.shape, sp, mesh))
+    return jax.tree_util.tree_map(one, sds_tree, spec_tree)
+
+
+def batch_pspec(sds, mesh):
+    """Shard the leading batch dim over (pod,)data; positions (3,B,S) on
+    dim 1; scalars replicated."""
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    shape = sds.shape
+    if len(shape) == 0:
+        return P()
+    if len(shape) == 3 and shape[0] == 3:   # M-RoPE positions
+        return fit_pspec(shape, (None, dp, None), mesh)
+    return fit_pspec(shape, (dp,) + (None,) * (len(shape) - 1), mesh)
+
+
+def cache_pspecs(cache_sds, mesh):
+    """KV caches shard batch over data and *sequence over model* (works for
+    any kv-head count incl. GQA with few heads); SSM/conv/xlstm states shard
+    batch and the largest inner dim where divisible."""
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+    def one(path, s):
+        keys = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+        shape = s.shape
+        if "kv" in keys:           # (L/A, B, S, KV, Dh)
+            return fit_pspec(shape, (None, dp, "model", None, None), mesh)
+        if "ssm" in keys:          # (L, B, H, N, P)
+            return fit_pspec(shape, (None, dp, "model", None, None), mesh)
+        if "conv" in keys:         # (L, B, dconv-1, ch)
+            return fit_pspec(shape, (None, dp, None, "model"), mesh)
+        if "states" in keys:       # xlstm per-layer states, B leading
+            return fit_pspec(shape, (dp,) + (None,) * (len(shape) - 1), mesh)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(one, cache_sds)
+
+
+def depth_unit(cfg):
+    return max(cfg.local_global_every, cfg.shared_attn_every,
+               cfg.slstm_every, 1)
+
+
+def lower_cell(arch: str, shape: str, mesh, *, n_layers=None,
+               scan_layers=True):
+    """Build and lower the cell's step.  Returns (lowered, cfg, meta)."""
+    cfg = get_config(arch)
+    if n_layers is not None:
+        cfg = dataclasses.replace(cfg, n_layers=n_layers)
+    cfg = dataclasses.replace(cfg, scan_layers=scan_layers)
+    model = get_model(cfg)
+    S, GB, kind = SHAPES[shape]
+    specs = input_specs(cfg, shape)
+    batch_sds = specs["batch"]
+    batch_sh = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, batch_pspec(s, mesh)), batch_sds)
+
+    with jax.set_mesh(mesh):
+        if kind == "train":
+            step = make_train_step(model, AdamWConfig())
+            state_sds = abstract_state(model)
+            st_sh = tree_shardings(state_sds, state_partition_specs(model),
+                                   mesh, zero_pod=True)
+            # donate the train state: params/opt buffers update in place
+            fn = jax.jit(step, in_shardings=(st_sh, batch_sh),
+                         out_shardings=(st_sh, None), donate_argnums=(0,))
+            lowered = fn.lower(state_sds, batch_sds)
+        elif kind == "prefill":
+            # serve with bf16 weights (fp32 masters live in the trainer);
+            # halves the per-token parameter-read bytes (§Perf iteration 6)
+            p_sds = model.abstract_params(jnp.bfloat16)
+            p_sh = tree_shardings(p_sds, model.partition_specs(), mesh,
+                                  zero_pod=True)
+            fn = jax.jit(lambda p, b: model.prefill(p, b),
+                         in_shardings=(p_sh, batch_sh))
+            lowered = fn.lower(p_sds, batch_sds)
+        else:
+            p_sds = model.abstract_params(jnp.bfloat16)
+            p_sh = tree_shardings(p_sds, model.partition_specs(), mesh,
+                                  zero_pod=True)
+            cache_sds = specs["cache"]
+            c_sh = jax.tree_util.tree_map(
+                lambda s, sp: NamedSharding(mesh, sp), cache_sds,
+                cache_pspecs(cache_sds, mesh))
+            # donate the KV/SSM cache: decode appends in place (without
+            # donation every step round-trips the full multi-GB cache)
+            fn = jax.jit(lambda p, b, c: model.decode_step(p, b, c),
+                         in_shardings=(p_sh, batch_sh, c_sh),
+                         out_shardings=(None, c_sh), donate_argnums=(2,))
+            lowered = fn.lower(p_sds, batch_sds, cache_sds)
+    return lowered, cfg, {"seq": S, "batch": GB, "kind": kind}
+
+
+def _cost(compiled):
+    ca = compiled.cost_analysis()
+    return {"flops": float(ca.get("flops", 0.0) or 0.0),
+            "bytes": float(ca.get("bytes accessed", 0.0) or 0.0)}
+
+
+def _active_params(model, cfg):
+    from ..analysis.roofline import count_params
+    sds = model.abstract_params()
+    total = count_params(sds)
+    if cfg.n_experts:
+        moe_keys = sds["layers"].get("moe", {})
+        expert_params = sum(int(v.size) for k, v in moe_keys.items()
+                            if k != "router")
+        total = total - int(expert_params * (1 - cfg.top_k / cfg.n_experts))
+    return total
+
+
+def run_cell(arch: str, shape: str, out_dir: pathlib.Path = OUT_DIR,
+             skip_multipod: bool = False) -> dict:
+    cfg0 = get_config(arch)
+    if not shape_applicable(cfg0, shape):
+        return {"arch": arch, "shape": shape, "skipped":
+                "long_500k requires sub-quadratic mixing (DESIGN.md §4)"}
+    rec = {"arch": arch, "shape": shape}
+    S, GB, kind = SHAPES[shape]
+    chips = 256
+
+    # ---- 1. full-depth compiles: single-pod (+ multi-pod pass) ----
+    for mp in ([False] if skip_multipod else [False, True]):
+        mesh = make_production_mesh(multi_pod=mp)
+        t0 = time.time()
+        lowered, cfg, meta = lower_cell(arch, shape, mesh)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        ma = compiled.memory_analysis()
+        mem = {"argument_bytes": int(ma.argument_size_in_bytes),
+               "output_bytes": int(ma.output_size_in_bytes),
+               "temp_bytes": int(ma.temp_size_in_bytes),
+               "generated_code_bytes": int(ma.generated_code_size_in_bytes)}
+        colls = collective_bytes(compiled.as_text())
+        key = "multipod" if mp else "singlepod"
+        rec[key] = {"mesh": list(mesh.shape.values()),
+                    "lower_s": round(t1 - t0, 2),
+                    "compile_s": round(t2 - t1, 2),
+                    "memory": mem, "collectives_schedule": colls,
+                    "cost_per_device": _cost(compiled)}
+        del compiled, lowered
+
+    # ---- 2. two-point unrolled cost compiles (single-pod) ----
+    mesh = make_production_mesh(multi_pod=False)
+    unit = depth_unit(cfg0)
+    costs = {}
+    for mult in (1, 2):
+        L = unit * mult
+        lowered, cfg, _ = lower_cell(arch, shape, mesh, n_layers=L,
+                                     scan_layers=False)
+        compiled = lowered.compile()
+        costs[mult] = {**_cost(compiled),
+                       "colls": collective_bytes(compiled.as_text())}
+        del compiled, lowered
+
+    Lf = cfg0.n_layers
+    def extrap(f1, f2):
+        per_unit = (f2 - f1)
+        return f1 + per_unit * (Lf - unit) / unit
+
+    flops_dev = extrap(costs[1]["flops"], costs[2]["flops"])
+    bytes_dev = extrap(costs[1]["bytes"], costs[2]["bytes"])
+    coll_dev = extrap(costs[1]["colls"]["total_wire_bytes"],
+                      costs[2]["colls"]["total_wire_bytes"])
+    flops_global = flops_dev * chips
+    bytes_global = bytes_dev * chips
+
+    model = get_model(cfg0)
+    n_active = _active_params(model, cfg0)
+    tokens = GB * S if kind == "train" else (GB * S if kind == "prefill" else GB)
+    mfl = model_flops(n_active, tokens, kind == "train")
+    terms = roofline_terms(flops_global, bytes_global, coll_dev, chips)
+    rec["roofline"] = {
+        **terms,
+        "hlo_flops_global": flops_global,
+        "hlo_bytes_global": bytes_global,
+        "coll_wire_bytes_per_dev": coll_dev,
+        "model_flops": mfl,
+        "useful_fraction": useful_fraction(mfl, flops_global),
+        "n_active_params": n_active,
+        "depth_unit": unit,
+        "cost_points": costs,
+    }
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--out", default=str(OUT_DIR))
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--skip-multipod", action="store_true")
+    args = ap.parse_args()
+    out = pathlib.Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    for arch in archs:
+        for shape in shapes:
+            cell = out / f"{arch}__{shape}.json"
+            if cell.exists() and not args.force:
+                print(f"[skip] {cell.name} (cached)")
+                continue
+            t0 = time.time()
+            try:
+                rec = run_cell(arch, shape, out,
+                               skip_multipod=args.skip_multipod)
+                rec["wall_s"] = round(time.time() - t0, 1)
+            except Exception as e:  # record failures for triage
+                import traceback
+                rec = {"arch": arch, "shape": shape, "error": str(e),
+                       "traceback": traceback.format_exc()}
+            cell.write_text(json.dumps(rec, indent=1))
+            status = ("SKIP" if "skipped" in rec else
+                      "ERR " if "error" in rec else "ok  ")
+            dom = rec.get("roofline", {}).get("dominant", "-")
+            print(f"[{status}] {arch:22s} {shape:12s} {rec.get('wall_s','')}s"
+                  f" dominant={dom}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

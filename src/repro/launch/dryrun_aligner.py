@@ -1,0 +1,106 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Dry-run + roofline for the paper's own workload: the batched GenASM
+aligner sharded over the production mesh (data-parallel across pairs).
+
+The aligner is integer (VPU) work, so the compute term uses an analytic
+int-op model (cost_analysis only counts floating-point FLOPs):
+  ops/window = levels * W * NW * OPS_PER_CELL lanes-ops   (DC fill)
+with VPU_INT_THROUGHPUT ~ 1e12 op/s/chip (8x128 lanes @ ~1 GHz), an
+estimate recorded as such in EXPERIMENTS.md.  Memory/collective terms come
+from the compiled HLO as for the LM cells.
+
+  PYTHONPATH=src python -m repro.launch.dryrun_aligner [--banded-compute]
+"""
+import argparse
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..analysis.hlo import collective_bytes
+from ..analysis.roofline import HBM_BW, ICI_BW
+from ..core.config import AlignerConfig
+from ..core.windowing import n_main_windows
+from ..serve.align_step import align_input_specs, align_step, make_align_step
+from .mesh import make_production_mesh
+
+VPU_INT_OPS = 1.0e12   # int32 lane-ops/s/chip (estimate, see module doc)
+OPS_PER_CELL = 14      # shifts/ands/ors/selects per (level, column, word)
+
+
+def aligner_cell(batch=131072, read_len=10_000, cfg=AlignerConfig(),
+                 banded_compute=False, multi_pod=False):
+    """Lower/compile the align step for `batch` 10kb pairs on the mesh."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = 256
+    specs = align_input_specs(batch, read_len, cfg)
+    jfn = make_align_step(cfg, read_len, mesh)   # sharded in+out (see §Perf)
+    with jax.set_mesh(mesh):
+        t0 = time.time()
+        lowered = jfn.lower(*specs)
+        compiled = lowered.compile()
+        wall = time.time() - t0
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    colls = collective_bytes(compiled.as_text())
+
+    # analytic integer-compute model (per chip)
+    n_win = n_main_windows(read_len, cfg) + 1
+    avg_levels = 7.0 if cfg.early_term else cfg.k + 1
+    nw_compute = cfg.nwb if banded_compute else cfg.nw
+    ops = (batch / chips) * n_win * avg_levels * cfg.W * nw_compute \
+        * OPS_PER_CELL
+    compute_s = ops / VPU_INT_OPS
+    # memory term: DENT band writes + text/PM reads dominate HBM traffic
+    bytes_dev = float(ca.get("bytes accessed", 0.0) or 0.0)
+    memory_s = bytes_dev / HBM_BW
+    coll_s = colls["total_wire_bytes"] / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": coll_s}
+    dom = max(terms, key=terms.get)
+    return {
+        "arch": "genasm-aligner", "shape": f"b{batch}_L{read_len}",
+        "mesh": list(mesh.shape.values()),
+        "banded_compute": banded_compute,
+        "memory": {"argument_bytes": int(ma.argument_size_in_bytes),
+                   "temp_bytes": int(ma.temp_size_in_bytes)},
+        "collectives_schedule": colls,
+        "roofline": {**terms, "dominant": dom.replace("_s", ""),
+                     "int_ops_per_chip": ops,
+                     "hlo_bytes_per_dev": bytes_dev,
+                     "windows_per_pair": n_win, "avg_levels": avg_levels},
+        "compile_s": round(wall, 1),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--banded-compute", action="store_true")
+    ap.add_argument("--batch", type=int, default=131072)
+    ap.add_argument("--read-len", type=int, default=10_000)
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+    out = pathlib.Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    for mp in (False, True):
+        rec = aligner_cell(args.batch, args.read_len,
+                           banded_compute=args.banded_compute, multi_pod=mp)
+        tag = "mp" if mp else "sp"
+        bc = "_banded" if args.banded_compute else ""
+        (out / f"genasm-aligner__{tag}{bc}.json").write_text(
+            json.dumps(rec, indent=1))
+        r = rec["roofline"]
+        print(f"[ok] aligner {tag}{bc}: compute={r['compute_s']:.3f}s "
+              f"memory={r['memory_s']:.3f}s coll={r['collective_s']:.3f}s "
+              f"dominant={r['dominant']} "
+              f"temp={rec['memory']['temp_bytes']/2**30:.1f}GB")
+
+
+if __name__ == "__main__":
+    main()

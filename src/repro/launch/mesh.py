@@ -1,0 +1,26 @@
+"""Production mesh construction (assignment-specified geometry).
+
+A FUNCTION, not a module constant: importing this module never touches jax
+device state.  Single pod = (16, 16) chips = ('data','model'); multi-pod
+adds a leading 'pod' axis (2 pods = 512 chips)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh over however many (virtual) devices tests configured."""
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def batch_axes(mesh) -> tuple:
+    """Axes the global batch shards over."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

@@ -1,0 +1,94 @@
+"""Attention: GQA with RoPE/M-RoPE, query-chunked (bounded memory at 32k
+prefill), sliding-window/global via a traced window size (so gemma2's
+local/global alternation works under scan-over-layers without doubling
+FLOPs), logit softcapping, and a decode path over a KV cache that may be
+sequence-sharded across the 'model' mesh axis."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import apply_rope, softcap
+
+NEG = -1e30
+NO_WINDOW = 1 << 30
+
+
+def attention(q, k, v, q_pos, k_pos, *, window, cap: float, scale: float,
+              q_chunk: int = 1024):
+    """q: (B, Sq, H, Dh); k/v: (B, Sk, KV, Dh); q_pos (Sq,), k_pos (Sk,).
+    `window` may be a traced int32 scalar (NO_WINDOW disables it).
+    Query-chunked exact softmax: peak memory O(q_chunk * Sk) per head."""
+    B, Sq, H, Dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, Dh)
+    window = jnp.asarray(window, jnp.int32)
+
+    def chunk_fn(qc, qpos_c):
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qc, k) * scale
+        s = softcap(s, cap)
+        keep = (k_pos[None, :] <= qpos_c[:, None]) & \
+               (k_pos[None, :] > qpos_c[:, None] - window)
+        s = jnp.where(keep[None, None, None], s, NEG)
+        p = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(q.dtype)
+        return jnp.einsum("bkgqs,bskd->bqkgd", p, v)
+
+    if Sq <= q_chunk:
+        out = chunk_fn(qg, q_pos)
+    else:
+        n_chunks = -(-Sq // q_chunk)
+        pad = n_chunks * q_chunk - Sq
+        qg_p = jnp.pad(qg, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        qp_p = jnp.pad(q_pos, ((0, pad),))
+        qg_c = qg_p.reshape(B, n_chunks, q_chunk, KV, G, Dh).swapaxes(0, 1)
+        qp_c = qp_p.reshape(n_chunks, q_chunk)
+        out = jax.lax.map(lambda a: chunk_fn(*a), (qg_c, qp_c))
+        out = out.swapaxes(0, 1).reshape(B, n_chunks * q_chunk, KV, G, Dh)
+        out = out[:, :Sq]
+    return out.reshape(B, Sq, H, Dh)
+
+
+def _window_for_layer(cfg, layer_is_global):
+    """Effective sliding window as a traced scalar."""
+    if cfg.local_global_every:
+        return jnp.where(layer_is_global, NO_WINDOW,
+                         cfg.sliding_window or NO_WINDOW)
+    return jnp.int32(cfg.sliding_window or NO_WINDOW)
+
+
+def attn_block(p, x, positions, pos_1d, cfg, layer_is_global=0,
+               cache=None, cache_pos=None):
+    """positions: (B,S) or (3,B,S) rotary positions; pos_1d: (S,) int32 mask
+    positions (shared across batch).  cache: dict(k,v) of (B, Sc, KV, Dh) for
+    decode (appends at cache_pos).  Returns (out, cache_out)."""
+    B, S, D = x.shape
+    H, KV, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(B, S, H, Dh)
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"]).reshape(B, S, KV, Dh)
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"]).reshape(B, S, KV, Dh)
+    if cfg.qkv_bias:
+        q = q + p["bq"].reshape(H, Dh)
+        k = k + p["bk"].reshape(KV, Dh)
+        v = v + p["bv"].reshape(KV, Dh)
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    scale = cfg.attention_multiplier or (1.0 / (Dh ** 0.5))
+    window = _window_for_layer(cfg, layer_is_global)
+
+    if cache is None:
+        out = attention(q, k, v, pos_1d, pos_1d, window=window,
+                        cap=cfg.attn_softcap, scale=scale)
+        cache_out = {"k": k, "v": v}
+    else:
+        ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, cache_pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, cache_pos, 0, 0))
+        Sc = ck.shape[1]
+        k_pos = jnp.arange(Sc, dtype=jnp.int32)
+        q_pos = cache_pos + jnp.arange(S, dtype=jnp.int32)
+        out = attention(q, ck, cv, q_pos, k_pos, window=window,
+                        cap=cfg.attn_softcap, scale=scale)
+        cache_out = {"k": ck, "v": cv}
+
+    y = jnp.einsum("bsh,hd->bsd", out.reshape(B, S, H * Dh), p["wo"])
+    return y, cache_out

@@ -1,0 +1,105 @@
+"""Shared layers: norms, rotary embeddings (incl. M-RoPE), activations,
+parameter-spec helpers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rms_norm(x, w, eps=1e-6):
+    v = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (x.astype(jnp.float32) * jax.lax.rsqrt(v + eps)) * \
+        (1.0 + w.astype(jnp.float32))
+    return y.astype(x.dtype)
+
+
+def cast_tree(params, dtype):
+    """Cast float params to the compute dtype (mixed-precision forward)."""
+    return jax.tree_util.tree_map(
+        lambda a: a.astype(dtype)
+        if hasattr(a, "dtype") and a.dtype in (jnp.float32, jnp.bfloat16)
+        else a, params)
+
+
+def act_fn(name):
+    return {"silu": jax.nn.silu, "gelu": lambda x: jax.nn.gelu(x, approximate=True)}[name]
+
+
+def softcap(x, cap: float):
+    if not cap:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x, positions, theta: float, sections=()):
+    """x: (..., S, H, Dh); positions: (B, S) or (3, B, S) for M-RoPE.
+
+    M-RoPE (Qwen2-VL): the Dh/2 rotary frequency slots are partitioned into
+    `sections` (t, h, w) groups, each rotated by its own position stream.
+    """
+    dh = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(dh, theta), jnp.float32)      # (Dh/2,)
+    if positions.ndim == 3 and sections:
+        secs = list(sections)
+        assert sum(secs) == dh // 2
+        parts = []
+        start = 0
+        for i, s in enumerate(secs):
+            parts.append(positions[i][..., None] * freqs[start:start + s])
+            start += s
+        ang = jnp.concatenate(parts, axis=-1)                    # (B, S, Dh/2)
+    else:
+        if positions.ndim == 3:
+            positions = positions[0]
+        ang = positions[..., None] * freqs                       # (B, S, Dh/2)
+    cos = jnp.cos(ang)[..., None, :].astype(x.dtype)             # (B,S,1,Dh/2)
+    sin = jnp.sin(ang)[..., None, :].astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+# ---------------------------------------------------------------- params ----
+
+class ParamSpec:
+    """Declarative parameter: shape, logical sharding, init scale."""
+
+    def __init__(self, shape, spec, init="normal", scale=None):
+        self.shape = tuple(int(s) for s in shape)
+        self.spec = spec          # tuple of mesh-axis names or None per dim
+        self.init = init          # 'normal' | 'zeros' | 'ones'
+        fan_in = self.shape[-2] if len(self.shape) >= 2 else self.shape[-1]
+        self.scale = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+
+
+def init_param(rng, ps: ParamSpec, dtype):
+    if ps.init == "zeros":
+        return jnp.zeros(ps.shape, dtype)
+    if ps.init == "ones":
+        return jnp.ones(ps.shape, dtype)
+    return (jax.random.normal(rng, ps.shape, jnp.float32) * ps.scale).astype(dtype)
+
+
+def init_tree(rng, specs, dtype=jnp.float32):
+    flat, treedef = jax.tree_util.tree_flatten(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(rng, len(flat))
+    vals = [init_param(k, ps, dtype) for k, ps in zip(keys, flat)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def abstract_tree(specs, dtype=jnp.float32):
+    return jax.tree_util.tree_map(
+        lambda ps: jax.ShapeDtypeStruct(ps.shape, dtype), specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def spec_tree(specs):
+    """PartitionSpec pytree matching the param tree."""
+    from jax.sharding import PartitionSpec as P
+    return jax.tree_util.tree_map(
+        lambda ps: P(*ps.spec), specs, is_leaf=lambda x: isinstance(x, ParamSpec))

@@ -1,0 +1,122 @@
+"""Mamba-2 (SSD) block: chunked-parallel for training/prefill, recurrent for
+decode — the sequence mixer of the zamba2 hybrid architecture.
+
+Scalar-identity A per head (the SSD restriction).  The chunked algorithm is
+the standard 4-part decomposition: intra-chunk (masked quadratic), chunk
+states, inter-chunk recurrence (scan over chunks), state readout.
+Equivalence with the naive per-step recurrence is asserted in tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import act_fn, rms_norm
+
+
+def ssd_chunked(xh, a_log, Bm, Cm, chunk: int, h0=None):
+    """xh: (B, L, H, P) inputs (already dt-scaled); a_log: (B, L, H) log decay
+    per step (<= 0); Bm/Cm: (B, L, N) shared across heads (n_groups = 1).
+    Returns (y (B,L,H,P), final_state (B,H,N,P))."""
+    Bsz, L, H, P = xh.shape
+    N = Bm.shape[-1]
+    nc = L // chunk
+    assert nc * chunk == L
+    xc = xh.reshape(Bsz, nc, chunk, H, P)
+    ac = a_log.reshape(Bsz, nc, chunk, H)
+    Bc = Bm.reshape(Bsz, nc, chunk, N)
+    Cc = Cm.reshape(Bsz, nc, chunk, N)
+
+    la = jnp.cumsum(ac, axis=2)                          # (B,nc,Q,H)
+    # intra-chunk: scores_iq,jk = C_i.B_j * exp(la_i - la_j), j <= i
+    cb = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)           # (B,nc,Q,Q)
+    dec = la[:, :, :, None, :] - la[:, :, None, :, :]    # (B,nc,Q,Q,H)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    dec = jnp.where(mask[None, None, :, :, None], dec, -jnp.inf)
+    att = cb[..., None] * jnp.exp(dec)                   # (B,nc,Q,Q,H)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", att.astype(xh.dtype), xc)
+
+    # chunk states: S_c = sum_j exp(la_end - la_j) B_j (x) x_j
+    dec_end = jnp.exp(la[:, :, -1:, :] - la)             # (B,nc,Q,H)
+    Sc = jnp.einsum("bcjn,bcjh,bcjhp->bchnp",
+                    Bc, dec_end.astype(xh.dtype), xc)    # (B,nc,H,N,P)
+
+    # inter-chunk scan
+    a_tot = jnp.exp(la[:, :, -1, :]).astype(xh.dtype)    # (B,nc,H)
+    def scan_fn(h, inp):
+        s, at = inp                                       # (B,H,N,P), (B,H)
+        h_new = h * at[..., None, None] + s
+        return h_new, h
+    init = h0 if h0 is not None else jnp.zeros((Bsz, H, N, P), xh.dtype)
+    h_fin, h_prior = jax.lax.scan(scan_fn,
+                                  init,
+                                  (Sc.swapaxes(0, 1), a_tot.swapaxes(0, 1)))
+    h_prior = h_prior.swapaxes(0, 1)                      # (B,nc,H,N,P)
+
+    # inter contribution: y_i += C_i . (exp(la_i) * h_prior)
+    y_inter = jnp.einsum("bcin,bcih,bchnp->bcihp",
+                         Cc, jnp.exp(la).astype(xh.dtype), h_prior)
+    y = (y_intra + y_inter).reshape(Bsz, L, H, P)
+    return y, h_fin
+
+
+def mamba2_block(p, x, cfg, state=None, conv_state=None, chunk: int = 256):
+    """Full Mamba2 mixer.  p keys: w_in, conv_w, dt_bias, A_log, D, norm_w,
+    w_out.  x: (B, L, D).  If state/conv_state given -> single-step decode
+    (L == 1).  Returns (y, (state, conv_state))."""
+    B, L, D = x.shape
+    d_in = cfg.ssm_expand * cfg.d_model
+    P = cfg.ssm_head_dim
+    H = d_in // P
+    N = cfg.ssm_state
+    dconv = cfg.ssm_conv
+    zxbcdt = jnp.einsum("bld,de->ble", x, p["w_in"])
+    z, xc, Bm, Cm, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + N, 2 * d_in + 2 * N], axis=-1)
+
+    conv_in = jnp.concatenate([xc, Bm, Cm], axis=-1)      # (B,L,d_in+2N)
+    if state is None:
+        pad = jnp.pad(conv_in, ((0, 0), (dconv - 1, 0), (0, 0)))
+        conv = sum(pad[:, i:i + L] * p["conv_w"][i] for i in range(dconv))
+        new_conv_state = pad[:, L:L + dconv - 1]   # last dconv-1 inputs
+    else:
+        hist = jnp.concatenate([conv_state, conv_in], axis=1)  # (B,dconv,•)
+        conv = sum(hist[:, i:i + L] * p["conv_w"][i] for i in range(dconv))
+        new_conv_state = hist[:, L:]
+    conv = jax.nn.silu(conv)
+    xc, Bm, Cm = jnp.split(conv, [d_in, d_in + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,L,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                  # (H,)
+    a_log = dt * A                                                 # (B,L,H)
+    xh = xc.reshape(B, L, H, P) * dt[..., None].astype(x.dtype)
+
+    xh_orig = xh
+    if state is None:
+        Lp = -(-L // chunk) * chunk
+        if Lp != L:
+            xh = jnp.pad(xh, ((0, 0), (0, Lp - L), (0, 0), (0, 0)))
+            a_log = jnp.pad(a_log, ((0, 0), (0, Lp - L), (0, 0)))
+            Bm = jnp.pad(Bm, ((0, 0), (0, Lp - L), (0, 0)))
+            Cm = jnp.pad(Cm, ((0, 0), (0, Lp - L), (0, 0)))
+        y, h_fin = ssd_chunked(xh, a_log, Bm, Cm, min(chunk, Lp), h0=state)
+        y = y[:, :L]
+    else:
+        # recurrent step(s): h = a*h + B (x) x ; y = C . h
+        def step(h, inp):
+            xt, at, bt, ct = inp
+            h = h * jnp.exp(at)[..., None, None].astype(xt.dtype) \
+                + jnp.einsum("bn,bhp->bhnp", bt, xt)
+            yt = jnp.einsum("bn,bhnp->bhp", ct, h)
+            return h, yt
+        h_fin, ys = jax.lax.scan(
+            step, state,
+            (xh.swapaxes(0, 1), a_log.swapaxes(0, 1),
+             Bm.swapaxes(0, 1), Cm.swapaxes(0, 1)))
+        y = ys.swapaxes(0, 1)                                       # (B,L,H,P)
+
+    y = y + p["D"][None, None, :, None] * xh_orig
+    y = y.reshape(B, L, d_in)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.rms_eps)
+    out = jnp.einsum("ble,ed->bld", y, p["w_out"])
+    return out, (h_fin, new_conv_state)

@@ -1,0 +1,88 @@
+"""Mixture-of-Experts FFN: top-k router + sort-based capacity dispatch.
+
+Sharding-aware formulation (§Perf iteration 2 in EXPERIMENTS.md): routing,
+sorting and gathers are computed *per batch row*, so with the batch sharded
+over ('pod','data') every dispatch step is local to its data shard — no
+global (tokens, d_model) scatter buffer (the naive global-flatten version
+made GSPMD replicate a ~8.6 GB combine buffer per device and all-reduce
+it).  Expert tiles (B, E, C, D) then shard E over 'model' (expert
+parallelism); the combine is a per-expert-shard partial scatter that GSPMD
+finishes with one activation-sized all-reduce over 'model'.
+
+Capacity C = S*top_k/E * capacity_factor per row; overflowing assignments
+drop (GShard-style), underfull slots point at token 0 with weight 0.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import constrain
+from .common import act_fn
+
+
+def router_topk(x, w_router, cfg):
+    """x: (B, S, D) -> (weights (B,S,K), experts (B,S,K), aux scalar)."""
+    logits = jnp.einsum("bsd,de->bse", x, w_router).astype(jnp.float32)
+    logits = constrain(logits, "batch", None, None)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, cfg.top_k)
+    if cfg.norm_topk_prob:
+        w = w / (jnp.sum(w, axis=-1, keepdims=True) + 1e-9)
+    E = cfg.n_experts
+    me = jnp.mean(probs, axis=(0, 1))
+    fe = jnp.mean(jax.nn.one_hot(idx[..., 0], E, dtype=jnp.float32),
+                  axis=(0, 1))
+    aux = E * jnp.sum(me * fe)
+    return w.astype(x.dtype), idx.astype(jnp.int32), aux
+
+
+def moe_ffn(p, x, cfg):
+    """p: router (D,E), wg/wu (E, D, Fe), wd (E, Fe, D).  x: (B, S, D).
+    Returns (y, aux_loss)."""
+    B, S, D = x.shape
+    K, E = cfg.top_k, cfg.n_experts
+    C = int(S * K / E * cfg.capacity_factor) + 1
+    w, idx, aux = router_topk(x, p["router"], cfg)
+
+    # ---- per-row sort-based dispatch (local to the data shard) ----
+    eid = idx.reshape(B, S * K)                          # (B, S*K)
+    tok = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(S, dtype=jnp.int32), K), (B, S * K))
+    wgt = w.reshape(B, S * K)
+    order = jnp.argsort(eid, axis=-1)
+    eid_s = jnp.take_along_axis(eid, order, axis=-1)
+    tok_s = jnp.take_along_axis(tok, order, axis=-1)
+    wgt_s = jnp.take_along_axis(wgt, order, axis=-1)
+    starts = jax.vmap(
+        lambda row: jnp.searchsorted(row, jnp.arange(E, dtype=jnp.int32)))(
+        eid_s)                                           # (B, E)
+    rank = jnp.arange(S * K, dtype=jnp.int32)[None, :] - \
+        jnp.take_along_axis(starts, eid_s, axis=-1)
+    keep = rank < C
+    slot = jnp.where(keep, eid_s * C + rank, E * C)      # OOB -> dropped
+
+    b_idx = jnp.broadcast_to(jnp.arange(B, dtype=jnp.int32)[:, None],
+                             (B, S * K))
+    tok_for = jnp.zeros((B, E * C), jnp.int32) \
+        .at[b_idx, slot].set(tok_s, mode="drop")
+    wgt_for = jnp.zeros((B, E * C), x.dtype) \
+        .at[b_idx, slot].set(wgt_s, mode="drop")
+
+    # ---- gather tokens into (B, E, C, D) expert tiles, E over 'model' ----
+    xe = jax.vmap(lambda xr, tf: xr[tf])(x, tok_for)         # (B, E*C, D)
+    xe = constrain(xe.reshape(B, E, C, D), "batch", "model", None, None)
+    act = act_fn(cfg.act)
+    h = act(jnp.einsum("becd,edf->becf", xe, p["wg"])) * \
+        jnp.einsum("becd,edf->becf", xe, p["wu"])
+    ye = jnp.einsum("becf,efd->becd", h, p["wd"])
+    ye = constrain(ye, "batch", "model", None, None)
+    ye = ye.reshape(B, E * C, D) * wgt_for[..., None]
+
+    # ---- combine: per-expert-shard partial scatter + AR over 'model' ----
+    # vmapped per-row scatter-add: explicit (B, E*C, 2) scatter indices hide
+    # the batch alignment from GSPMD and force replication (§Perf iter 2b)
+    y = jax.vmap(lambda tf, yr: jnp.zeros((S, D), x.dtype).at[tf].add(yr))(
+        tok_for, ye)
+    y = constrain(y, "batch", None, None)
+    return y, aux.astype(jnp.float32)

@@ -1,0 +1,105 @@
+"""Architecture registry: --arch <id> -> model + config + input specs."""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+from .config import SUBQUADRATIC_FAMILIES, ModelConfig
+from .transformer import TransformerLM
+from .xlstm_lm import XLSTMLM
+from .zamba2 import Zamba2LM
+
+ARCH_IDS = (
+    "qwen3-moe-235b-a22b", "olmoe-1b-7b", "llama3.2-1b", "granite-3-2b",
+    "gemma2-2b", "qwen2.5-14b", "qwen2-vl-2b", "zamba2-2.7b",
+    "musicgen-medium", "xlstm-125m",
+)
+
+_MODULES = {a: a.replace("-", "_").replace(".", "_") for a in ARCH_IDS}
+
+# (seq_len, global_batch, kind)
+SHAPES = {
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    return mod.CONFIG
+
+
+def get_model(arch_or_cfg):
+    cfg = get_config(arch_or_cfg) if isinstance(arch_or_cfg, str) else arch_or_cfg
+    cls = {"hybrid": Zamba2LM, "ssm": XLSTMLM}.get(cfg.family, TransformerLM)
+    return cls(cfg)
+
+
+def shape_applicable(cfg: ModelConfig, shape: str) -> bool:
+    """long_500k needs sub-quadratic sequence mixing (DESIGN.md §4)."""
+    if shape == "long_500k":
+        return cfg.family in SUBQUADRATIC_FAMILIES
+    return True
+
+
+def tiny_config(cfg: ModelConfig, n_layers=2) -> ModelConfig:
+    """Reduced same-family config for CPU smoke tests."""
+    repl = dict(
+        n_layers=n_layers, d_model=64, n_heads=4, d_head=16,
+        n_kv_heads=min(cfg.n_kv_heads, 4) if cfg.n_kv_heads < cfg.n_heads else 4,
+        d_ff=128 if cfg.d_ff else 0, vocab=256,
+        sliding_window=min(cfg.sliding_window, 8) if cfg.sliding_window else 0,
+        remat=False,
+    )
+    if cfg.n_experts:
+        repl.update(n_experts=4, top_k=2)
+    if cfg.family in ("hybrid",):
+        repl.update(ssm_state=16, ssm_head_dim=16, shared_attn_every=2,
+                    n_kv_heads=4)
+    if cfg.family == "ssm":
+        repl.update(slstm_every=2, n_layers=max(n_layers, 2))
+    if cfg.mrope_sections:
+        repl.update(mrope_sections=(2, 3, 3))
+    if cfg.n_codebooks:
+        repl.update(n_codebooks=2)
+    return dataclasses.replace(cfg, **repl)
+
+
+def input_specs(cfg: ModelConfig, shape: str, *, tiny: bool = False):
+    """ShapeDtypeStruct stand-ins for every model input of the given shape
+    cell (no device allocation) — consumed by launch/dryrun.py."""
+    S, GB, kind = SHAPES[shape]
+    if tiny:
+        S, GB = 128, 8
+    sds = jax.ShapeDtypeStruct
+    i32 = jnp.int32
+    model = get_model(cfg)
+    if kind == "train":
+        batch = {"tokens": sds((GB, S), i32), "labels": sds((GB, S), i32)}
+        if cfg.family == "audio":
+            batch = {"embeds": sds((GB, S, cfg.d_model), jnp.bfloat16),
+                     "labels": sds((GB, S, cfg.n_codebooks), i32)}
+        if cfg.family == "vlm":
+            batch["positions"] = sds((3, GB, S), i32)
+        return {"batch": batch}
+    if kind == "prefill":
+        batch = {"tokens": sds((GB, S), i32)}
+        if cfg.family == "audio":
+            batch = {"embeds": sds((GB, S, cfg.d_model), jnp.bfloat16)}
+        if cfg.family == "vlm":
+            batch["positions"] = sds((3, GB, S), i32)
+        return {"batch": batch}
+    # decode: one new token against a seq_len-sized state
+    batch = {"tokens": sds((GB, 1), i32), "cache_pos": sds((), i32)}
+    if cfg.family == "audio":
+        batch = {"embeds": sds((GB, 1, cfg.d_model), jnp.bfloat16),
+                 "cache_pos": sds((), i32)}
+    if cfg.family == "vlm":
+        batch["positions"] = sds((3, GB, 1), i32)
+    cache = model.abstract_cache(GB, S)
+    return {"batch": batch, "cache": cache}

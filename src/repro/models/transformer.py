@@ -1,0 +1,267 @@
+"""Unified decoder LM covering the dense / MoE / VLM / audio assigned
+architectures (llama3.2, granite3, gemma2, qwen2.5, qwen3-moe, olmoe,
+qwen2-vl, musicgen), plus the zamba2 hybrid and xlstm classes.
+
+Layers run under lax.scan with stacked parameters (compile time ~O(1) in
+depth) and optional remat; gemma2's local/global alternation rides through
+the scan as a per-layer 0/1 input; zamba2's *shared* attention block keeps a
+single (unstacked) parameter set applied every `shared_attn_every` layers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .attention import attn_block
+from .common import ParamSpec as PS
+from .common import (abstract_tree, act_fn, cast_tree, init_tree, rms_norm,
+                     softcap, spec_tree)
+from .config import ModelConfig
+from ..distributed.sharding import constrain
+from .mamba2 import mamba2_block
+from .moe import moe_ffn
+from .xlstm import mlstm_block, slstm_block
+
+DATA = ("pod", "data")  # batch shards over both pod and data axes
+
+
+def _attn_specs(cfg, L):
+    D, H, KV, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    s = {
+        "wq": PS((L, D, H * Dh), (None, "data", "model")),
+        "wk": PS((L, D, KV * Dh), (None, "data", "model")),
+        "wv": PS((L, D, KV * Dh), (None, "data", "model")),
+        "wo": PS((L, H * Dh, D), (None, "model", "data")),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = PS((L, H * Dh), (None, "model"), init="zeros")
+        s["bk"] = PS((L, KV * Dh), (None, "model"), init="zeros")
+        s["bv"] = PS((L, KV * Dh), (None, "model"), init="zeros")
+    return s
+
+
+def _mlp_specs(cfg, L):
+    D, F = cfg.d_model, cfg.d_ff
+    return {
+        "wg": PS((L, D, F), (None, "data", "model")),
+        "wu": PS((L, D, F), (None, "data", "model")),
+        "wd": PS((L, F, D), (None, "model", "data")),
+    }
+
+
+def _moe_specs(cfg, L):
+    D, Fe, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "router": PS((L, D, E), (None, None, None)),
+        "wg": PS((L, E, D, Fe), (None, "model", "data", None)),
+        "wu": PS((L, E, D, Fe), (None, "model", "data", None)),
+        "wd": PS((L, E, Fe, D), (None, "model", None, "data")),
+    }
+
+
+def mlp_ffn(p, x, cfg):
+    act = act_fn(cfg.act)
+    h = act(jnp.einsum("bsd,df->bsf", x, p["wg"])) * \
+        jnp.einsum("bsd,df->bsf", x, p["wu"])
+    return jnp.einsum("bsf,fd->bsd", h, p["wd"])
+
+
+class TransformerLM:
+    """Dense / MoE / VLM / audio decoder."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------ params --
+    def param_specs(self):
+        cfg = self.cfg
+        L, D, V = cfg.n_layers, cfg.d_model, cfg.vocab_padded
+        layers = {"ln1": PS((L, D), (None, None), init="zeros"),
+                  "ln2": PS((L, D), (None, None), init="zeros"),
+                  "attn": _attn_specs(cfg, L)}
+        if cfg.post_block_norm:
+            layers["ln1b"] = PS((L, D), (None, None), init="zeros")
+            layers["ln2b"] = PS((L, D), (None, None), init="zeros")
+        layers["moe" if cfg.n_experts else "mlp"] = (
+            _moe_specs(cfg, L) if cfg.n_experts else _mlp_specs(cfg, L))
+        tree = {"embed": PS((V, D), ("model", "data"), scale=0.02),
+                "layers": layers,
+                "final_norm": PS((D,), (None,), init="zeros")}
+        if cfg.n_codebooks:
+            tree["head"] = PS((cfg.n_codebooks, D, V), (None, "data", "model"))
+        elif not cfg.tie_embeddings:
+            tree["head"] = PS((D, V), ("data", "model"))
+        return tree
+
+    def init(self, rng, dtype=jnp.float32):
+        return init_tree(rng, self.param_specs(), dtype)
+
+    def abstract_params(self, dtype=jnp.float32):
+        return abstract_tree(self.param_specs(), dtype)
+
+    def partition_specs(self):
+        return spec_tree(self.param_specs())
+
+    # ----------------------------------------------------------- forward --
+    def _is_global(self):
+        cfg = self.cfg
+        if cfg.local_global_every:
+            return (np.arange(cfg.n_layers) % 2 == 1).astype(np.int32)
+        return np.zeros(cfg.n_layers, np.int32)
+
+    def _embed(self, params, batch):
+        cfg = self.cfg
+        if "embeds" in batch:                       # stub modality frontends
+            x = batch["embeds"]
+        else:
+            x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        x = x.astype(jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32)
+        if cfg.scale_embed:
+            x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+        return constrain(x * cfg.embedding_multiplier, "batch", None, None)
+
+    def _positions(self, batch, S, cache_pos=None):
+        if "positions" in batch:
+            return batch["positions"]
+        if cache_pos is not None:
+            return cache_pos + jnp.arange(S, dtype=jnp.int32)[None, :]
+        return jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32),
+                                (batch_dim(batch), S))
+
+    def _block(self, p, x, positions, pos_1d, is_global, cfg, cache, cache_pos):
+        h = rms_norm(x, p["ln1"], cfg.rms_eps)
+        a, cache_out = attn_block(p["attn"], h, positions, pos_1d, cfg,
+                                  is_global, cache, cache_pos)
+        if cfg.post_block_norm:
+            a = rms_norm(a, p["ln1b"], cfg.rms_eps)
+        x = x + a * cfg.residual_multiplier
+        h = rms_norm(x, p["ln2"], cfg.rms_eps)
+        aux = jnp.float32(0)
+        if cfg.n_experts:
+            f, aux = moe_ffn(p["moe"], h, cfg)
+        else:
+            f = mlp_ffn(p["mlp"], h, cfg)
+        if cfg.post_block_norm:
+            f = rms_norm(f, p["ln2b"], cfg.rms_eps)
+        x = x + f * cfg.residual_multiplier
+        return constrain(x, "batch", None, None), aux, cache_out
+
+    @property
+    def compute_dtype(self):
+        return jnp.bfloat16 if self.cfg.dtype == "bfloat16" else jnp.float32
+
+    def forward(self, params, batch, mode="train", cache=None):
+        """mode: train | prefill | decode.  Returns (logits, aux, new_cache)."""
+        cfg = self.cfg
+        params = cast_tree(params, self.compute_dtype)
+        x = self._embed(params, batch)
+        B, S, D = x.shape
+        cache_pos = batch.get("cache_pos") if mode == "decode" else None
+        positions = self._positions(batch, S, cache_pos)
+        pos_1d = (positions[0] if positions.ndim == 2 else positions[0, 0])
+        if positions.ndim == 2 and positions.shape[0] != 1:
+            pos_1d = positions[0]
+        is_global = jnp.asarray(self._is_global())
+
+        lp = params["layers"]
+
+        def body(carry, xs):
+            x, aux = carry
+            if mode == "decode":
+                p, ig, layer_cache = xs
+            else:
+                p, ig = xs
+                layer_cache = None
+            x, aux_l, cache_out = self._block(
+                p, x, positions, pos_1d, ig, cfg,
+                layer_cache, cache_pos)
+            ys = cache_out if mode != "train" else None
+            return (x, aux + aux_l), ys
+
+        if cfg.remat and mode == "train":
+            body = jax.checkpoint(body)
+
+        if mode == "decode":
+            xs = (lp, is_global, cache["kv"])
+        else:
+            xs = (lp, is_global)
+        if cfg.scan_layers:
+            (x, aux), caches = jax.lax.scan(body, (x, jnp.float32(0)), xs)
+        else:  # unrolled (per-layer costs visible to cost_analysis)
+            carry, ys = (x, jnp.float32(0)), []
+            for i in range(cfg.n_layers):
+                xi = jax.tree_util.tree_map(lambda a: a[i], xs)
+                carry, y = body(carry, xi)
+                ys.append(y)
+            (x, aux) = carry
+            caches = (jax.tree_util.tree_map(lambda *a: jnp.stack(a), *ys)
+                      if mode != "train" else None)
+
+        x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+        if cfg.n_codebooks:
+            logits = jnp.einsum("bsd,cdv->bscv", x, params["head"])
+        elif cfg.tie_embeddings:
+            logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype))
+        else:
+            logits = jnp.einsum("bsd,dv->bsv", x, params["head"])
+        logits = softcap(logits / cfg.logits_scaling, cfg.final_softcap)
+        logits = constrain(logits, "batch", *([None] * (logits.ndim - 3)),
+                           None, "model")
+        new_cache = None
+        if mode in ("prefill", "decode"):
+            new_cache = {"kv": caches}
+        return logits, aux, new_cache
+
+    # ------------------------------------------------------------- steps --
+    def loss(self, params, batch):
+        cfg = self.cfg
+        logits, aux, _ = self.forward(params, batch, mode="train")
+        labels = batch["labels"]
+        lg = logits.astype(jnp.float32)
+        if cfg.vocab_padded != cfg.vocab:
+            pad_mask = jnp.arange(cfg.vocab_padded) >= cfg.vocab
+            lg = jnp.where(pad_mask, -1e30, lg)
+        # one-hot cross-entropy: reductions over the vocab-sharded axis stay
+        # sharded (take_along_axis would force an all-gather of the logits)
+        lse = jax.scipy.special.logsumexp(lg, axis=-1)
+        onehot = jax.nn.one_hot(labels, cfg.vocab_padded, dtype=lg.dtype)
+        true_logit = jnp.einsum("...v,...v->...", lg, onehot)
+        ce = lse - true_logit
+        loss = jnp.mean(ce)
+        return loss + cfg.router_aux_coef * aux / cfg.n_layers, {"ce": loss}
+
+    def prefill(self, params, batch):
+        logits, _, cache = self.forward(params, batch, mode="prefill")
+        return logits[:, -1:], cache
+
+    def decode_step(self, params, batch, cache):
+        """batch: tokens (B,1) (or embeds), cache_pos scalar int32."""
+        logits, _, cache = self.forward(params, batch, mode="decode",
+                                        cache=cache)
+        return logits, cache
+
+    def init_cache(self, batch_size: int, max_len: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        L, KV, Dh = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+        kv = {"k": jnp.zeros((L, batch_size, max_len, KV, Dh), dtype),
+              "v": jnp.zeros((L, batch_size, max_len, KV, Dh), dtype)}
+        return {"kv": kv}
+
+    def abstract_cache(self, batch_size: int, max_len: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        L, KV, Dh = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+        sds = jax.ShapeDtypeStruct
+        kv = {"k": sds((L, batch_size, max_len, KV, Dh), dtype),
+              "v": sds((L, batch_size, max_len, KV, Dh), dtype)}
+        return {"kv": kv}
+
+
+def batch_dim(batch):
+    for k in ("tokens", "embeds"):
+        if k in batch:
+            return batch[k].shape[0]
+    raise KeyError("batch has neither tokens nor embeds")

@@ -1,0 +1,116 @@
+"""xLSTM blocks: mLSTM (matrix memory, exponential gating) and sLSTM
+(scalar memory, recurrent only).
+
+mLSTM is computed as chunked gated linear attention: the normalizer state
+n_t = f n_{t-1} + i k_t is carried exactly by appending a constant-one
+channel to the value stream (so chunked == recurrent, asserted in tests);
+stabilization is chunk-local in fp32 with input gates clipped (DESIGN.md
+notes this simplification of the paper's running-max m_t).  sLSTM has no
+parallel form and scans over time.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import rms_norm
+from .mamba2 import ssd_chunked
+
+
+def mlstm_mixer(q, k, v, i_gate, f_gate, chunk: int = 256, state=None):
+    """q,k,v: (B, L, H, Dh); i_gate/f_gate: (B, L, H) raw (pre-activation).
+    Returns (h (B,L,H,Dh), final_state (B,H,Dh,Dh+1))."""
+    B, L, H, Dh = q.shape
+    a_log = jax.nn.log_sigmoid(f_gate.astype(jnp.float32))        # log f_t
+    ig = jnp.clip(i_gate.astype(jnp.float32), -10.0, 10.0)
+    # fold exp input gate into k (chunk-local stabilization happens in fp32
+    # through the ssd decay path); append ones channel to v for normalizer n
+    k_eff = k * jnp.exp(ig)[..., None].astype(k.dtype)
+    v_ext = jnp.concatenate([v, jnp.ones_like(v[..., :1])], axis=-1)
+    # per-head B/C streams -> run ssd per head by folding H into batch
+    scale = 1.0 / (Dh ** 0.5)
+    xh = v_ext.transpose(0, 2, 1, 3).reshape(B * H, L, 1, Dh + 1)
+    al = a_log.transpose(0, 2, 1).reshape(B * H, L, 1)
+    Bm = k_eff.transpose(0, 2, 1, 3).reshape(B * H, L, Dh)
+    Cm = (q * scale).transpose(0, 2, 1, 3).reshape(B * H, L, Dh)
+    Lp = -(-L // chunk) * chunk
+    if Lp != L:
+        xh = jnp.pad(xh, ((0, 0), (0, Lp - L), (0, 0), (0, 0)))
+        al = jnp.pad(al, ((0, 0), (0, Lp - L), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, Lp - L), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, Lp - L), (0, 0)))
+    h0 = None
+    if state is not None:
+        h0 = state.reshape(B * H, 1, Dh, Dh + 1)
+    y, hf = ssd_chunked(xh, al, Bm, Cm, min(chunk, Lp), h0=h0)
+    y = y[:, :L, 0].reshape(B, H, L, Dh + 1).transpose(0, 2, 1, 3)
+    num, den = y[..., :Dh], y[..., Dh:]
+    h = num / jnp.maximum(jnp.abs(den), 1.0)
+    return h, hf.reshape(B, H, Dh, Dh + 1)
+
+
+def mlstm_block(p, x, cfg, state=None, chunk: int = 256):
+    """p: ln, w_up (D, 2*Di), conv_w, wq/wk/wv (Di, Di), w_i/w_f (Di, H),
+    gn, w_down (Di, D).  Di = 2*D, H = n_heads.
+    state: (mixer_state (B,H,Dh,Dh+1), conv_state (B, 3, Di)) for decode."""
+    B, L, D = x.shape
+    Di = 2 * D
+    H = cfg.n_heads
+    Dh = Di // H
+    u = jnp.einsum("bld,de->ble", x, p["w_up"])
+    xu, zg = jnp.split(u, 2, axis=-1)                     # (B,L,Di) each
+    dconv = 4
+    mixer_state = conv_state = None
+    if state is not None:
+        mixer_state, conv_state = state
+    if conv_state is None:
+        hist = jnp.pad(xu, ((0, 0), (dconv - 1, 0), (0, 0)))
+    else:
+        hist = jnp.concatenate([conv_state, xu], axis=1)
+    conv = sum(hist[:, i:i + L] * p["conv_w"][i] for i in range(dconv))
+    conv = jax.nn.silu(conv)
+    new_conv_state = hist[:, L:L + dconv - 1]
+    q = jnp.einsum("ble,ef->blf", conv, p["wq"]).reshape(B, L, H, Dh)
+    k = jnp.einsum("ble,ef->blf", conv, p["wk"]).reshape(B, L, H, Dh)
+    v = jnp.einsum("ble,ef->blf", xu, p["wv"]).reshape(B, L, H, Dh)
+    ig = jnp.einsum("ble,eh->blh", conv, p["w_i"])
+    fg = jnp.einsum("ble,eh->blh", conv, p["w_f"]) + 3.0  # forget bias
+    h, st = mlstm_mixer(q, k, v, ig, fg, chunk=chunk, state=mixer_state)
+    h = rms_norm(h.reshape(B, L, Di), p["gn"], cfg.rms_eps)
+    out = jnp.einsum("ble,ed->bld", h * jax.nn.silu(zg), p["w_down"])
+    return out, (st, new_conv_state)
+
+
+def slstm_block(p, x, cfg, state=None):
+    """sLSTM: scalar-memory recurrent cell with exponential gating, H heads.
+    p: w_gates (D, 4*D) (i,f,z,o pre-activations), r_gates (H, Dh, 4*Dh)
+    recurrent, gn (D,), w_down (D, D).  state: (c, n, m, h_prev)."""
+    B, L, D = x.shape
+    H = cfg.n_heads
+    Dh = D // H
+    pre = jnp.einsum("bld,de->ble", x, p["w_gates"]).reshape(B, L, H, 4 * Dh)
+
+    def step(carry, pre_t):
+        c, n, m, h_prev = carry                            # (B,H,Dh) each
+        rec = jnp.einsum("bhd,hde->bhe", h_prev, p["r_gates"])
+        it, ft, zt, ot = jnp.split(pre_t + rec, 4, axis=-1)
+        it = it.astype(jnp.float32); ft = ft.astype(jnp.float32)
+        log_f = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(log_f + m, jnp.clip(it, -10., 10.))
+        i_s = jnp.exp(jnp.clip(it, -10., 10.) - m_new)
+        f_s = jnp.exp(log_f + m - m_new)
+        c_new = f_s * c + i_s * jnp.tanh(zt.astype(jnp.float32))
+        n_new = f_s * n + i_s
+        h_t = jax.nn.sigmoid(ot.astype(jnp.float32)) * c_new / \
+            jnp.maximum(jnp.abs(n_new), 1.0)
+        h_t = h_t.astype(x.dtype)
+        return (c_new, n_new, m_new, h_t), h_t
+
+    if state is None:
+        z = jnp.zeros((B, H, Dh), jnp.float32)
+        state = (z, z, z, jnp.zeros((B, H, Dh), x.dtype))
+    state, hs = jax.lax.scan(step, state, pre.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1).reshape(B, L, D)
+    h = rms_norm(h, p["gn"], cfg.rms_eps)
+    out = jnp.einsum("bld,de->ble", h, p["w_down"])
+    return out, state

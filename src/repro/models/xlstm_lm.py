@@ -1,0 +1,107 @@
+"""xLSTM LM: mLSTM blocks with an sLSTM block every `slstm_every` layers
+(xLSTM[7:1]-style).  Heterogeneous blocks -> layers are unrolled (depth 12
+for the assigned config; compile time is fine without scan)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamSpec as PS
+from .common import rms_norm
+from .config import ModelConfig
+from .transformer import TransformerLM
+from ..distributed.sharding import constrain
+from .xlstm import mlstm_block, slstm_block
+
+
+class XLSTMLM(TransformerLM):
+    def _kinds(self):
+        cfg = self.cfg
+        e = cfg.slstm_every
+        return ["slstm" if (e and (i % e) == e - 1) else "mlstm"
+                for i in range(cfg.n_layers)]
+
+    def param_specs(self):
+        cfg = self.cfg
+        D, V = cfg.d_model, cfg.vocab_padded
+        Di = 2 * D
+        H = cfg.n_heads
+        Dh_s = D // H
+        layers = []
+        for kind in self._kinds():
+            ln = {"ln": PS((D,), (None,), init="zeros")}
+            if kind == "mlstm":
+                layers.append({**ln,
+                    "w_up": PS((D, 2 * Di), ("data", "model")),
+                    "conv_w": PS((4, Di), (None, "model"), scale=0.5),
+                    "wq": PS((Di, Di), ("data", "model")),
+                    "wk": PS((Di, Di), ("data", "model")),
+                    "wv": PS((Di, Di), ("data", "model")),
+                    "w_i": PS((Di, H), ("model", None)),
+                    "w_f": PS((Di, H), ("model", None)),
+                    "gn": PS((Di,), (None,), init="zeros"),
+                    "w_down": PS((Di, D), ("model", "data")),
+                })
+            else:
+                layers.append({**ln,
+                    "w_gates": PS((D, 4 * D), ("data", "model")),
+                    "r_gates": PS((H, Dh_s, 4 * Dh_s), (None, None, None)),
+                    "gn": PS((D,), (None,), init="zeros"),
+                    "w_down": PS((D, D), ("data", "model")),
+                })
+        tree = {"embed": PS((V, D), ("model", "data"), scale=0.02),
+                "layers": tuple(layers),
+                "final_norm": PS((D,), (None,), init="zeros"),
+                "head": PS((D, V), ("data", "model"))}
+        return tree
+
+    def forward(self, params, batch, mode="train", cache=None):
+        cfg = self.cfg
+        from .common import cast_tree
+        params = cast_tree(params, self.compute_dtype)
+        x = self._embed(params, batch)
+        kinds = self._kinds()
+        new_states = []
+        for i, (kind, p) in enumerate(zip(kinds, params["layers"])):
+            st = cache["states"][i] if mode == "decode" else None
+            h = rms_norm(x, p["ln"], cfg.rms_eps)
+            fn = mlstm_block if kind == "mlstm" else slstm_block
+            if cfg.remat and mode == "train":
+                blk = jax.checkpoint(
+                    lambda p_, h_, fn=fn: fn(p_, h_, cfg, None))
+                out, st_new = blk(p, h)
+            else:
+                out, st_new = fn(p, h, cfg, st)
+            x = constrain(x + out, "batch", None, None)
+            new_states.append(st_new)
+        x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+        logits = constrain(jnp.einsum("bsd,dv->bsv", x, params["head"]),
+                           "batch", None, "model")
+        new_cache = None
+        if mode in ("prefill", "decode"):
+            new_cache = {"states": tuple(new_states)}
+        return logits, jnp.float32(0), new_cache
+
+    def abstract_cache(self, batch_size: int, max_len: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        D = cfg.d_model
+        Di, H = 2 * D, cfg.n_heads
+        Dh, Dh_s = Di // H, D // H
+        sds = jax.ShapeDtypeStruct
+        states = []
+        for kind in self._kinds():
+            if kind == "mlstm":
+                states.append((sds((batch_size, H, Dh, Dh + 1), dtype),
+                               sds((batch_size, 3, Di), dtype)))
+            else:
+                f32 = jnp.float32
+                states.append((sds((batch_size, H, Dh_s), f32),
+                               sds((batch_size, H, Dh_s), f32),
+                               sds((batch_size, H, Dh_s), f32),
+                               sds((batch_size, H, Dh_s), dtype)))
+        return {"states": tuple(states)}
+
+    def init_cache(self, batch_size: int, max_len: int, dtype=jnp.bfloat16):
+        return jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype),
+            self.abstract_cache(batch_size, max_len, dtype))

@@ -1,0 +1,179 @@
+"""Zamba2-style hybrid LM: Mamba2 backbone + one *shared* attention block
+applied every `shared_attn_every` layers (Zamba2's parameter-sharing trick;
+the shared block sees concat(hidden, original embedding) through a fusion
+projection — simplified from the paper's per-invocation LoRA, see DESIGN)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .attention import attn_block
+from .common import ParamSpec as PS
+from .common import abstract_tree, init_tree, rms_norm, spec_tree
+from .config import ModelConfig
+from .mamba2 import mamba2_block
+from .transformer import TransformerLM, _attn_specs, _mlp_specs, mlp_ffn
+from ..distributed.sharding import constrain
+
+
+class Zamba2LM(TransformerLM):
+    def param_specs(self):
+        cfg = self.cfg
+        L, D, V = cfg.n_layers, cfg.d_model, cfg.vocab_padded
+        d_in = cfg.ssm_expand * D
+        N, P = cfg.ssm_state, cfg.ssm_head_dim
+        H = d_in // P
+        conv_ch = d_in + 2 * N
+        e_total = 2 * d_in + 2 * N + H
+        layers = {
+            "ln": PS((L, D), (None, None), init="zeros"),
+            "w_in": PS((L, D, e_total), (None, "data", "model")),
+            "conv_w": PS((L, cfg.ssm_conv, conv_ch), (None, None, "model"),
+                         scale=0.5),
+            "dt_bias": PS((L, H), (None, "model"), init="zeros"),
+            "A_log": PS((L, H), (None, "model"), init="zeros"),
+            "D": PS((L, H), (None, "model"), init="ones"),
+            "norm_w": PS((L, d_in), (None, "model"), init="zeros"),
+            "w_out": PS((L, d_in, D), (None, "model", "data")),
+        }
+        shared = {
+            "fuse": PS((2 * D, D), ("data", "model")),
+            "ln1": PS((D,), (None,), init="zeros"),
+            "ln2": PS((D,), (None,), init="zeros"),
+            "attn": _att_unstack(_attn_specs(cfg, 1)),
+            "mlp": _att_unstack(_mlp_specs(cfg, 1)),
+        }
+        return {"embed": PS((V, D), ("model", "data"), scale=0.02),
+                "layers": layers, "shared": shared,
+                "final_norm": PS((D,), (None,), init="zeros"),
+                "head": PS((D, V), ("data", "model"))}
+
+    @property
+    def n_apps(self):
+        return self.cfg.n_layers // self.cfg.shared_attn_every
+
+    def _shared_block(self, params, x, x0, positions, pos_1d, cfg,
+                      cache, cache_pos):
+        h = jnp.concatenate([x, x0], axis=-1)
+        h = jnp.einsum("bsd,df->bsf", h, params["fuse"].astype(x.dtype))
+        a, cache_out = attn_block(params["attn"],
+                                  rms_norm(h, params["ln1"], cfg.rms_eps),
+                                  positions, pos_1d, cfg, 0, cache, cache_pos)
+        h = h + a
+        h = h + mlp_ffn(params["mlp"],
+                        rms_norm(h, params["ln2"], cfg.rms_eps), cfg)
+        return x + h, cache_out
+
+    def forward(self, params, batch, mode="train", cache=None):
+        cfg = self.cfg
+        from .common import cast_tree
+        params = cast_tree(params, self.compute_dtype)
+        x = self._embed(params, batch)
+        B, S, D = x.shape
+        x0 = x
+        cache_pos = batch.get("cache_pos") if mode == "decode" else None
+        positions = self._positions(batch, S, cache_pos)
+        pos_1d = positions[0] if positions.ndim == 2 else positions[0, 0]
+        every = cfg.shared_attn_every
+        A = self.n_apps
+        L = cfg.n_layers
+
+        if mode == "decode":
+            kv_all = cache["kv"]            # {'k': (A,B,Sc,KV,Dh), 'v': ...}
+            Sc = kv_all["k"].shape[2]
+        else:
+            KV, Dh = cfg.n_kv_heads, cfg.head_dim
+            Sc = S
+            kv_all = {"k": jnp.zeros((A, B, S, KV, Dh), x.dtype),
+                      "v": jnp.zeros((A, B, S, KV, Dh), x.dtype)}
+
+        def body(carry, xs):
+            x, kv_all = carry
+            if mode == "decode":
+                p, idx, ssm_st, conv_st = xs
+            else:
+                p, idx = xs
+                ssm_st = conv_st = None
+            h = rms_norm(x, p["ln"], cfg.rms_eps)
+            m, (ssm_new, conv_new) = mamba2_block(p, h, cfg, ssm_st, conv_st)
+            x = constrain(x + m, "batch", None, None)
+
+            def apply_shared(args):
+                x, kv_all = args
+                a_idx = idx // every
+                lc = jax.tree_util.tree_map(
+                    lambda c: jax.lax.dynamic_index_in_dim(c, a_idx, 0,
+                                                           keepdims=False),
+                    kv_all)
+                x, cache_out = self._shared_block(
+                    params["shared"], x, x0, positions, pos_1d, cfg,
+                    lc if mode == "decode" else None, cache_pos)
+                if mode != "train":
+                    kv_all = jax.tree_util.tree_map(
+                        lambda c, n: jax.lax.dynamic_update_index_in_dim(
+                            c, n.astype(c.dtype), a_idx, 0), kv_all, cache_out)
+                return (x, kv_all)
+
+            is_app = (idx % every) == (every - 1)
+            x, kv_all = jax.lax.cond(is_app, apply_shared, lambda a: a,
+                                     (x, kv_all))
+            ys = (ssm_new, conv_new) if mode != "train" else None
+            return (x, kv_all), ys
+
+        if cfg.remat and mode == "train":
+            body = jax.checkpoint(body)
+
+        idxs = jnp.arange(L, dtype=jnp.int32)
+        if mode == "decode":
+            xs = (params["layers"], idxs, cache["ssm"], cache["conv"])
+        else:
+            xs = (params["layers"], idxs)
+        if cfg.scan_layers:
+            (x, kv_all), states = jax.lax.scan(body, (x, kv_all), xs)
+        else:
+            carry, ys = (x, kv_all), []
+            for i in range(L):
+                xi = jax.tree_util.tree_map(lambda a: a[i], xs)
+                carry, y = body(carry, xi)
+                ys.append(y)
+            (x, kv_all) = carry
+            states = (jax.tree_util.tree_map(lambda *a: jnp.stack(a), *ys)
+                      if mode != "train" else None)
+
+        x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+        logits = constrain(jnp.einsum("bsd,dv->bsv", x, params["head"]),
+                           "batch", None, "model")
+        new_cache = None
+        if mode in ("prefill", "decode"):
+            ssm, conv = states
+            new_cache = {"kv": kv_all, "ssm": ssm, "conv": conv}
+        return logits, jnp.float32(0), new_cache
+
+    def init_cache(self, batch_size: int, max_len: int, dtype=jnp.bfloat16):
+        return jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype),
+            self.abstract_cache(batch_size, max_len, dtype))
+
+    def abstract_cache(self, batch_size: int, max_len: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        d_in = cfg.ssm_expand * cfg.d_model
+        N, P = cfg.ssm_state, cfg.ssm_head_dim
+        H = d_in // P
+        conv_ch = d_in + 2 * N
+        L, A = cfg.n_layers, self.n_apps
+        KV, Dh = cfg.n_kv_heads, cfg.head_dim
+        sds = jax.ShapeDtypeStruct
+        return {
+            "kv": {"k": sds((A, batch_size, max_len, KV, Dh), dtype),
+                   "v": sds((A, batch_size, max_len, KV, Dh), dtype)},
+            "ssm": sds((L, batch_size, H, N, P), dtype),
+            "conv": sds((L, batch_size, cfg.ssm_conv - 1, conv_ch), dtype),
+        }
+
+
+def _att_unstack(specs):
+    """Drop the leading stacked-layer dim from a spec tree (shared block)."""
+    return jax.tree_util.tree_map(
+        lambda ps: PS(ps.shape[1:], ps.spec[1:], init=ps.init),
+        specs, is_leaf=lambda x: isinstance(x, PS))

@@ -1,0 +1,41 @@
+"""Elastic scaling: rebuild a mesh from currently-available devices and
+re-place (reshard) training state onto it.
+
+Checkpoints are logical (checkpoint/ckpt.py), so scale-up/down =
+restore under the new mesh's shardings; live resharding (no checkpoint)
+is a device_put with the new NamedShardings."""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding
+
+
+def best_mesh_shape(n_devices: int, model_parallel: int = 0):
+    """Factor available devices into (data, model); prefers the largest
+    model axis <= 16 that divides, unless pinned."""
+    if model_parallel:
+        assert n_devices % model_parallel == 0
+        return (n_devices // model_parallel, model_parallel)
+    for m in (16, 8, 4, 2, 1):
+        if n_devices % m == 0:
+            return (n_devices // m, m)
+    return (n_devices, 1)
+
+
+def make_elastic_mesh(model_parallel: int = 0):
+    n = len(jax.devices())
+    shape = best_mesh_shape(n, model_parallel)
+    return jax.make_mesh(shape, ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def reshard(tree, pspec_tree, mesh):
+    """Place `tree` onto `mesh` under logical PartitionSpecs (axes that
+    don't divide are dropped by the caller's fit logic)."""
+    from ..launch.dryrun import fit_pspec
+
+    def place(x, sp):
+        spec = fit_pspec(x.shape, tuple(sp), mesh)
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    return jax.tree_util.tree_map(place, tree, pspec_tree)

@@ -1,0 +1,55 @@
+"""Distributed alignment step: the paper's batched aligner sharded over
+the production mesh (embarrassingly data-parallel across pairs; stats are
+psum'd by GSPMD when reduced).  Used by the alignment service and the
+aligner dry-run/roofline cell."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..core.config import AlignerConfig
+from ..core.windowing import align_pairs, self_tail_width
+
+
+def align_step(reads, read_len, refs, ref_len, *, cfg: AlignerConfig,
+               max_read_len: int):
+    out = align_pairs(reads, read_len, refs, ref_len, cfg=cfg,
+                      max_read_len=max_read_len)
+    # summary stats reduce across the whole batch (collectives over dp axes)
+    summary = {
+        "n_failed": jnp.sum(out["failed"].astype(jnp.int32)),
+        "total_edits": jnp.sum(out["dist"]),
+        "total_ops": jnp.sum(out["n_ops"]),
+    }
+    return out, summary
+
+
+def make_align_step(cfg: AlignerConfig, max_read_len: int, mesh):
+    """out_shardings are explicit: without them GSPMD replicates the CIGAR
+    buffer to every device (a ~1.7 GB all-gather for 128k pairs — §Perf
+    aligner iteration in EXPERIMENTS.md)."""
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    bsh = NamedSharding(mesh, P(dp, None))
+    vsh = NamedSharding(mesh, P(dp))
+    rep = NamedSharding(mesh, P())
+    out_sh = ({"ops": bsh, "n_ops": vsh, "dist": vsh, "failed": vsh,
+               "read_consumed": vsh, "ref_consumed": vsh,
+               "levels_run_total": rep, "n_main_windows": rep},
+              {"n_failed": rep, "total_edits": rep, "total_ops": rep})
+    fn = partial(align_step, cfg=cfg, max_read_len=max_read_len)
+    return jax.jit(fn, in_shardings=(bsh, vsh, bsh, vsh),
+                   out_shardings=out_sh)
+
+
+def align_input_specs(batch: int, read_len: int, cfg: AlignerConfig):
+    """ShapeDtypeStructs for the aligner dry-run cell."""
+    wt = self_tail_width(cfg)
+    Lr = read_len + cfg.W + 1
+    Lf = int(read_len * 1.3) + cfg.W + wt + 1
+    sds = jax.ShapeDtypeStruct
+    return (sds((batch, Lr), jnp.uint8), sds((batch,), jnp.int32),
+            sds((batch, Lf), jnp.uint8), sds((batch,), jnp.int32))

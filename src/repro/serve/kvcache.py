@@ -1,0 +1,34 @@
+"""KV-cache utilities: pad prefill caches to serving length, greedy decode
+loop used by tests and the serving example."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pad_cache(cache, to_len: int):
+    """Pad the sequence axis (axis 2 of kv leaves) up to `to_len`."""
+    def one(path, x):
+        keys = [getattr(k, "key", None) for k in path]
+        if "kv" in keys and x.ndim == 5:
+            pad = to_len - x.shape[2]
+            if pad > 0:
+                return jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        return x
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def greedy_generate(model, params, tokens, n_new: int, max_len: int):
+    """prefill + n_new greedy decode steps.  tokens: (B, S0)."""
+    B, S0 = tokens.shape
+    logits, cache = model.prefill(params, {"tokens": tokens})
+    cache = pad_cache(cache, max_len)
+    out = []
+    tok = jnp.argmax(logits[:, -1, :model.cfg.vocab], axis=-1)[:, None]
+    for i in range(n_new):
+        out.append(tok)
+        logits, cache = model.decode_step(
+            params, {"tokens": tok.astype(jnp.int32),
+                     "cache_pos": jnp.int32(S0 + i)}, cache)
+        tok = jnp.argmax(logits[:, -1, :model.cfg.vocab], axis=-1)[:, None]
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,65 @@
+"""Train step factory: value_and_grad -> clip -> AdamW, with optional
+gradient accumulation (scan over microbatches).  Data parallelism is
+GSPMD-implicit: the batch is sharded over ('pod','data'), so gradient
+all-reduces are inserted by the partitioner."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..optim.adamw import AdamWConfig, adamw_update, init_opt_state
+
+
+def make_train_step(model, opt_cfg: AdamWConfig, grad_accum: int = 1):
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return loss, metrics
+
+    def train_step(state, batch):
+        params, opt = state["params"], state["opt"]
+        if grad_accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            def micro(carry, mb):
+                acc, lsum = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                acc = jax.tree_util.tree_map(jnp.add, acc, g)
+                return (acc, lsum + l), None
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            mbs = jax.tree_util.tree_map(
+                lambda x: x.reshape(grad_accum, x.shape[0] // grad_accum,
+                                    *x.shape[1:]), batch)
+            (grads, lsum), _ = jax.lax.scan(micro, (zeros, jnp.float32(0)), mbs)
+            grads = jax.tree_util.tree_map(lambda g: g / grad_accum, grads)
+            loss = lsum / grad_accum
+            metrics = {}
+        new_params, new_opt, om = adamw_update(params, grads, opt, opt_cfg)
+        out_metrics = {"loss": loss, **om}
+        return {"params": new_params, "opt": new_opt}, out_metrics
+
+    return train_step
+
+
+def init_state(model, rng, dtype=jnp.float32):
+    params = model.init(rng, dtype)
+    return {"params": params, "opt": init_opt_state(params)}
+
+
+def abstract_state(model, dtype=jnp.float32):
+    params = model.abstract_params(dtype)
+    sds = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    return {"params": params,
+            "opt": {"m": jax.tree_util.tree_map(sds, params),
+                    "v": jax.tree_util.tree_map(sds, params),
+                    "step": jax.ShapeDtypeStruct((), jnp.int32)}}
+
+
+def state_partition_specs(model):
+    from jax.sharding import PartitionSpec as P
+    pspec = model.partition_specs()
+    return {"params": pspec,
+            "opt": {"m": pspec, "v": pspec, "step": P()}}

@@ -1,0 +1,24 @@
+import numpy as np
+import pytest
+
+
+def mutate_seq(p, n_edits, rng, extend_to=None):
+    """Apply n random edits to code array p; optionally pad/trim to a length."""
+    t = list(p)
+    for _ in range(n_edits):
+        r = rng.random()
+        pos = int(rng.integers(0, max(1, len(t))))
+        if r < 0.4 and t:
+            t[pos] = int(rng.integers(0, 4))
+        elif r < 0.7:
+            t.insert(pos, int(rng.integers(0, 4)))
+        elif len(t) > 1:
+            del t[pos]
+    if extend_to is not None:
+        t = (t + list(rng.integers(0, 4, extend_to)))[:extend_to]
+    return np.array(t, dtype=np.uint8)
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(1234)

@@ -1,0 +1,62 @@
+"""Myers (Edlib-like) and banded affine DP (KSW2-like) vs oracles."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.baselines.dp import affine_traceback, banded_affine_dist
+from repro.baselines.myers import banded_traceback, myers_distance
+from repro.core.oracle import levenshtein, validate_cigar
+
+seq = st.lists(st.integers(0, 3), min_size=1, max_size=70)
+
+
+@given(seq, seq)
+@settings(max_examples=50, deadline=None)
+def test_myers_matches_levenshtein(p, t):
+    m_pad, n_pad = 96, 96
+    pat = jnp.array([p + [255] * (m_pad - len(p))], jnp.int32)
+    txt = jnp.array([t + [9] * (n_pad - len(t))], jnp.int32)
+    d = myers_distance(pat, txt, jnp.array([len(p)], jnp.int32),
+                       jnp.array([len(t)], jnp.int32), nw=3, n=n_pad)
+    assert int(d[0]) == levenshtein(np.array(p), np.array(t))
+
+
+@given(seq, seq)
+@settings(max_examples=40, deadline=None)
+def test_banded_dp_unit_costs_match_levenshtein(p, t):
+    bw = 70
+    m_pad, n_pad = 70, 70
+    p, t = p[:m_pad], t[:n_pad]
+    pat = jnp.array([p + [255] * (m_pad - len(p))], jnp.int32)
+    txt = jnp.array([t + [9] * (n_pad - len(t))], jnp.int32)
+    d = banded_affine_dist(pat, txt, jnp.array([len(p)], jnp.int32),
+                           jnp.array([len(t)], jnp.int32), bw=bw, m=m_pad)
+    assert int(d[0]) == levenshtein(np.array(p), np.array(t))
+
+
+def test_affine_costs_prefer_long_gaps():
+    # with gap-open cost, one long gap beats two short ones
+    p = np.array([0, 1, 2, 3, 0, 1, 2, 3], np.int32)
+    t = np.array([0, 1, 2, 3, 2, 2, 0, 1, 2, 3], np.int32)  # 2 inserted
+    pat = jnp.array([list(p) + [255] * 8]); txt = jnp.array([list(t) + [9] * 6])
+    d = banded_affine_dist(pat, txt, jnp.array([8]), jnp.array([10]),
+                           bw=8, m=16, sub=4, gapo=6, gape=2)
+    # one gap of len2: 6 + 2*2 = 10
+    assert int(d[0]) == 10
+
+
+def test_baseline_tracebacks_valid(rng):
+    for _ in range(5):
+        p = rng.integers(0, 4, 50).astype(np.uint8)
+        t = list(p)
+        for _ in range(6):
+            t.insert(int(rng.integers(0, len(t))), int(rng.integers(0, 4)))
+        t = np.array(t, np.uint8)
+        ed = levenshtein(p, t)
+        d1, ops1 = banded_traceback(p, t, k=12)
+        assert d1 == ed
+        validate_cigar(p, t, ops1, d1)
+        d2, ops2 = affine_traceback(p, t, bw=12)
+        assert d2 == ed
+        validate_cigar(p, t, ops2, d2)

@@ -1,0 +1,65 @@
+"""Property tests for the multi-word bitvector primitives."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.bitops import (WORD_BITS, build_pm, extract_window, get_bit,
+                               n_words, ones_below, shift1, window_bit)
+
+
+def to_int(words):
+    """(NW,) uint32 LSW-first -> python int."""
+    return sum(int(w) << (32 * i) for i, w in enumerate(np.asarray(words)))
+
+
+@given(st.integers(1, 4), st.lists(st.integers(0, 2**32 - 1), min_size=1,
+                                   max_size=4), st.integers(0, 1))
+@settings(max_examples=60, deadline=None)
+def test_shift1_matches_python_int(nw, words, carry):
+    words = (words + [0] * nw)[:nw]
+    v = jnp.array(words, jnp.uint32)
+    got = to_int(shift1(v, carry))
+    want = ((to_int(words) << 1) | carry) & ((1 << (32 * nw)) - 1)
+    assert got == want
+
+
+@given(st.integers(1, 3), st.integers(0, 95))
+@settings(max_examples=40, deadline=None)
+def test_ones_below_and_get_bit(nw, d):
+    d = d % (nw * 32 + 1)
+    v = ones_below(jnp.int32(d), nw)
+    x = to_int(v)
+    for i in range(nw * 32):
+        bit = (x >> i) & 1
+        assert bit == (0 if i < d else 1)
+        assert int(get_bit(v, jnp.int32(i))) == bit
+
+
+@given(st.lists(st.integers(0, 3), min_size=1, max_size=80))
+@settings(max_examples=40, deadline=None)
+def test_build_pm_semantics(pat):
+    nw = n_words(len(pat))
+    pm = build_pm(jnp.array([pat], jnp.int32), nw)  # (1, 4, NW)
+    for c in range(4):
+        x = to_int(pm[0, c])
+        for i in range(nw * 32):
+            want = 0 if (i < len(pat) and pat[i] == c) else 1
+            assert (x >> i) & 1 == want
+
+
+@given(st.integers(2, 4), st.data())
+@settings(max_examples=40, deadline=None)
+def test_extract_window_roundtrip(nw, data):
+    words = data.draw(st.lists(st.integers(0, 2**32 - 1), min_size=nw,
+                               max_size=nw))
+    nwb = data.draw(st.integers(1, nw - 1))
+    base = data.draw(st.integers(0, 32 * (nw - nwb)))
+    v = jnp.array(words, jnp.uint32)
+    win = extract_window(v, jnp.int32(base), nwb)
+    x = to_int(words)
+    want = (x >> base) & ((1 << (32 * nwb)) - 1)
+    assert to_int(win) == want
+    # window_bit reads absolute indices
+    for off in (0, 5, 32 * nwb - 1):
+        assert int(window_bit(win, base, base + off)) == (want >> off) & 1

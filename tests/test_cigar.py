@@ -1,0 +1,24 @@
+"""CIGAR packing roundtrip + RLE string."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.cigar import ops_to_string, pack_ops, unpack_ops
+from repro.core.traceback import OP_NONE
+
+
+@given(st.lists(st.integers(0, 3), min_size=0, max_size=70))
+@settings(max_examples=40, deadline=None)
+def test_pack_unpack_roundtrip(ops):
+    L = 80
+    row = np.full(L, OP_NONE, np.uint8)
+    row[:len(ops)] = ops
+    packed = pack_ops(jnp.array(row[None]))
+    out = unpack_ops(np.asarray(packed), np.array([len(ops)]))[0]
+    np.testing.assert_array_equal(out, np.array(ops, np.uint8))
+
+
+def test_rle_string():
+    assert ops_to_string(np.array([0, 0, 0, 1, 3, 3, 2])) == "3=1X2D1I"
+    assert ops_to_string(np.array([], np.uint8)) == ""

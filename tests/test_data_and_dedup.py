@@ -1,0 +1,53 @@
+"""Data pipeline: simulator statistics, chains, GenASM-based dedup."""
+import numpy as np
+import pytest
+
+from repro.core.oracle import levenshtein
+from repro.data.dedup import dedup_filter, near_duplicates, tokens_to_dna
+from repro.data.genome import (ReadSimConfig, candidate_chains, mutate,
+                               simulate_reads, synth_genome)
+
+
+def test_simulator_error_rate_matches_config():
+    g = synth_genome(120_000, seed=1)
+    cfg = ReadSimConfig(read_len=2000, error_rate=0.10, seed=2)
+    rs = simulate_reads(g, 4, cfg)
+    rates = []
+    for r, seg in zip(rs.reads, rs.ref_segments):
+        ed = levenshtein(r[:500], seg[:500 + 40])
+        # global distance of prefixes overestimates slightly (tail gaps)
+        rates.append(ed / 500)
+    assert 0.05 < np.mean(rates) < 0.22
+
+
+def test_chains_contain_true_locus_and_decoys():
+    g = synth_genome(50_000, seed=3)
+    rs = simulate_reads(g, 3, ReadSimConfig(read_len=300, seed=4))
+    chains = candidate_chains(g, rs, decoys_per_read=2)
+    assert len(chains) == 9
+    # true locus segments match the simulator's
+    assert all(np.array_equal(chains[3 * i][1], rs.ref_segments[i])
+               for i in range(3))
+
+
+def test_tokens_to_dna_alphabet():
+    t = np.arange(1000)
+    d = tokens_to_dna(t)
+    assert d.min() >= 0 and d.max() <= 3
+    # hash should spread
+    assert len({tuple(d[i:i + 4]) for i in range(0, 996, 4)}) > 100
+
+
+def test_dedup_finds_near_duplicates():
+    rng = np.random.default_rng(5)
+    base = rng.integers(0, 30_000, 400)
+    near = base.copy()
+    near[::50] = rng.integers(0, 30_000, len(near[::50]))  # ~2% token edits
+    other = rng.integers(0, 30_000, 400)
+    seqs = [base, near, other]
+    dups = near_duplicates(seqs, max_rate=0.15)
+    pairs = {(i, j) for i, j, _ in dups}
+    assert (0, 1) in pairs
+    assert (0, 2) not in pairs and (1, 2) not in pairs
+    keep = dedup_filter(seqs, max_rate=0.15)
+    assert keep == [0, 2]

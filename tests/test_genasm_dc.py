@@ -1,0 +1,56 @@
+"""GenASM-DC == Levenshtein level sets (the exactness claim both fill
+orders are tested against)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.config import AlignerConfig
+from repro.core.genasm import dc_dmajor, dc_jmajor
+from repro.core.oracle import levenshtein
+from tests.conftest import mutate_seq
+
+seq = st.lists(st.integers(0, 3), min_size=1, max_size=48)
+
+
+@given(seq, seq, st.integers(1, 12))
+@settings(max_examples=60, deadline=None)
+def test_jmajor_distance_matches_oracle(p, t, k):
+    m_pad = 64
+    pat = jnp.array([p + [255] * (m_pad - len(p))], jnp.int32)
+    txt = jnp.array([t + [9] * (m_pad - len(t))], jnp.int32)
+    res = dc_jmajor(pat, txt, jnp.array([len(p)]), jnp.array([len(t)]),
+                    k=k, n=m_pad, nw=2, store="and")
+    ed = levenshtein(np.array(p), np.array(t))
+    want = ed if ed <= k else k + 1
+    assert int(res.dist[0]) == want
+
+
+@pytest.mark.parametrize("W,k", [(16, 3), (32, 9), (64, 12), (96, 15)])
+def test_dmajor_matches_oracle_square(W, k, rng):
+    cfg = AlignerConfig(W=W, O=max(1, W // 3), k=k)
+    B = 12
+    pats, txts, eds = [], [], []
+    for _ in range(B):
+        p = rng.integers(0, 4, W).astype(np.uint8)
+        t = mutate_seq(p, int(rng.integers(0, k + 3)), rng, extend_to=W)
+        pats.append(p); txts.append(t)
+        eds.append(levenshtein(p, t))
+    res = dc_dmajor(jnp.array(np.stack(pats)), jnp.array(np.stack(txts)),
+                    cfg=cfg)
+    want = np.array([e if e <= k else k + 1 for e in eds])
+    assert (np.array(res.dist) == want).all()
+
+
+def test_early_termination_stops_levels(rng):
+    cfg = AlignerConfig(W=32, O=12, k=12, early_term=True)
+    p = rng.integers(0, 4, 32).astype(np.uint8)
+    t = p.copy()  # identical -> distance 0
+    res = dc_dmajor(jnp.array([p] * 4), jnp.array([t] * 4), cfg=cfg)
+    assert int(res.dist[0]) == 0
+    assert int(res.levels_run) == 1      # level 0 solved it; ET stopped
+    cfg2 = AlignerConfig(W=32, O=12, k=12, early_term=False)
+    res2 = dc_dmajor(jnp.array([p] * 4), jnp.array([t] * 4), cfg=cfg2)
+    assert int(res2.levels_run) == cfg2.k + 1
+    assert int(res2.dist[0]) == 0

@@ -1,0 +1,87 @@
+"""Traceback: the paper's equivalence claims — edges4 (unimproved), 'and'
+(SENE) and 'band' (SENE+DENT) produce identical, valid, optimal CIGARs."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.config import AlignerConfig
+from repro.core.genasm import dc_dmajor, dc_jmajor
+from repro.core.oracle import levenshtein, validate_cigar
+from repro.core.cigar import ops_to_string
+from repro.core.traceback import traceback
+from tests.conftest import mutate_seq
+
+
+def make_batch(rng, W, k, B):
+    pats, txts, eds = [], [], []
+    for _ in range(B):
+        p = rng.integers(0, 4, W).astype(np.uint8)
+        t = mutate_seq(p, int(rng.integers(0, k + 2)), rng, extend_to=W)
+        pats.append(p); txts.append(t); eds.append(levenshtein(p, t))
+    return np.stack(pats), np.stack(txts), eds
+
+
+@pytest.mark.parametrize("W,k", [(32, 9), (64, 12)])
+def test_three_modes_identical_cigars(W, k, rng):
+    """Full traceback for the full-storage modes ('edges4' vs SENE 'and')
+    must be optimal + identical; 'band' (DENT) stores only the columns the
+    *committed* walk can reach, so it is compared on the committed prefix
+    (its operating contract in the windowed pipeline)."""
+    B = 16
+    pats, txts, eds = make_batch(rng, W, k, B)
+    pat, txt = jnp.array(pats), jnp.array(txts)
+    wl = jnp.full((B,), W, jnp.int32)
+    MAXO, MAXS = 2 * W + k, 2 * W + k + 4
+    stride = W - W // 3
+    full, committed = {}, {}
+    for mode in ("edges4", "and", "band"):
+        cfg = AlignerConfig(W=W, O=W // 3, k=k, store=mode)
+        if mode == "band":
+            res = dc_dmajor(pat, txt, cfg=cfg)
+        else:
+            res = dc_jmajor(pat, txt, wl, wl, k=k, n=W, nw=cfg.nw, store=mode)
+        if mode != "band":
+            tb = traceback(res.store, pat, txt, wl, wl, res.dist,
+                           jnp.int32(10**6), cfg=cfg, mode=mode,
+                           max_ops=MAXO, max_steps=MAXS)
+            assert bool(np.array(tb["ok"]).all()), f"{mode}: invariant"
+            full[mode] = []
+            for b in range(B):
+                if eds[b] <= k:
+                    assert int(res.dist[b]) == eds[b]
+                    ops = np.array(tb["ops"])[b][:int(tb["n_ops"][b])]
+                    # ops are front-first over REVERSED windows
+                    validate_cigar(pats[b][::-1], txts[b][::-1], ops,
+                                   expected_dist=eds[b])
+                    full[mode].append(ops_to_string(ops))
+                else:
+                    full[mode].append(None)
+        tbc = traceback(res.store, pat, txt, wl, wl, res.dist,
+                        jnp.int32(stride), cfg=cfg, mode=mode,
+                        max_ops=MAXO, max_steps=MAXS)
+        assert bool(np.array(tbc["ok"]).all()), f"{mode}: commit invariant"
+        committed[mode] = [
+            ops_to_string(np.array(tbc["ops"])[b][:int(tbc["n_ops"][b])])
+            if eds[b] <= k else None for b in range(B)]
+    assert full["edges4"] == full["and"]
+    assert committed["edges4"] == committed["and"] == committed["band"]
+
+
+def test_committed_traceback_stops_at_stride(rng):
+    W, k = 64, 12
+    cfg = AlignerConfig(W=W, O=24, k=k)
+    B = 8
+    pats, txts, eds = make_batch(rng, W, k, B)
+    pat, txt = jnp.array(pats), jnp.array(txts)
+    wl = jnp.full((B,), W, jnp.int32)
+    res = dc_dmajor(pat, txt, cfg=cfg)
+    tb = traceback(res.store, pat, txt, wl, wl, res.dist,
+                   jnp.int32(cfg.stride), cfg=cfg, mode="band",
+                   max_ops=W + k, max_steps=W + k + 4)
+    solved = np.array(res.dist) <= k
+    rd = np.array(tb["read_adv"])[solved]
+    rf = np.array(tb["ref_adv"])[solved]
+    assert (rd == cfg.stride).all()          # read advances exactly W-O
+    assert (np.abs(rf - rd) <= k).all()      # ref drift bounded by k
+    # committed cost consistency: cost <= window distance
+    assert (np.array(tb["cost"])[solved] <= np.array(res.dist)[solved]).all()

@@ -1,0 +1,68 @@
+"""Pallas kernel vs pure-jnp oracle: shape/dtype sweeps in interpret mode,
+plus the VMEM-fit claim."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.config import AlignerConfig
+from repro.core.oracle import levenshtein
+from repro.kernels.genasm_dc import vmem_bytes
+from repro.kernels.ops import genasm_dc_op
+from repro.kernels.ref import genasm_dc_ref
+from tests.conftest import mutate_seq
+
+
+def batch(rng, W, k, B):
+    pats, txts = [], []
+    for _ in range(B):
+        p = rng.integers(0, 4, W).astype(np.uint8)
+        txts.append(mutate_seq(p, int(rng.integers(0, k + 2)), rng,
+                               extend_to=W))
+        pats.append(p)
+    return jnp.array(np.stack(pats)), jnp.array(np.stack(txts))
+
+
+@pytest.mark.parametrize("W,k,tile", [(16, 3, 4), (32, 7, 8), (32, 15, 8),
+                                      (64, 12, 8), (96, 9, 4)])
+def test_kernel_matches_ref_sweep(W, k, tile, rng):
+    cfg = AlignerConfig(W=W, O=max(1, W // 3), k=k)
+    B = tile
+    pat, txt = batch(rng, W, k, B)
+    d_ref, band_ref, lvl_ref = genasm_dc_ref(pat, txt, cfg=cfg)
+    d_k, band_k, lvl_k = genasm_dc_op(pat, txt, cfg=cfg, tile=tile,
+                                      interpret=True)
+    assert (np.array(d_ref) == np.array(d_k)).all()
+    assert int(lvl_ref) == int(lvl_k)
+    L = int(lvl_ref)
+    br = np.array(band_ref)                      # (K1, ncb, nwb, B)
+    bk = np.array(band_k).transpose(0, 1, 3, 2)  # (K1, ncb, B, nwb) ->
+    assert (br[:L] == bk[:L]).all()
+
+
+def test_kernel_distances_match_oracle(rng):
+    cfg = AlignerConfig(W=32, O=12, k=9)
+    pat, txt = batch(rng, 32, 9, 8)
+    d_k, _, _ = genasm_dc_op(pat, txt, cfg=cfg, tile=8, interpret=True)
+    for b in range(8):
+        ed = levenshtein(np.array(pat[b]), np.array(txt[b]))
+        assert int(d_k[b]) == (ed if ed <= 9 else 10)
+
+
+def test_kernel_batch_padding(rng):
+    """non-multiple-of-tile batches are padded and trimmed."""
+    cfg = AlignerConfig(W=32, O=12, k=7)
+    pat, txt = batch(rng, 32, 7, 5)
+    d_k, band, _ = genasm_dc_op(pat, txt, cfg=cfg, tile=4, interpret=True)
+    assert d_k.shape == (5,)
+    assert band.shape[2] == 5
+
+
+def test_vmem_fit():
+    """The paper's claim: the compressed working set fits on-chip."""
+    for W, k, tile in ((64, 12, 512), (64, 16, 512), (128, 15, 256)):
+        cfg = AlignerConfig(W=W, O=W // 3 + 1, k=k)
+        assert vmem_bytes(cfg, tile) < 16 * 2**20, (W, k, tile)
+    # and the UNimproved table would not: 4 vectors x all columns x levels
+    cfg = AlignerConfig(W=64, O=24, k=16)
+    baseline_bytes = 64 * (cfg.k + 1) * 4 * cfg.nw * 4 * 512
+    assert baseline_bytes > 16 * 2**20

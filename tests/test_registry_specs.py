@@ -1,0 +1,60 @@
+"""Registry/input-spec invariants for all 40 (arch x shape) cells."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models.registry import (ARCH_IDS, SHAPES, get_config, get_model,
+                                   input_specs, shape_applicable)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("shape", list(SHAPES))
+def test_input_specs_well_formed(arch, shape):
+    cfg = get_config(arch)
+    if not shape_applicable(cfg, shape):
+        assert shape == "long_500k"
+        assert cfg.family not in ("ssm", "hybrid")
+        return
+    S, GB, kind = SHAPES[shape]
+    specs = input_specs(cfg, shape)
+    b = specs["batch"]
+    lead = next(iter(b.values())).shape[0]
+    if "positions" in b:
+        assert b["positions"].shape[0] == 3        # M-RoPE
+    if kind == "train":
+        assert "labels" in b
+        key = "embeds" if cfg.family == "audio" else "tokens"
+        assert b[key].shape[:2] == (GB, S)
+    elif kind == "prefill":
+        key = "embeds" if cfg.family == "audio" else "tokens"
+        assert b[key].shape[:2] == (GB, S)
+        assert "labels" not in b
+    else:
+        assert "cache" in specs
+        key = "embeds" if cfg.family == "audio" else "tokens"
+        assert b[key].shape[:2] == (GB, 1)
+        # every cache leaf is an abstract spec (no allocation)
+        for leaf in jax.tree_util.tree_leaves(specs["cache"]):
+            assert isinstance(leaf, jax.ShapeDtypeStruct)
+
+
+def test_long_500k_runs_only_for_subquadratic():
+    runs = [a for a in ARCH_IDS
+            if shape_applicable(get_config(a), "long_500k")]
+    assert sorted(runs) == ["xlstm-125m", "zamba2-2.7b"]
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_specs_internally_consistent(arch):
+    import math
+    from repro.models.common import ParamSpec
+    cfg = get_config(arch)
+    model = get_model(cfg)
+    specs = model.param_specs()
+    n = 0
+    for ps in jax.tree_util.tree_leaves(
+            specs, is_leaf=lambda x: isinstance(x, ParamSpec)):
+        assert isinstance(ps, ParamSpec)
+        assert len(ps.spec) == len(ps.shape)
+        n += math.prod(ps.shape)
+    assert n > 0
