@@ -1,7 +1,13 @@
 """Kernel-level table: per-window DC cost for the improved vs unimproved
 fills (jnp path timed on CPU; the Pallas kernel is validated in interpret
 mode — its on-chip working set is reported against the 16MB VMEM budget,
-which is the paper's 'entire DP table fits on-chip' claim)."""
+which is the paper's 'entire DP table fits on-chip' claim), plus the fused
+DC+TB kernel vs the split DC-kernel + host-traceback pipeline.
+
+Interpret-mode wall times on CPU do not model TPU speed; the
+architecturally meaningful fused-vs-split numbers are the HBM bytes per
+window (the band round-trip the fusion deletes), reported alongside.
+"""
 from __future__ import annotations
 
 import time
@@ -12,7 +18,9 @@ import numpy as np
 
 from repro.core.config import AlignerConfig
 from repro.core.genasm import dc_dmajor, dc_jmajor
-from repro.kernels.genasm_dc import vmem_bytes
+from repro.core.traceback import traceback
+from repro.kernels.genasm_dc import default_max_ops, default_max_steps, vmem_bytes
+from repro.kernels.ops import genasm_dc_op, genasm_tb_fused_op
 
 
 def _t(fn, reps=3):
@@ -46,4 +54,50 @@ def table(B=4096, W=64, k=12):
     ]
     derived = {"dc_speedup_jnp_cpu": t_base / t_imp,
                "vmem_fraction": vmem_bytes(cfg, 512) / (16 * 2**20)}
+
+    f_rows, f_derived = fused_vs_split(B=min(B, 256))
+    rows += f_rows
+    derived.update(f_derived)
+    return rows, derived
+
+
+def fused_vs_split(B=256, W=32, k=7, tile=128):
+    """Fused DC+TB kernel vs split DC kernel + host jnp traceback, both in
+    interpret mode (small geometry: interpret-mode walks are host loops).
+    Also reports the per-window band HBM round-trip the fusion removes."""
+    rng = np.random.default_rng(1)
+    cfg = AlignerConfig(W=W, O=max(1, W // 3), k=k)
+    pat = jnp.array(rng.integers(0, 4, (B, W)), jnp.int32)
+    txt = jnp.array(rng.integers(0, 4, (B, W)), jnp.int32)
+    wl = jnp.full((B,), W, jnp.int32)
+    stride = cfg.stride
+    max_ops, max_steps = default_max_ops(cfg), default_max_steps(cfg)
+
+    def split():
+        dist, band, lvl = genasm_dc_op(pat, txt, cfg=cfg, tile=tile)
+        tb = traceback({"Rb": band}, pat, txt, wl, wl, dist,
+                       jnp.int32(stride), cfg=cfg, mode="band",
+                       max_ops=max_ops, max_steps=max_steps)
+        return tb["n_ops"]
+
+    def fused():
+        return genasm_tb_fused_op(pat, txt, cfg=cfg, commit_limit=stride,
+                                  max_ops=max_ops, max_steps=max_steps,
+                                  tile=tile)["n_ops"]
+
+    t_split = _t(lambda: jax.block_until_ready(split()))
+    t_fused = _t(lambda: jax.block_until_ready(fused()))
+    # band round-trip bytes the fused kernel never moves (write + read back)
+    band_bytes = 2 * (k + 1) * cfg.ncols_band * cfg.nwb * 4
+    out_bytes = (max_ops + 8) * 4
+    rows = [
+        (f"kernel/split_dc_plus_host_tb_B{B}_W{W}", t_split * 1e6,
+         f"us_per_window={t_split/B*1e6:.2f}_interpret"),
+        (f"kernel/fused_dc_tb_B{B}_W{W}", t_fused * 1e6,
+         f"us_per_window={t_fused/B*1e6:.2f}_interpret"),
+        ("kernel/fused_hbm_bytes_saved_per_window", 0.0,
+         f"band_roundtrip={band_bytes}B_vs_ops_out={out_bytes}B"),
+    ]
+    derived = {"fused_vs_split_wall": t_split / t_fused,
+               "fused_hbm_traffic_ratio": out_bytes / (band_bytes + out_bytes)}
     return rows, derived

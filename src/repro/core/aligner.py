@@ -11,13 +11,13 @@ from .config import AlignerConfig
 from .oracle import OP_CHARS
 from .cigar import ops_to_string
 from .traceback import OP_NONE
-from .windowing import SENTINEL_REF, align_pairs, self_tail_width
+from .windowing import SENTINEL_READ, SENTINEL_REF, align_pairs, self_tail_width
 
 DNA = "ACGT"
 
 
 def encode(seq: str) -> np.ndarray:
-    lut = np.full(128, 255, np.uint8)
+    lut = np.full(128, SENTINEL_READ, np.uint8)
     for i, c in enumerate(DNA):
         lut[ord(c)] = i
         lut[ord(c.lower())] = i
@@ -37,12 +37,18 @@ class GenASMAligner:
     """Batch long-read aligner implementing the paper's improved GenASM.
 
     cfg.store/early_term select the variant (defaults = all three paper
-    improvements on).  Pairs whose per-window edit distance exceeds cfg.k
-    are retried with doubled k up to `rescue_rounds` times (host-side),
-    mirroring common practice for threshold-based aligners.
+    improvements on); cfg.backend (or the `backend` override) selects the
+    execution path — 'jnp', 'pallas' (kernel DC + host traceback) or
+    'pallas_fused' (DC+TB fused on-chip).  Pairs whose per-window edit
+    distance exceeds cfg.k are retried with doubled k up to `rescue_rounds`
+    times (host-side), mirroring common practice for threshold-based
+    aligners; rescue rounds reuse the same backend with the doubled k.
     """
 
-    def __init__(self, cfg: AlignerConfig = AlignerConfig(), rescue_rounds: int = 2):
+    def __init__(self, cfg: AlignerConfig = AlignerConfig(),
+                 rescue_rounds: int = 2, backend: str | None = None):
+        if backend is not None:
+            cfg = dataclasses.replace(cfg, backend=backend)
         self.cfg = cfg
         self.rescue_rounds = rescue_rounds
 
@@ -73,7 +79,8 @@ class GenASMAligner:
             sub_refs = [refs[i] for i in todo]
             max_read_len = max(len(r) for r in sub_reads)
             wt = self_tail_width(cfg)
-            rpad, rlen = self._pad(sub_reads, max_read_len + cfg.W + 1, 255)
+            rpad, rlen = self._pad(sub_reads, max_read_len + cfg.W + 1,
+                                   SENTINEL_READ)
             fpad, flen = self._pad(sub_refs,
                                    max(len(f) for f in sub_refs) + cfg.W + wt + 1,
                                    SENTINEL_REF)

@@ -17,6 +17,19 @@ WORD_BITS = 32
 _U1 = jnp.uint32(1)
 _UFULL = jnp.uint32(0xFFFFFFFF)
 
+# Alphabet + pad sentinels, shared by every layer that pads sequences
+# (core.genasm, core.windowing, kernels.ops).  Both sentinels derive from
+# the alphabet size and must stay distinct from each other:
+#   * SENTINEL_PAT pads patterns/reads: out of any alphabet, so build_pm
+#     leaves its bits 1 (never matches) and it never equals a text char.
+#   * SENTINEL_TEXT pads texts/refs: any code >= N_SYMBOLS selects the
+#     all-ones PM row (build_pm_ext) / the all-ones default in the Pallas
+#     kernel's pm_lookup, and != SENTINEL_PAT so pad-vs-pad never matches.
+N_SYMBOLS = 4
+SENTINEL_PAT = 255
+SENTINEL_TEXT = N_SYMBOLS + 5
+assert SENTINEL_PAT != SENTINEL_TEXT and SENTINEL_TEXT >= N_SYMBOLS
+
 
 def n_words(m_bits: int) -> int:
     return -(-m_bits // WORD_BITS)
@@ -65,18 +78,19 @@ def ones_below(d, nw: int) -> jnp.ndarray:
     )
 
 
-def build_pm(pat_codes: jnp.ndarray, nw: int, n_symbols: int = 4) -> jnp.ndarray:
+def build_pm(pat_codes: jnp.ndarray, nw: int,
+             n_symbols: int = N_SYMBOLS) -> jnp.ndarray:
     """Pattern bitmasks PM[c]: bit i == 0 iff P[i] == c.
 
     pat_codes: (..., m) integer codes; positions past the true pattern length
-    must hold an out-of-alphabet sentinel (e.g. 255) so their bits are 1
+    must hold an out-of-alphabet sentinel (SENTINEL_PAT) so their bits are 1
     (inactive). Returns (..., n_symbols, NW) uint32.
     """
     m_pad = nw * WORD_BITS
     pad = m_pad - pat_codes.shape[-1]
     if pad:
         pat_codes = jnp.pad(pat_codes, [(0, 0)] * (pat_codes.ndim - 1) + [(0, pad)],
-                            constant_values=255)
+                            constant_values=SENTINEL_PAT)
     sym = jnp.arange(n_symbols, dtype=pat_codes.dtype)
     # mismatch bit = 1 where P[i] != c
     mm = (pat_codes[..., None, :] != sym[:, None]).astype(jnp.uint32)

@@ -20,6 +20,13 @@ class AlignerConfig:
                  diagonal band words of R, for the reachable columns
     early_term — paper idea 2 (ET): level-major fill stops once a level
                  holds the solution.
+
+    backend (requires store='band' for the pallas variants; interpret mode
+    on CPU, compiled on TPU — see docs/backends.md):
+      'jnp'          — pure-jnp fills (core.genasm) + host traceback
+      'pallas'       — Pallas DC kernel, band shipped to HBM, jnp traceback
+      'pallas_fused' — Pallas DC+TB kernel: traceback walks the DENT band
+                       in VMEM scratch; only ops/meta leave the chip
     """
     W: int = 64
     O: int = 24
@@ -27,13 +34,17 @@ class AlignerConfig:
     store: str = "band"
     early_term: bool = True
     tb_margin: int = 3          # extra stored columns beyond the provable band
-    backend: str = "jnp"        # 'jnp' | 'pallas' (interpret on CPU)
+    backend: str = "jnp"        # 'jnp' | 'pallas' | 'pallas_fused'
     n_symbols: int = 4
 
     def __post_init__(self):
         assert 0 < self.O < self.W
         assert 0 < self.k < self.W
         assert self.store in ("edges4", "and", "band")
+        assert self.backend in ("jnp", "pallas", "pallas_fused")
+        # the Pallas kernels implement the fully-improved (banded) DP only
+        assert self.backend == "jnp" or self.store == "band", \
+            "pallas backends require store='band'"
 
     @property
     def nw(self) -> int:
@@ -53,6 +64,17 @@ class AlignerConfig:
     @property
     def stride(self) -> int:
         return self.W - self.O
+
+    @property
+    def tb_max_ops(self) -> int:
+        """Op budget of one committed main-window traceback walk (stride
+        read chars + <= k non-read ops + slack).  Single source of truth
+        for core.windowing, the fused kernel and the benchmarks."""
+        return self.stride + self.k + 2
+
+    @property
+    def tb_max_steps(self) -> int:
+        return self.stride + self.k + 4
 
     @property
     def ncols_band(self) -> int:

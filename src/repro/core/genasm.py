@@ -31,7 +31,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from .bitops import WORD_BITS, build_pm, extract_window, get_bit, ones_below, shift1
+from .bitops import (N_SYMBOLS, SENTINEL_PAT, SENTINEL_TEXT, WORD_BITS,
+                     build_pm, extract_window, get_bit, ones_below, shift1)
 from .config import AlignerConfig
 
 
@@ -64,8 +65,9 @@ def _lookup_pm(pm, codes_j):
     return jnp.take_along_axis(pm, idx[:, None, None], axis=1)[:, 0]
 
 
-def build_pm_ext(pat_codes, nw, n_symbols=4):
-    """PM with an extra all-ones row for sentinel text characters."""
+def build_pm_ext(pat_codes, nw, n_symbols=N_SYMBOLS):
+    """PM with an extra all-ones row for sentinel text characters (any text
+    code >= n_symbols, e.g. SENTINEL_TEXT, selects it via _lookup_pm)."""
     pm = build_pm(pat_codes, nw, n_symbols)
     ones = jnp.full(pm.shape[:-2] + (1, pm.shape[-1]), 0xFFFFFFFF, jnp.uint32)
     return jnp.concatenate([pm, ones], axis=-2)
@@ -215,8 +217,19 @@ def dc_dmajor(pat_codes, text_codes, *, cfg: AlignerConfig) -> DCResult:
 
 def dc(pat_codes, text_codes, m_len, n_len, cfg: AlignerConfig) -> DCResult:
     """Dispatch: improved configs use the level-major banded fill when the
-    batch is uniform square (m_len = n_len = W); otherwise the full fill."""
+    batch is uniform square (m_len = n_len = W); otherwise the full fill.
+    cfg.backend routes the banded fill to the Pallas DC kernel ('pallas' /
+    'pallas_fused' — the fused TB entry point lives in kernels.ops and is
+    dispatched by core.windowing, which also owns the traceback)."""
     if cfg.store == "band":
+        if cfg.backend in ("pallas", "pallas_fused"):
+            # local import: kernels.ops imports build_pm_ext from this module
+            from ..kernels.ops import default_interpret, genasm_dc_op
+            dist, band, lvl = genasm_dc_op(pat_codes, text_codes, cfg=cfg,
+                                           interpret=default_interpret())
+            B = pat_codes.shape[0]
+            r_fin = jnp.zeros((B, cfg.k + 1, cfg.nw), jnp.uint32)
+            return DCResult(dist, dist <= cfg.k, r_fin, {"Rb": band}, lvl)
         return dc_dmajor(pat_codes, text_codes, cfg=cfg)
     return dc_jmajor(pat_codes, text_codes, m_len, n_len, k=cfg.k,
                      n=text_codes.shape[1], nw=cfg.nw, store=cfg.store)

@@ -18,12 +18,13 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from .bitops import SENTINEL_PAT, SENTINEL_TEXT
 from .config import AlignerConfig
-from .genasm import dc_dmajor, dc_jmajor
+from .genasm import dc, dc_jmajor
 from .traceback import OP_NONE, traceback
 
-SENTINEL_READ = 255   # never matches (out of PM alphabet)
-SENTINEL_REF = 9      # maps to the all-ones PM row
+SENTINEL_READ = SENTINEL_PAT    # never matches (out of PM alphabet)
+SENTINEL_REF = SENTINEL_TEXT    # maps to the all-ones PM row
 
 
 def n_main_windows(max_read_len: int, cfg: AlignerConfig) -> int:
@@ -78,8 +79,8 @@ def align_pairs(reads, read_len, refs, ref_len, *, cfg: AlignerConfig,
     nm = n_main_windows(max_read_len, cfg)
     wt = self_tail_width(cfg)
     op_budget = total_op_budget(max_read_len, cfg)
-    max_ops_w = stride + k + 2
-    max_steps_w = stride + k + 4
+    max_ops_w = cfg.tb_max_ops
+    max_steps_w = cfg.tb_max_steps
     max_ops_t = W + wt
     max_steps_t = W + wt + 4
 
@@ -92,15 +93,22 @@ def align_pairs(reads, read_len, refs, ref_len, *, cfg: AlignerConfig,
         wfull = jnp.full((B,), W, jnp.int32)
         pat = _slice_rev(reads, read_pos, W, wfull)
         txt = _slice_rev(refs, ref_pos, W, wfull)
-        if cfg.store == "band":
-            res = dc_dmajor(pat, txt, cfg=cfg)
-        else:  # unimproved GenASM ('edges4') / SENE-only ('and') baselines
-            res = dc_jmajor(pat, txt, wfull, wfull, k=k, n=W, nw=cfg.nw,
-                            store=cfg.store)
-        tb = traceback(res.store, pat, txt, wfull, wfull,
-                       res.dist, jnp.int32(stride), cfg=cfg, mode=cfg.store,
-                       max_ops=max_ops_w, max_steps=max_steps_w)
-        commit = active & res.solved
+        if cfg.store == "band" and cfg.backend == "pallas_fused":
+            # fused kernel: DC + committed traceback in one Pallas call, the
+            # DENT band never leaves VMEM — no host-side traceback walk
+            from ..kernels.ops import default_interpret, genasm_tb_fused_op
+            tb = genasm_tb_fused_op(pat, txt, cfg=cfg, commit_limit=stride,
+                                    max_ops=max_ops_w, max_steps=max_steps_w,
+                                    interpret=default_interpret())
+            solved, levels_run = tb["solved"], tb["levels"]
+        else:
+            res = dc(pat, txt, wfull, wfull, cfg)
+            tb = traceback(res.store, pat, txt, wfull, wfull,
+                           res.dist, jnp.int32(stride), cfg=cfg,
+                           mode=cfg.store, max_ops=max_ops_w,
+                           max_steps=max_steps_w)
+            solved, levels_run = res.solved, res.levels_run
+        commit = active & solved
         buf = _append_ops(buf, off, tb["ops"], jnp.where(commit, tb["n_ops"], 0),
                           commit)
         st = (
@@ -108,8 +116,8 @@ def align_pairs(reads, read_len, refs, ref_len, *, cfg: AlignerConfig,
             jnp.where(commit, ref_pos + tb["ref_adv"], ref_pos),
             jnp.where(commit, off + tb["n_ops"], off),
             jnp.where(commit, dist + tb["cost"], dist),
-            failed | (active & ~res.solved),
-            levels + res.levels_run,
+            failed | (active & ~solved),
+            levels + levels_run,
         )
         return (st, buf), None
 

@@ -1,3 +1,5 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Pallas kernels for the paper's hot spot: genasm_dc.py holds the
+# improved GenASM-DC kernel and the fused GenASM-DC+TB kernel (band never
+# leaves VMEM); ops.py has the jit'd standard-layout wrappers; ref.py the
+# pure-jnp oracle.  Backend selection: AlignerConfig.backend, see
+# docs/backends.md.

@@ -1,4 +1,5 @@
-"""Pallas TPU kernel: improved GenASM-DC (SENE + DENT + ET).
+"""Pallas TPU kernels: improved GenASM-DC (SENE + DENT + ET) and the fused
+GenASM-DC+TB pipeline that never ships the DP state off-chip.
 
 TPU mapping (see DESIGN.md §2): one VPU *lane* per alignment problem — the
 innermost axis of every array is the problem tile (TB, a multiple of 128).
@@ -11,6 +12,24 @@ Grid: one program per problem tile.  Per tile:
   * levels 1..k under a while_loop with whole-tile early termination,
   * per column, the DENT band window (funnel-shift extracted, sub-word) is
     stored for the traceback-reachable columns only.
+
+Two kernels share that DC phase (`_dc_phase`):
+
+  * `genasm_dc_pallas` (split) — writes the DENT band to an HBM output so
+    the host-side jnp traceback (core.traceback, mode='band') can walk it.
+    Band traffic per tile: (k+1) * ncols_band * nwb * TB * 4 bytes each way.
+  * `genasm_tb_fused_pallas` (fused) — keeps the band in VMEM scratch and
+    walks GenASM-TB *inside* the kernel: the same funnel-shift band-window
+    reads as `store_band`, inverted, now per-lane dynamic (each problem is
+    at its own (i, j, d) DP cell, so window/column/PM lookups become
+    one-hot gathers over the small static axes, vectorized across lanes).
+    Only the per-problem op array (<= max_ops int32) and a meta row leave
+    the chip — the band never round-trips through HBM, which is the
+    bandwidth win the paper's 24x working-set compression pays for.
+
+The traceback walk is bit-identical to core.traceback mode='band' (same
+=,X,D,I preference, same commit-limit semantics); tests assert ops/dist
+equality against the jnp path.
 
 The pure-jnp oracle is kernels/ref.py (which defers to core.genasm); the
 jit'd wrapper with layout marshalling is kernels/ops.py.
@@ -25,8 +44,14 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from ..core.config import AlignerConfig
+from ..core.oracle import OP_DEL, OP_INS, OP_MATCH, OP_SUBST
+from ..core.traceback import OP_NONE
 
 WORD = 32
+
+# meta_ref row layout of the fused kernel (8 rows for sublane alignment)
+META_DIST, META_LVL, META_NOPS, META_RD, META_RF, META_DFIN, META_OK = range(7)
+META_ROWS = 8
 
 
 def _band_base(j, k, m_pad, nwb):
@@ -35,33 +60,55 @@ def _band_base(j, k, m_pad, nwb):
     return jnp.clip(lo, 0, hi)
 
 
-def vmem_bytes(cfg: AlignerConfig, tile: int) -> int:
+def default_max_ops(cfg: AlignerConfig) -> int:
+    """Op budget of one committed window walk (= core.windowing's)."""
+    return cfg.tb_max_ops
+
+
+def default_max_steps(cfg: AlignerConfig) -> int:
+    return cfg.tb_max_steps
+
+
+def vmem_bytes(cfg: AlignerConfig, tile: int, fused: bool = False,
+               max_ops: int | None = None) -> int:
     """On-chip working set per problem tile (the paper's 'fits in on-chip
-    memory' claim, checked against ~16MB VMEM in tests)."""
+    memory' claim, checked against ~16MB VMEM in tests).
+
+    The split kernel's band is an output block, but it still occupies VMEM
+    while the tile is in flight, so it is counted either way.  The fused
+    kernel adds the traceback state: the op output block (max_ops words)
+    plus ~16 per-lane state vectors; its band is pure scratch and never
+    becomes HBM traffic.
+    """
     rows = 2 * (cfg.W + 1) * cfg.nw * tile * 4
     band = (cfg.k + 1) * cfg.ncols_band * cfg.nwb * tile * 4
     io = (5 * cfg.nw + cfg.W + 2) * tile * 4
-    return rows + band + io
+    total = rows + band + io
+    if fused:
+        mo = default_max_ops(cfg) if max_ops is None else max_ops
+        total += (mo + META_ROWS + 16) * tile * 4
+    return total
 
 
-def _kernel(pm_ref, text_ref, band_ref, dist_ref, lvl_ref, rows_ref, *,
-            cfg: AlignerConfig):
+def _pm_lookup(pm_ref, cj, nw, n_sym=4):
+    """cj: (TB,) int32 -> list of nw (TB,) mask words (sentinel -> all ones)."""
+    out = []
+    for w in range(nw):
+        acc = jnp.full(cj.shape, 0xFFFFFFFF, jnp.uint32)
+        for c in range(n_sym):
+            acc = jnp.where(cj == c, pm_ref[c, w, :], acc)
+        out.append(acc)
+    return out
+
+
+def _dc_phase(pm_ref, text_ref, rows_ref, band_ref, *, cfg: AlignerConfig):
+    """Fill the improved GenASM-DC levels, storing DENT band windows into
+    band_ref (output block or VMEM scratch).  Returns (dist, d_end)."""
     W, k, nw, nwb = cfg.W, cfg.k, cfg.nw, cfg.nwb
     m_pad = cfg.m_pad
     ncb = cfg.ncols_band
     col0 = W + 1 - ncb
     tgt_w, tgt_o = (W - 1) // WORD, jnp.uint32((W - 1) % WORD)
-    n_sym = 4
-
-    def pm_lookup(cj):
-        """cj: (TB,) int32 -> (nw, TB) mask words (sentinel -> all ones)."""
-        out = []
-        for w in range(nw):
-            acc = jnp.full(cj.shape, 0xFFFFFFFF, jnp.uint32)
-            for c in range(n_sym):
-                acc = jnp.where(cj == c, pm_ref[c, w, :], acc)
-            out.append(acc)
-        return out
 
     def shift1_words(words, carry_in):
         """words: list of (TB,) uint32, LSW first."""
@@ -115,7 +162,7 @@ def _kernel(pm_ref, text_ref, band_ref, dist_ref, lvl_ref, rows_ref, *,
     def col_body0(j, _):
         prev = row_get(0, j - 1)
         cj = text_ref[j - 1, :].astype(jnp.int32)
-        pm_j = pm_lookup(cj)
+        pm_j = _pm_lookup(pm_ref, cj, nw)
         bM = ((j - 1) > 0).astype(jnp.uint32)
         r = [a | b for a, b in zip(shift1_words(prev, bM), pm_j)]
         row_set(0, j, r)
@@ -139,7 +186,7 @@ def _kernel(pm_ref, text_ref, band_ref, dist_ref, lvl_ref, rows_ref, *,
             p_jm1 = row_get(prev_par, j - 1)       # R_{j-1}[d-1]
             p_j = row_get(prev_par, j)             # R_j[d-1]
             cj = text_ref[j - 1, :].astype(jnp.int32)
-            pm_j = pm_lookup(cj)
+            pm_j = _pm_lookup(pm_ref, cj, nw)
             t = j - 1
             bM = (t > d).astype(jnp.uint32)
             bS = (t >= d).astype(jnp.uint32)
@@ -172,8 +219,168 @@ def _kernel(pm_ref, text_ref, band_ref, dist_ref, lvl_ref, rows_ref, *,
         return d + 1, dist
 
     d_end, dist = jax.lax.while_loop(lvl_cond, lvl_body, (jnp.int32(1), dist0))
+    return dist, d_end
+
+
+def _kernel(pm_ref, text_ref, band_ref, dist_ref, lvl_ref, rows_ref, *,
+            cfg: AlignerConfig):
+    dist, d_end = _dc_phase(pm_ref, text_ref, rows_ref, band_ref, cfg=cfg)
     dist_ref[0, :] = dist
     lvl_ref[0, :] = jnp.broadcast_to(d_end, lvl_ref.shape[1:]).astype(jnp.int32)
+
+
+def _kernel_fused(pm_ref, text_ref, ops_ref, meta_ref, rows_ref, band_ref, *,
+                  cfg: AlignerConfig, commit_limit: int, max_ops: int,
+                  max_steps: int):
+    """DC phase into VMEM scratch, then GenASM-TB walked in-kernel.
+
+    The walk mirrors core.traceback (mode='band') bit for bit: SENE edge
+    availability is recomputed from neighbouring stored band windows + the
+    PM masks, with the =,X,D,I preference order, a per-lane tail drain, and
+    the commit-limit stop.  Per-lane dynamic (d, j) band reads use one-hot
+    sums over the small static (k+1, ncols_band) axes — the inverted form
+    of store_band's funnel-shift stores.
+    """
+    W, k, nw, nwb = cfg.W, cfg.k, cfg.nw, cfg.nwb
+    m_pad = cfg.m_pad
+    ncb = cfg.ncols_band
+    col0 = W + 1 - ncb
+    TB = text_ref.shape[1]
+    u1 = jnp.uint32(1)
+
+    # uncomputed (early-terminated) levels must read as zero, like the jnp
+    # path's zeros-initialized band buffer
+    band_ref[:, :, :, :] = jnp.zeros((k + 1, ncb, nwb, TB), jnp.uint32)
+
+    dist, d_end = _dc_phase(pm_ref, text_ref, rows_ref, band_ref, cfg=cfg)
+
+    # ---------------- traceback phase ----------------
+    d_ids = jax.lax.broadcasted_iota(jnp.int32, (k + 1, ncb, TB), 0)
+    s_ids = jax.lax.broadcasted_iota(jnp.int32, (k + 1, ncb, TB), 1)
+    t_ids = jax.lax.broadcasted_iota(jnp.int32, (W, TB), 0)
+    slot_ids = jax.lax.broadcasted_iota(jnp.int32, (max_ops, TB), 0)
+
+    def band_words(dd, jj):
+        """Per-lane gather of the stored band window of (level dd, col jj),
+        clipped like core.traceback._zbit_band."""
+        onehot = ((d_ids == jnp.clip(dd, 0, k)[None, None, :]) &
+                  (s_ids == jnp.clip(jj - col0, 0, ncb - 1)[None, None, :]))
+        return [jnp.sum(jnp.where(onehot, band_ref[:, :, b, :], jnp.uint32(0)),
+                        axis=(0, 1), dtype=jnp.uint32) for b in range(nwb)]
+
+    def zbit(words, dd, jj, ii):
+        """bit ii of the band window == 0; ii == -1 encodes the DP's first
+        column: ED(0, jj) <= dd  ⟺  jj <= dd."""
+        base = _band_base(jj, k, m_pad, nwb)
+        off = ii - base
+        inband = (off >= 0) & (off < nwb * WORD)
+        offc = jnp.clip(off, 0, nwb * WORD - 1)
+        w0 = offc // WORD
+        o = (offc % WORD).astype(jnp.uint32)
+        word = words[0]
+        for b in range(1, nwb):
+            word = jnp.where(w0 == b, words[b], word)
+        bit = (word >> o) & u1
+        return jnp.where(ii < 0, jj <= dd, (bit == 0) & inband)
+
+    def text_at(jj):
+        """text char of column jj (= text index jj-1, clipped)."""
+        onehot = t_ids == jnp.clip(jj - 1, 0, W - 1)[None, :]
+        return jnp.sum(jnp.where(onehot, text_ref[:, :], 0),
+                       axis=0).astype(jnp.int32)
+
+    def peq_at(cj, ii):
+        """P[ii] == text char cj, via the PM masks (sentinels never match)."""
+        words = _pm_lookup(pm_ref, cj, nw)
+        iic = jnp.clip(ii, 0, m_pad - 1)
+        w0 = iic // WORD
+        o = (iic % WORD).astype(jnp.uint32)
+        word = words[0]
+        for w in range(1, nw):
+            word = jnp.where(w0 == w, words[w], word)
+        return ((word >> o) & u1) == 0
+
+    def body(state):
+        i, j, d, nops, ops, rd, rf, done, ok = state
+        tail = i < 0
+        stopped = rd >= commit_limit
+        active = ~done & ~stopped
+
+        w_d_jm1 = band_words(d, j - 1)
+        w_dm1_jm1 = band_words(d - 1, j - 1)
+        w_dm1_j = band_words(d - 1, j)
+        peq = peq_at(text_at(j), i)
+        mA = (j > 0) & peq & zbit(w_d_jm1, d, j - 1, i - 1)
+        sA = (j > 0) & (d > 0) & zbit(w_dm1_jm1, d - 1, j - 1, i - 1)
+        dA = (j > 0) & (d > 0) & zbit(w_dm1_jm1, d - 1, j - 1, i)
+        iA = (d > 0) & zbit(w_dm1_j, d - 1, j, i - 1)
+
+        # tail: pattern exhausted, drain remaining text as deletions
+        tail_emit = tail & (j > 0)
+        mA &= ~tail; sA &= ~tail; dA &= ~tail; iA &= ~tail
+
+        any_edge = mA | sA | dA | iA | tail_emit
+        # exclusive choice with GenASM's =,X,D,I preference
+        cM = mA
+        cS = ~mA & sA
+        cD = ~mA & ~sA & dA
+        cI = ~mA & ~sA & ~dA & iA
+        op = jnp.where(cM, OP_MATCH,
+             jnp.where(cS, OP_SUBST,
+             jnp.where(cD, OP_DEL,
+             jnp.where(cI, OP_INS, OP_DEL)))).astype(jnp.int32)
+
+        takes_read = active & (cM | cS | cI)
+        takes_ref = active & (cM | cS | cD | tail_emit)
+        costs = active & (cS | cD | cI | tail_emit)
+
+        new_i = jnp.where(takes_read, i - 1, i)
+        new_j = jnp.where(takes_ref, j - 1, j)
+        new_d = jnp.where(costs, d - 1, d)
+        new_rd = rd + takes_read
+        new_rf = rf + takes_ref
+
+        emit = active & any_edge
+        slot = jnp.where(emit, nops, max_ops)   # max_ops -> no iota row: drop
+        ops = jnp.where(slot_ids == slot[None, :], op[None, :], ops)
+        nops = nops + emit
+
+        finished = (new_i < 0) & (new_j <= 0)
+        new_done = done | (active & finished)
+        # invariant: an active, unfinished cell always has an available edge
+        ok &= jnp.where(active & ~finished, any_edge | ((i < 0) & (j <= 0)), True)
+        return (new_i, new_j, new_d, nops, ops, new_rd, new_rf,
+                new_done | stopped, ok)
+
+    def walk_body(step, state):
+        del step
+        return jax.lax.cond(jnp.any(~state[7]), body, lambda s: s, state)
+
+    zeros = jnp.zeros((TB,), jnp.int32)
+    skip = dist > k
+    init = (
+        jnp.full((TB,), W - 1, jnp.int32),          # i (m_len - 1)
+        jnp.full((TB,), W, jnp.int32),              # j (n_len)
+        dist,                                       # d
+        zeros,                                      # nops
+        jnp.full((max_ops, TB), OP_NONE, jnp.int32),
+        zeros,                                      # read_adv
+        zeros,                                      # ref_adv
+        skip,                                       # done
+        jnp.ones((TB,), bool),                      # ok
+    )
+    i, j, d, nops, ops, rd, rf, done, ok = jax.lax.fori_loop(
+        0, max_steps, walk_body, init)
+
+    ops_ref[:, :] = ops
+    meta_ref[META_DIST, :] = dist
+    meta_ref[META_LVL, :] = jnp.broadcast_to(d_end, (TB,)).astype(jnp.int32)
+    meta_ref[META_NOPS, :] = nops
+    meta_ref[META_RD, :] = rd
+    meta_ref[META_RF, :] = rf
+    meta_ref[META_DFIN, :] = d
+    meta_ref[META_OK, :] = ok.astype(jnp.int32)
+    meta_ref[META_ROWS - 1, :] = zeros
 
 
 def genasm_dc_pallas(pm, text, *, cfg: AlignerConfig, tile: int = 128,
@@ -210,3 +417,46 @@ def genasm_dc_pallas(pm, text, *, cfg: AlignerConfig, tile: int = 128,
     )(pm, text)
     band, dist, lvl = out
     return dist[0], band, lvl[0]
+
+
+def genasm_tb_fused_pallas(pm, text, *, cfg: AlignerConfig, commit_limit: int,
+                           max_ops: int | None = None,
+                           max_steps: int | None = None, tile: int = 128,
+                           interpret: bool = True):
+    """Fused DC+TB.  pm: (5, NW, B) uint32; text: (W, B) int32 (kernel
+    layout).  Returns (ops (max_ops, B) int32 front-first with OP_NONE
+    padding, meta (META_ROWS, B) int32 — see META_* row constants).  The
+    DENT band lives and dies in VMEM scratch."""
+    _, nw, B = pm.shape
+    W = text.shape[0]
+    assert W == cfg.W and nw == cfg.nw and B % tile == 0
+    if max_ops is None:
+        max_ops = default_max_ops(cfg)
+    if max_steps is None:
+        max_steps = default_max_steps(cfg)
+    ncb, nwb, k = cfg.ncols_band, cfg.nwb, cfg.k
+    grid = (B // tile,)
+    kern = functools.partial(_kernel_fused, cfg=cfg, commit_limit=commit_limit,
+                             max_ops=max_ops, max_steps=max_steps)
+    ops, meta = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((5, nw, tile), lambda i: (0, 0, i)),
+            pl.BlockSpec((W, tile), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((max_ops, tile), lambda i: (0, i)),
+            pl.BlockSpec((META_ROWS, tile), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((max_ops, B), jnp.int32),
+            jax.ShapeDtypeStruct((META_ROWS, B), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((2, W + 1, nw, tile), jnp.uint32),
+            pltpu.VMEM((k + 1, ncb, nwb, tile), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(pm, text)
+    return ops, meta

@@ -13,7 +13,35 @@ import jax.numpy as jnp
 
 from ..core.config import AlignerConfig
 from ..core.genasm import build_pm_ext
-from .genasm_dc import genasm_dc_pallas
+from .genasm_dc import (META_DFIN, META_DIST, META_LVL, META_NOPS, META_OK,
+                        META_RD, META_RF, genasm_dc_pallas,
+                        genasm_tb_fused_pallas)
+
+
+def default_interpret() -> bool:
+    """Interpret-mode Pallas everywhere but real TPUs (CPU CI, tests)."""
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to_tile(pat_codes, text_codes, tile):
+    """Pad the batch to a tile multiple with identical all-zero ('AAA...')
+    lanes: they solve at level 0, so they never block the kernel's
+    whole-tile early termination or inflate the levels stat (sentinel pads
+    would sit at dist > k forever).  Padded lanes are trimmed after the
+    kernel."""
+    B = pat_codes.shape[0]
+    pad = (-B) % tile
+    if pad:
+        pat_codes = jnp.pad(pat_codes, ((0, pad), (0, 0)))
+        text_codes = jnp.pad(text_codes, ((0, pad), (0, 0)))
+    return pat_codes, text_codes
+
+
+def _to_kernel_layout(pat_codes, text_codes, cfg):
+    pm = build_pm_ext(pat_codes, cfg.nw)                  # (B', 5, NW)
+    pm_k = jnp.transpose(pm, (1, 2, 0))                   # (5, NW, B')
+    text_k = jnp.transpose(text_codes.astype(jnp.int32), (1, 0))
+    return pm_k, text_k
 
 
 @partial(jax.jit, static_argnames=("cfg", "tile", "interpret"))
@@ -26,14 +54,46 @@ def genasm_dc_op(pat_codes, text_codes, *, cfg: AlignerConfig, tile: int = 128,
     store layout, so core.traceback consumes it unchanged.
     """
     B = pat_codes.shape[0]
-    pad = (-B) % tile
-    if pad:
-        pat_codes = jnp.pad(pat_codes, ((0, pad), (0, 0)), constant_values=255)
-        text_codes = jnp.pad(text_codes, ((0, pad), (0, 0)), constant_values=9)
-    pm = build_pm_ext(pat_codes, cfg.nw)                  # (B', 5, NW)
-    pm_k = jnp.transpose(pm, (1, 2, 0))                   # (5, NW, B')
-    text_k = jnp.transpose(text_codes.astype(jnp.int32), (1, 0))
+    pat_codes, text_codes = _pad_to_tile(pat_codes, text_codes, tile)
+    pm_k, text_k = _to_kernel_layout(pat_codes, text_codes, cfg)
     dist, band, lvl = genasm_dc_pallas(pm_k, text_k, cfg=cfg, tile=tile,
                                        interpret=interpret)
     band = jnp.transpose(band, (0, 1, 3, 2))              # (K1, ncb, B', nwb)
     return dist[:B], band[:, :, :B, :], jnp.max(lvl)
+
+
+@partial(jax.jit, static_argnames=("cfg", "commit_limit", "max_ops",
+                                   "max_steps", "tile", "interpret"))
+def genasm_tb_fused_op(pat_codes, text_codes, *, cfg: AlignerConfig,
+                       commit_limit: int, max_ops: int, max_steps: int,
+                       tile: int = 128, interpret: bool = True):
+    """Fused GenASM-DC+TB: standard layout in, traceback dict out.
+
+    pat_codes/text_codes: (B, W) reversed square windows (the windowed
+    pipeline's main-window contract).  Returns the same dict as
+    core.traceback (ops front-first uint8, n_ops, read_adv, ref_adv, cost,
+    ok, d_final) plus dist and levels — the DENT band never leaves the
+    kernel's VMEM scratch.
+    """
+    B = pat_codes.shape[0]
+    pat_codes, text_codes = _pad_to_tile(pat_codes, text_codes, tile)
+    pm_k, text_k = _to_kernel_layout(pat_codes, text_codes, cfg)
+    ops_k, meta = genasm_tb_fused_pallas(
+        pm_k, text_k, cfg=cfg, commit_limit=commit_limit, max_ops=max_ops,
+        max_steps=max_steps, tile=tile, interpret=interpret)
+    ops = jnp.transpose(ops_k, (1, 0))[:B].astype(jnp.uint8)   # (B, max_ops)
+    meta = meta[:, :B]
+    dist = meta[META_DIST]
+    skip = dist > cfg.k
+    return {
+        "ops": ops,
+        "n_ops": meta[META_NOPS],
+        "read_adv": meta[META_RD],
+        "ref_adv": meta[META_RF],
+        "cost": jnp.where(skip, 0, dist - meta[META_DFIN]),
+        "ok": meta[META_OK].astype(bool),
+        "d_final": meta[META_DFIN],
+        "dist": dist,
+        "solved": ~skip,
+        "levels": jnp.max(meta[META_LVL]),
+    }

@@ -33,8 +33,9 @@ class AlignmentEngine:
     thresholds in production mappers."""
 
     def __init__(self, cfg: AlignerConfig = AlignerConfig(),
-                 batch_size: int = 64, max_wait_s: float = 0.05):
-        self.aligner = GenASMAligner(cfg)
+                 batch_size: int = 64, max_wait_s: float = 0.05,
+                 backend: str | None = None):
+        self.aligner = GenASMAligner(cfg, backend=backend)
         self.batch_size = batch_size
         self.max_wait_s = max_wait_s
         self.queue: deque[AlignRequest] = deque()

@@ -1,0 +1,94 @@
+"""Optional-`hypothesis` shim for the property tests.
+
+When hypothesis is installed the real `given`/`settings`/`strategies` are
+re-exported unchanged.  When it is absent (e.g. the bare container the
+tier-1 suite runs in) a minimal seeded-random fallback provides the same
+surface the tests use — `st.integers`, `st.lists`, `st.data`, `@given`,
+`@settings(max_examples=..., deadline=...)` — generating a deterministic
+stream of examples per test (seeded from the test name), so the suite
+collects and passes everywhere.  The fallback does not shrink failures;
+install hypothesis (see requirements-dev.txt) for real property testing.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import functools
+    import zlib
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+    _DEFAULT_MAX_EXAMPLES = 25
+
+    class _Strategy:
+        """A strategy is just a sampler: sample(rng) -> value."""
+
+        def __init__(self, sample):
+            self.sample = sample
+
+    class _DataObject:
+        """Fallback for st.data(): interactive draws from the example rng."""
+
+        def __init__(self, rng):
+            self._rng = rng
+
+        def draw(self, strategy, label=None):
+            return strategy.sample(self._rng)
+
+    class _DataStrategy(_Strategy):
+        def __init__(self):
+            super().__init__(lambda rng: _DataObject(rng))
+
+    class _St:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def sample(rng):
+                n = int(rng.integers(min_size, max_size + 1))
+                return [elements.sample(rng) for _ in range(n)]
+            return _Strategy(sample)
+
+        @staticmethod
+        def data():
+            return _DataStrategy()
+
+    st = _St()
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **kw):
+        def deco(fn):
+            fn._hyp_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            max_ex = getattr(fn, "_hyp_max_examples", _DEFAULT_MAX_EXAMPLES)
+            base_seed = zlib.crc32(
+                f"{fn.__module__}.{fn.__qualname__}".encode())
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                for ex in range(max_ex):
+                    rng = np.random.default_rng((base_seed, ex))
+                    vals = [s.sample(rng) for s in strategies]
+                    try:
+                        fn(*args, *vals, **kwargs)
+                    except Exception as e:
+                        raise AssertionError(
+                            f"falsifying example #{ex} for {fn.__name__}: "
+                            f"args={vals!r}") from e
+            # pytest must not see the strategy parameters as fixtures:
+            # drop functools.wraps' __wrapped__ so the reported signature
+            # is (*args, **kwargs) rather than fn's.
+            del wrapper.__wrapped__
+            return wrapper
+        return deco

@@ -22,3 +22,30 @@ def mutate_seq(p, n_edits, rng, extend_to=None):
 @pytest.fixture
 def rng():
     return np.random.default_rng(1234)
+
+
+@pytest.fixture(scope="session")
+def readset():
+    """One simulated read set shared by the windowed-alignment tests (all
+    variants align the same pairs, so compiles and results are reusable)."""
+    from repro.data.genome import ReadSimConfig, simulate_reads, synth_genome
+    g = synth_genome(40_000, seed=7)
+    return simulate_reads(g, 4, ReadSimConfig(read_len=300, error_rate=0.08,
+                                              seed=13))
+
+
+@pytest.fixture(scope="session")
+def aligned(readset):
+    """Session cache of GenASMAligner results keyed by (frozen) config:
+    each aligner variant is jitted and executed once per session, however
+    many tests consume its output."""
+    from repro.core.aligner import GenASMAligner
+    cache = {}
+
+    def run(cfg):
+        if cfg not in cache:
+            cache[cfg] = GenASMAligner(cfg).align(readset.reads,
+                                                  readset.ref_segments)
+        return cache[cfg]
+
+    return run

@@ -1,8 +1,7 @@
 """Myers (Edlib-like) and banded affine DP (KSW2-like) vs oracles."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from tests._hyp import given, settings, st
 
 from repro.baselines.dp import affine_traceback, banded_affine_dist
 from repro.baselines.myers import banded_traceback, myers_distance

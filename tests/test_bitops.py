@@ -1,8 +1,7 @@
 """Property tests for the multi-word bitvector primitives."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from tests._hyp import given, settings, st
 
 from repro.core.bitops import (WORD_BITS, build_pm, extract_window, get_bit,
                                n_words, ones_below, shift1, window_bit)
@@ -25,7 +24,7 @@ def test_shift1_matches_python_int(nw, words, carry):
 
 
 @given(st.integers(1, 3), st.integers(0, 95))
-@settings(max_examples=40, deadline=None)
+@settings(max_examples=20, deadline=None)
 def test_ones_below_and_get_bit(nw, d):
     d = d % (nw * 32 + 1)
     v = ones_below(jnp.int32(d), nw)
@@ -37,7 +36,7 @@ def test_ones_below_and_get_bit(nw, d):
 
 
 @given(st.lists(st.integers(0, 3), min_size=1, max_size=80))
-@settings(max_examples=40, deadline=None)
+@settings(max_examples=20, deadline=None)
 def test_build_pm_semantics(pat):
     nw = n_words(len(pat))
     pm = build_pm(jnp.array([pat], jnp.int32), nw)  # (1, 4, NW)

@@ -1,8 +1,7 @@
 """CIGAR packing roundtrip + RLE string."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from tests._hyp import given, settings, st
 
 from repro.core.cigar import ops_to_string, pack_ops, unpack_ops
 from repro.core.traceback import OP_NONE

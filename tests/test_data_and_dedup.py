@@ -38,6 +38,7 @@ def test_tokens_to_dna_alphabet():
     assert len({tuple(d[i:i + 4]) for i in range(0, 996, 4)}) > 100
 
 
+@pytest.mark.slow
 def test_dedup_finds_near_duplicates():
     rng = np.random.default_rng(5)
     base = rng.integers(0, 30_000, 400)

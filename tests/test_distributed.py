@@ -23,6 +23,7 @@ def run_py(code: str, n_dev: int = 8, timeout=480):
     return r.stdout
 
 
+@pytest.mark.slow
 def test_sharded_train_step_runs_and_matches_single_device():
     out = run_py("""
         import jax, jax.numpy as jnp, numpy as np
@@ -32,7 +33,7 @@ def test_sharded_train_step_runs_and_matches_single_device():
         from repro.train.step import (abstract_state, init_state,
                                       make_train_step, state_partition_specs)
         from repro.launch.dryrun import tree_shardings, batch_pspec
-        from repro.launch.mesh import make_test_mesh
+        from repro.launch.mesh import make_test_mesh, use_mesh
         from repro.data.tokens import TokenStream
 
         cfg = tiny_config(get_config('llama3.2-1b'))
@@ -51,7 +52,7 @@ def test_sharded_train_step_runs_and_matches_single_device():
         b_sh = jax.tree_util.tree_map(
             lambda s: NamedSharding(mesh, batch_pspec(
                 jax.ShapeDtypeStruct(s.shape, s.dtype), mesh)), batch)
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             stp = jax.jit(step, in_shardings=(st_sh, b_sh),
                           out_shardings=(st_sh, None))
             state_d = jax.device_put(state, st_sh)
@@ -69,13 +70,13 @@ def test_compressed_allreduce_accuracy():
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
         from repro.distributed.collectives import compressed_allreduce
-        mesh = jax.make_mesh((8,), ('data',),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_test_mesh, shard_map
+        mesh = make_test_mesh((8,), ('data',))
         x = np.random.default_rng(0).standard_normal((8, 4097)).astype('f4')
-        f = jax.jit(jax.shard_map(
+        f = jax.jit(shard_map(
             lambda xs: compressed_allreduce(xs[0], 'data')[None],
             mesh=mesh, in_specs=P('data', None), out_specs=P('data', None),
-            check_vma=False))
+            check=False))
         out = np.asarray(f(x))
         want = x.sum(0)
         err = np.abs(out - want[None]).max() / np.abs(want).max()
@@ -85,6 +86,7 @@ def test_compressed_allreduce_accuracy():
     assert "OK" in out
 
 
+@pytest.mark.slow
 def test_elastic_reshard_across_mesh_sizes():
     out = run_py("""
         import jax, jax.numpy as jnp, numpy as np
@@ -125,7 +127,7 @@ def test_aligner_shards_over_mesh():
         import jax, jax.numpy as jnp, numpy as np
         from repro.core.config import AlignerConfig
         from repro.serve.align_step import make_align_step
-        from repro.launch.mesh import make_test_mesh
+        from repro.launch.mesh import make_test_mesh, use_mesh
         from repro.data.genome import ReadSimConfig, simulate_reads, synth_genome
         from repro.core.windowing import self_tail_width
 
@@ -151,7 +153,7 @@ def test_aligner_shards_over_mesh():
                 jax.device_put(jnp.array(rl), vsh),
                 jax.device_put(jnp.array(refs), bsh),
                 jax.device_put(jnp.array(fl), vsh))
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             out, summary = stepf(*args)
         assert int(summary['n_failed']) == 0
         print('OK aligned', int(summary['total_edits']))

@@ -3,8 +3,7 @@ orders are tested against)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from tests._hyp import given, settings, st
 
 from repro.core.config import AlignerConfig
 from repro.core.genasm import dc_dmajor, dc_jmajor
@@ -15,7 +14,7 @@ seq = st.lists(st.integers(0, 3), min_size=1, max_size=48)
 
 
 @given(seq, seq, st.integers(1, 12))
-@settings(max_examples=60, deadline=None)
+@settings(max_examples=12, deadline=None)
 def test_jmajor_distance_matches_oracle(p, t, k):
     m_pad = 64
     pat = jnp.array([p + [255] * (m_pad - len(p))], jnp.int32)

@@ -21,7 +21,8 @@ def make_batch(rng, W, k, B):
     return np.stack(pats), np.stack(txts), eds
 
 
-@pytest.mark.parametrize("W,k", [(32, 9), (64, 12)])
+@pytest.mark.parametrize("W,k", [
+    (32, 9), pytest.param(64, 12, marks=pytest.mark.slow)])
 def test_three_modes_identical_cigars(W, k, rng):
     """Full traceback for the full-storage modes ('edges4' vs SENE 'and')
     must be optimal + identical; 'band' (DENT) stores only the columns the

@@ -1,0 +1,153 @@
+"""Fused GenASM-DC+TB Pallas kernel: bit-identical to the jnp 'band' path,
+CIGAR-valid vs the classic DP oracle, consistent with all three jnp store
+modes on the committed prefix, and correct through windowing + rescue."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.config import AlignerConfig
+from repro.core.genasm import dc_dmajor, dc_jmajor
+from repro.core.oracle import levenshtein, validate_cigar
+from repro.core.cigar import ops_to_string
+from repro.core.traceback import OP_NONE, traceback
+from repro.kernels.ops import genasm_tb_fused_op
+from tests.conftest import mutate_seq
+
+
+def batch(rng, W, k, B):
+    pats, txts, eds = [], [], []
+    for _ in range(B):
+        p = rng.integers(0, 4, W).astype(np.uint8)
+        t = mutate_seq(p, int(rng.integers(0, k + 2)), rng, extend_to=W)
+        pats.append(p); txts.append(t); eds.append(levenshtein(p, t))
+    return np.stack(pats), np.stack(txts), eds
+
+
+def jnp_band_tb(pat, txt, cfg, commit_limit, max_ops, max_steps):
+    B = pat.shape[0]
+    wl = jnp.full((B,), cfg.W, jnp.int32)
+    res = dc_dmajor(pat, txt, cfg=cfg)
+    tb = traceback(res.store, pat, txt, wl, wl, res.dist,
+                   jnp.int32(commit_limit), cfg=cfg, mode="band",
+                   max_ops=max_ops, max_steps=max_steps)
+    return res, tb
+
+
+@pytest.mark.parametrize("W,k,tile,B", [
+    (16, 3, 4, 4),
+    (32, 15, 8, 8),    # nwb = 2: two-word band windows
+    (32, 11, 4, 5),    # B not a multiple of tile
+])
+def test_fused_bit_identical_to_jnp_band(W, k, tile, B, rng):
+    """The acceptance sweep: fused ops/dist == jnp band path, bit for bit."""
+    cfg = AlignerConfig(W=W, O=max(1, W // 3), k=k)
+    stride = cfg.stride
+    max_ops, max_steps = cfg.tb_max_ops, cfg.tb_max_steps
+    pats, txts, _ = batch(rng, W, k, B)
+    pat, txt = jnp.array(pats), jnp.array(txts)
+    res, tb = jnp_band_tb(pat, txt, cfg, stride, max_ops, max_steps)
+    fz = genasm_tb_fused_op(pat, txt, cfg=cfg, commit_limit=stride,
+                            max_ops=max_ops, max_steps=max_steps, tile=tile)
+    assert (np.array(fz["dist"]) == np.array(res.dist)).all()
+    assert int(fz["levels"]) == int(res.levels_run)
+    assert bool(np.array(fz["ok"]).all())
+    for key in ("ops", "n_ops", "read_adv", "ref_adv", "cost", "d_final"):
+        np.testing.assert_array_equal(np.array(fz[key]), np.array(tb[key]),
+                                      err_msg=key)
+
+
+def test_fused_cigars_optimal_vs_oracle(rng):
+    """With a full-coverage band (ncb == W+1) and no commit limit the fused
+    walk is a complete traceback; its CIGARs must be valid and optimal."""
+    W, k, B = 16, 5, 8
+    cfg = AlignerConfig(W=W, O=2, k=k)       # stride+k+margin > W+1
+    assert cfg.ncols_band == W + 1
+    max_ops, max_steps = 2 * W + k, 2 * W + k + 4
+    pats, txts, eds = batch(rng, W, k, B)
+    fz = genasm_tb_fused_op(jnp.array(pats), jnp.array(txts), cfg=cfg,
+                            commit_limit=10**6, max_ops=max_ops,
+                            max_steps=max_steps, tile=4)
+    assert bool(np.array(fz["ok"]).all())
+    n_solved = 0
+    for b in range(B):
+        if eds[b] <= k:
+            assert int(fz["dist"][b]) == eds[b]
+            ops = np.array(fz["ops"])[b][:int(fz["n_ops"][b])]
+            assert not (ops == OP_NONE).any()
+            # ops are front-first over REVERSED windows
+            validate_cigar(pats[b][::-1], txts[b][::-1], ops,
+                           expected_dist=eds[b])
+            n_solved += 1
+    assert n_solved > 0
+
+
+def test_fused_matches_all_jnp_store_modes_committed(rng):
+    """Committed-prefix ops agree across edges4/and/band jnp modes and the
+    fused kernel (the paper's equivalence claim, extended on-chip)."""
+    W, k, B = 32, 9, 8
+    stride = W - W // 3
+    max_ops, max_steps = stride + k + 2, stride + k + 4
+    pats, txts, eds = batch(rng, W, k, B)
+    pat, txt = jnp.array(pats), jnp.array(txts)
+    wl = jnp.full((B,), W, jnp.int32)
+    committed = {}
+    for mode in ("edges4", "and", "band"):
+        cfg = AlignerConfig(W=W, O=W // 3, k=k, store=mode)
+        if mode == "band":
+            res = dc_dmajor(pat, txt, cfg=cfg)
+        else:
+            res = dc_jmajor(pat, txt, wl, wl, k=k, n=W, nw=cfg.nw, store=mode)
+        tb = traceback(res.store, pat, txt, wl, wl, res.dist,
+                       jnp.int32(stride), cfg=cfg, mode=mode,
+                       max_ops=max_ops, max_steps=max_steps)
+        committed[mode] = [
+            ops_to_string(np.array(tb["ops"])[b][:int(tb["n_ops"][b])])
+            if eds[b] <= k else None for b in range(B)]
+    cfg = AlignerConfig(W=W, O=W // 3, k=k)
+    fz = genasm_tb_fused_op(pat, txt, cfg=cfg, commit_limit=stride,
+                            max_ops=max_ops, max_steps=max_steps, tile=8)
+    committed["fused"] = [
+        ops_to_string(np.array(fz["ops"])[b][:int(fz["n_ops"][b])])
+        if eds[b] <= k else None for b in range(B)]
+    assert (committed["edges4"] == committed["and"] == committed["band"]
+            == committed["fused"])
+
+
+def test_fused_windowed_alignment_matches_jnp(rng):
+    """pallas_fused through GenASMAligner + serve engine: equal to the jnp
+    backend on clean reads."""
+    from repro.core.aligner import GenASMAligner
+    from repro.data.genome import ReadSimConfig, simulate_reads, synth_genome
+
+    g = synth_genome(15_000, seed=77)
+    rs = simulate_reads(g, 3, ReadSimConfig(read_len=120, error_rate=0.06,
+                                            seed=78))
+    cfg = AlignerConfig(W=32, O=12, k=8)
+    res_j = GenASMAligner(cfg).align(rs.reads, rs.ref_segments)
+    res_f = GenASMAligner(cfg, backend="pallas_fused").align(
+        rs.reads, rs.ref_segments)
+    assert not res_f.failed.any()
+    assert list(res_j.dist) == list(res_f.dist)
+    assert res_j.cigars == res_f.cigars
+
+
+@pytest.mark.slow
+def test_fused_rescue_doubles_k(rng):
+    """rescue-round k doubling recompiles the fused kernel with the doubled
+    threshold."""
+    from repro.core.aligner import GenASMAligner
+    from repro.data.genome import ReadSimConfig, simulate_reads, synth_genome
+
+    g = synth_genome(15_000, seed=77)
+    # high-error pair: some window exceeds k=4 -> rescued with doubled k
+    rs2 = simulate_reads(g, 2, ReadSimConfig(read_len=100, error_rate=0.25,
+                                             seed=79))
+    al = GenASMAligner(AlignerConfig(W=32, O=12, k=4),
+                       rescue_rounds=2, backend="pallas_fused")
+    res = al.align(rs2.reads, rs2.ref_segments)
+    for i in range(len(rs2.reads)):
+        if not res.failed[i]:
+            validate_cigar(rs2.reads[i], rs2.ref_segments[i], res.ops[i],
+                           expected_dist=res.dist[i])
+    assert (res.k_used[~res.failed] >= 4).all()
+    assert (res.k_used[~res.failed] > 4).any()   # at least one needed rescue

@@ -22,8 +22,10 @@ def batch(rng, W, k, B):
     return jnp.array(np.stack(pats)), jnp.array(np.stack(txts))
 
 
-@pytest.mark.parametrize("W,k,tile", [(16, 3, 4), (32, 7, 8), (32, 15, 8),
-                                      (64, 12, 8), (96, 9, 4)])
+@pytest.mark.parametrize("W,k,tile", [
+    (16, 3, 4), (32, 7, 8), (32, 15, 8),
+    pytest.param(64, 12, 8, marks=pytest.mark.slow),
+    pytest.param(96, 9, 4, marks=pytest.mark.slow)])
 def test_kernel_matches_ref_sweep(W, k, tile, rng):
     cfg = AlignerConfig(W=W, O=max(1, W // 3), k=k)
     B = tile
@@ -55,6 +57,32 @@ def test_kernel_batch_padding(rng):
     d_k, band, _ = genasm_dc_op(pat, txt, cfg=cfg, tile=4, interpret=True)
     assert d_k.shape == (5,)
     assert band.shape[2] == 5
+
+
+def test_pad_sentinels_out_of_alphabet(rng):
+    """The shared pad sentinels: any pattern code >= N_SYMBOLS never matches,
+    any text code >= N_SYMBOLS maps to the all-ones PM row — so distances
+    depend only on the true-length prefix, for jnp and kernel paths alike."""
+    from repro.core.bitops import N_SYMBOLS, SENTINEL_PAT, SENTINEL_TEXT
+    from repro.core.genasm import dc_jmajor
+
+    assert SENTINEL_PAT != SENTINEL_TEXT
+    assert SENTINEL_PAT >= N_SYMBOLS and SENTINEL_TEXT >= N_SYMBOLS
+    W, k = 32, 7
+    m, n = 11, 13
+    p = rng.integers(0, N_SYMBOLS, m).astype(np.int32)
+    t = mutate_seq(p.astype(np.uint8), 3, rng)[:n].astype(np.int32)
+    want = levenshtein(p, t)
+    want = want if want <= k else k + 1
+    for pat_pad, txt_pad in ((SENTINEL_PAT, SENTINEL_TEXT),
+                             (SENTINEL_TEXT + 1, N_SYMBOLS)):
+        pat = np.full((1, W), pat_pad, np.int32)
+        txt = np.full((1, W), txt_pad, np.int32)
+        pat[0, :m] = p
+        txt[0, :len(t)] = t
+        res = dc_jmajor(jnp.array(pat), jnp.array(txt), jnp.array([m]),
+                        jnp.array([len(t)]), k=k, n=W, nw=1, store="and")
+        assert int(res.dist[0]) == want, (pat_pad, txt_pad)
 
 
 def test_vmem_fit():

@@ -79,6 +79,7 @@ def test_attention_matches_naive(window):
     np.testing.assert_allclose(np.asarray(out), want, rtol=2e-4, atol=2e-4)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["llama3.2-1b", "zamba2-2.7b", "xlstm-125m"])
 def test_prefill_decode_matches_full_forward(arch):
     """logits for token S from (prefill S) + (decode 1) must match the full

@@ -27,7 +27,14 @@ def make_batch(cfg, B=2, S=32, rng=None):
     return b
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+# the model-zoo sweep runs nightly; tier-1 model coverage comes from the
+# (cheaper) semantics tests
+FAST_ARCHS = set()
+
+
+@pytest.mark.parametrize("arch", [
+    pytest.param(a, marks=() if a in FAST_ARCHS else (pytest.mark.slow,))
+    for a in ARCH_IDS])
 def test_forward_and_train_step(arch):
     cfg = tiny_config(get_config(arch))
     model = get_model(cfg)
@@ -55,6 +62,7 @@ def test_forward_and_train_step(arch):
     assert max(jax.tree_util.tree_leaves(moved)) > 0
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["llama3.2-1b", "gemma2-2b", "zamba2-2.7b",
                                   "xlstm-125m", "musicgen-medium"])
 def test_prefill_decode_shapes(arch):

@@ -44,6 +44,7 @@ def test_checkpoint_keep_n(setup):
     assert steps == ["step_00000030", "step_00000040"]
 
 
+@pytest.mark.slow
 def test_supervised_restart_reaches_target(setup):
     cfg, model, step, state, stream, tmp = setup
     inj = FailureInjector(fail_at=[7, 13])
@@ -57,6 +58,7 @@ def test_supervised_restart_reaches_target(setup):
     assert len(events) == 2
 
 
+@pytest.mark.slow
 def test_restart_resumes_identical_state(setup):
     """Train 10 straight vs train-with-crash-at-7: same final state (data
     stream is a pure function of step, checkpoints at every step)."""
@@ -96,6 +98,7 @@ def test_token_stream_deterministic_and_prefetch():
     pf.stop()
 
 
+@pytest.mark.slow
 def test_grad_accum_matches_full_batch(setup):
     """mean-of-microbatch-grads == full-batch grad (CE of means).  Grads
     are compared directly: Adam's sqrt(v) normalization amplifies bf16

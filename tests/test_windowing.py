@@ -1,4 +1,8 @@
-"""Long-read windowed alignment: validity, accuracy vs full DP, variants."""
+"""Long-read windowed alignment: validity, accuracy vs full DP, variants.
+
+The simulated read set and the per-variant alignment results are session-
+scoped fixtures (tests/conftest.py): each aligner config is jitted and run
+once, shared by every test below."""
 import numpy as np
 import pytest
 
@@ -7,42 +11,33 @@ from repro.core.config import AlignerConfig
 from repro.core.oracle import levenshtein, validate_cigar
 from repro.data.genome import ReadSimConfig, simulate_reads, synth_genome
 
-
-@pytest.fixture(scope="module")
-def readset():
-    g = synth_genome(60_000, seed=7)
-    return simulate_reads(g, 6, ReadSimConfig(read_len=500, error_rate=0.08,
-                                              seed=13))
+CFG_BAND = AlignerConfig(W=64, O=24, k=12, store="band", early_term=True)
+CFG_EDGES = AlignerConfig(W=64, O=24, k=12, store="edges4", early_term=False)
+CFG_AND = AlignerConfig(W=64, O=24, k=12, store="and", early_term=True)
 
 
-@pytest.mark.parametrize("store,et", [("band", True), ("and", True),
-                                      ("edges4", False)])
-def test_windowed_alignment_valid_all_variants(readset, store, et):
-    cfg = AlignerConfig(W=64, O=24, k=12, store=store, early_term=et)
-    al = GenASMAligner(cfg)
-    res = al.align(readset.reads, readset.ref_segments)
+@pytest.mark.parametrize("cfg", [
+    pytest.param(CFG_BAND, id="band"),
+    pytest.param(CFG_EDGES, id="edges4"),
+    pytest.param(CFG_AND, id="and", marks=pytest.mark.slow),
+])
+def test_windowed_alignment_valid_all_variants(readset, aligned, cfg):
+    res = aligned(cfg)
     assert not res.failed.any()
     for i in range(len(readset.reads)):
         validate_cigar(readset.reads[i], readset.ref_segments[i],
                        res.ops[i], expected_dist=res.dist[i])
 
 
-def test_improved_equals_unimproved_distances(readset):
+def test_improved_equals_unimproved_distances(aligned):
     """The paper's improvements change memory traffic, not results."""
-    d = {}
-    for store in ("band", "edges4"):
-        cfg = AlignerConfig(W=64, O=24, k=12, store=store,
-                            early_term=(store == "band"))
-        res = GenASMAligner(cfg).align(readset.reads, readset.ref_segments)
-        d[store] = list(res.dist)
-    assert d["band"] == d["edges4"]
+    assert list(aligned(CFG_BAND).dist) == list(aligned(CFG_EDGES).dist)
 
 
-def test_windowed_distance_near_optimal(readset):
+def test_windowed_distance_near_optimal(readset, aligned):
     """Windowed alignment is a heuristic >= true edit distance; with W=64
     O=24 on 8% error reads it should be within a few percent."""
-    cfg = AlignerConfig(W=64, O=24, k=12)
-    res = GenASMAligner(cfg).align(readset.reads, readset.ref_segments)
+    res = aligned(CFG_BAND)
     for i in range(3):
         ed = levenshtein(readset.reads[i], readset.ref_segments[i])
         assert res.dist[i] >= ed
@@ -52,23 +47,24 @@ def test_windowed_distance_near_optimal(readset):
 def test_rescue_on_high_error_pair(rng):
     """A pair exceeding k in some window gets rescued with doubled k."""
     g = synth_genome(20_000, seed=21)
-    rs = simulate_reads(g, 3, ReadSimConfig(read_len=300, error_rate=0.30,
+    rs = simulate_reads(g, 2, ReadSimConfig(read_len=200, error_rate=0.20,
                                             seed=22))
-    al = GenASMAligner(AlignerConfig(W=64, O=24, k=8), rescue_rounds=2)
+    al = GenASMAligner(AlignerConfig(W=64, O=24, k=8), rescue_rounds=1)
     res = al.align(rs.reads, rs.ref_segments)
     assert (res.k_used[~res.failed] >= 8).all()
     for i in range(len(rs.reads)):
         if not res.failed[i]:
             validate_cigar(rs.reads[i], rs.ref_segments[i], res.ops[i],
                            expected_dist=res.dist[i])
-    assert res.failed.sum() <= 1  # most should rescue at k=16/32
+    assert res.failed.sum() <= 1  # most should rescue at k=16
 
 
-def test_decoy_pairs_fail(rng):
+def test_decoy_pairs_fail(readset):
+    """The reads against unrelated reference segments must fail (same
+    window geometry as the shared readset -> reuses its compile)."""
     g = synth_genome(50_000, seed=31)
-    rs = simulate_reads(g, 2, ReadSimConfig(read_len=300, error_rate=0.05,
-                                            seed=32))
-    decoys = [g[40_000:40_000 + len(s)] for s in rs.ref_segments]
-    al = GenASMAligner(AlignerConfig(W=64, O=24, k=12), rescue_rounds=0)
-    res = al.align(rs.reads, decoys)
+    reads = readset.reads[:2]
+    decoys = [g[40_000:40_000 + len(s)] for s in readset.ref_segments[:2]]
+    al = GenASMAligner(CFG_BAND, rescue_rounds=0)
+    res = al.align(reads, decoys)
     assert res.failed.all()
