@@ -21,6 +21,7 @@ import numpy as np
 
 from repro.baselines.dp import banded_affine_dist
 from repro.baselines.myers import myers_distance
+from repro.core import transfer
 from repro.core.aligner import GenASMAligner
 from repro.core.config import AlignerConfig
 from repro.data.genome import ReadSimConfig, simulate_reads, synth_genome
@@ -106,6 +107,40 @@ def run(n_reads=24, read_len=1000, error_rate=0.10, seed=0):
     return rows, n_reads, read_len
 
 
+def rescue_paths(n_reads=8, read_len=400, seed=3, rescue_rounds=2):
+    """On-device masked k-doubling vs the host numpy rescue loop on a
+    high-error read set (most pairs need at least one rescue round).
+    Reports wall time AND host<->device transfer telemetry per align call
+    — the host loop's per-round re-upload/download is exactly the traffic
+    the on-device path deletes."""
+    g = synth_genome(200_000, seed=seed)
+    rs = simulate_reads(g, n_reads, ReadSimConfig(read_len=read_len,
+                                                  error_rate=0.20,
+                                                  seed=seed + 1))
+    cfg = AlignerConfig(W=64, O=24, k=6)
+    rows, derived = [], {}
+    for name, mode in (("rescue_device", "device"), ("rescue_host", "host")):
+        al = GenASMAligner(cfg, rescue_rounds=rescue_rounds, rescue_mode=mode)
+        t = _median_time(lambda al=al: al.align(rs.reads, rs.ref_segments))
+        transfer.reset()
+        res = al.align(rs.reads, rs.ref_segments)
+        s = transfer.stats()
+        n_resc = int((res.k_used[~res.failed] > cfg.k).sum())
+        rows.append((f"aligners/{name}", t * 1e6 / n_reads,
+                     f"h2d={s.h2d_calls}x{s.h2d_bytes}B_d2h="
+                     f"{s.d2h_calls}x{s.d2h_bytes}B_rescued={n_resc}"))
+        derived[f"{name}_wall_s"] = t
+        derived[f"{name}_h2d_calls"] = s.h2d_calls
+        derived[f"{name}_d2h_calls"] = s.d2h_calls
+        derived[f"{name}_bytes_per_align"] = s.h2d_bytes + s.d2h_bytes
+    derived["rescue_device_vs_host_wall"] = (
+        derived["rescue_host_wall_s"] / derived["rescue_device_wall_s"])
+    derived["rescue_transfer_bytes_saved_per_align"] = (
+        derived["rescue_host_bytes_per_align"]
+        - derived["rescue_device_bytes_per_align"])
+    return rows, derived
+
+
 def table(n_reads=24, read_len=1000):
     rows, n, L = run(n_reads, read_len)
     t = dict(rows)
@@ -122,4 +157,8 @@ def table(n_reads=24, read_len=1000):
         "dc_engine_vs_edlib_like": t["edlib_like_myers"]
                                    / t["genasm_dc_distance_only"],
     }
+    r_rows, r_derived = rescue_paths(n_reads=max(4, n_reads // 3),
+                                     read_len=min(400, L))
+    out += r_rows
+    derived.update(r_derived)
     return out, derived

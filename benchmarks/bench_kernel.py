@@ -16,11 +16,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.bitops import SENTINEL_PAT, SENTINEL_TEXT
 from repro.core.config import AlignerConfig
 from repro.core.genasm import dc_dmajor, dc_jmajor
 from repro.core.traceback import traceback
-from repro.kernels.genasm_dc import default_max_ops, default_max_steps, vmem_bytes
-from repro.kernels.ops import genasm_dc_op, genasm_tb_fused_op
+from repro.kernels.genasm_dc import (default_max_ops, default_max_steps,
+                                     vmem_bytes, vmem_bytes_tail)
+from repro.kernels.ops import (genasm_dc_op, genasm_tail_fused_op,
+                               genasm_tb_fused_op)
 
 
 def _t(fn, reps=3):
@@ -58,6 +61,10 @@ def table(B=4096, W=64, k=12):
     f_rows, f_derived = fused_vs_split(B=min(B, 256))
     rows += f_rows
     derived.update(f_derived)
+
+    t_rows, t_derived = tail_fused_vs_split(B=min(B, 128))
+    rows += t_rows
+    derived.update(t_derived)
     return rows, derived
 
 
@@ -100,4 +107,68 @@ def fused_vs_split(B=256, W=32, k=7, tile=128):
     ]
     derived = {"fused_vs_split_wall": t_split / t_fused,
                "fused_hbm_traffic_ratio": out_bytes / (band_bytes + out_bytes)}
+    return rows, derived
+
+
+def tail_fused_vs_split(B=128, W=32, k=7, tile=64):
+    """Rectangular-tail window: the fused tail kernel vs the jnp 'and'-store
+    fill + host traceback it replaces, on ragged (m_len <= W, n_len <= wt)
+    tails like core.windowing produces.  Also reports the store round-trip
+    bytes the fusion removes and the tail kernel's VMEM footprint."""
+    rng = np.random.default_rng(2)
+    cfg = AlignerConfig(W=W, O=max(1, W // 3), k=k)
+    wt = W + 4 * k
+    max_ops_t, max_steps_t = W + wt, W + wt + 4
+    pat = np.full((B, W), SENTINEL_PAT, np.uint8)
+    txt = np.full((B, wt), SENTINEL_TEXT, np.uint8)
+    ml = np.zeros(B, np.int32)
+    nl = np.zeros(B, np.int32)
+    for b in range(B):
+        m = int(rng.integers(W // 2, W + 1))
+        n = int(np.clip(m + rng.integers(-k, k + 1), 1, wt))
+        p = rng.integers(0, 4, m).astype(np.uint8)
+        t = p.copy()
+        for _ in range(int(rng.integers(0, k))):
+            t[rng.integers(0, len(t))] = rng.integers(0, 4)
+        t = t[:n] if len(t) >= n else np.concatenate(
+            [t, rng.integers(0, 4, n - len(t)).astype(np.uint8)])
+        pat[b, :m] = p[::-1]
+        txt[b, :n] = t[::-1]
+        ml[b], nl[b] = m, n
+    patj, txtj = jnp.asarray(pat), jnp.asarray(txt)
+    mlj, nlj = jnp.asarray(ml), jnp.asarray(nl)
+
+    def split():
+        res = dc_jmajor(patj, txtj, mlj, nlj, k=k, n=wt, nw=cfg.nw,
+                        store="and")
+        tb = traceback(res.store, patj, txtj, mlj, nlj, res.dist,
+                       jnp.int32(2 * (W + wt)), cfg=cfg, mode="and",
+                       max_ops=max_ops_t, max_steps=max_steps_t)
+        return tb["n_ops"]
+
+    def fused():
+        return genasm_tail_fused_op(patj, txtj, mlj, nlj, cfg=cfg, n_text=wt,
+                                    commit_limit=2 * (W + wt),
+                                    max_ops=max_ops_t, max_steps=max_steps_t,
+                                    tile=tile)["n_ops"]
+
+    t_split = _t(lambda: jax.block_until_ready(split()))
+    t_fused = _t(lambda: jax.block_until_ready(fused()))
+    # the full SENE store the split path round-trips per problem per tail
+    store_bytes = 2 * (k + 1) * (wt + 1) * cfg.nw * 4
+    out_bytes = (max_ops_t + 8) * 4
+    vmem = vmem_bytes_tail(cfg, 256, max_ops=max_ops_t)
+    rows = [
+        (f"kernel/tail_split_and_store_B{B}_W{W}", t_split * 1e6,
+         f"us_per_tail={t_split/B*1e6:.2f}_interpret"),
+        (f"kernel/tail_fused_B{B}_W{W}", t_fused * 1e6,
+         f"us_per_tail={t_fused/B*1e6:.2f}_interpret"),
+        ("kernel/tail_fused_hbm_bytes_saved", 0.0,
+         f"store_roundtrip={store_bytes}B_vs_ops_out={out_bytes}B"),
+        ("kernel/tail_vmem_tile256_bytes", 0.0,
+         f"{vmem}_of_16MiB={vmem/(16*2**20):.2%}"),
+    ]
+    derived = {"tail_fused_vs_split_wall": t_split / t_fused,
+               "tail_hbm_traffic_ratio": out_bytes / (store_bytes + out_bytes),
+               "tail_vmem_fraction": vmem / (16 * 2**20)}
     return rows, derived

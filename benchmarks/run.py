@@ -14,16 +14,26 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="smaller problem sizes (CI)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also dump rows + derived metrics as JSON "
+                         "(uploaded as a CI artifact to track the perf "
+                         "trajectory)")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
+    all_rows = []
     all_derived = {}
+
+    def emit(rows):
+        for n, us, d in rows:
+            print(f"{n},{us:.1f},{d}")
+            all_rows.append({"name": n, "us_per_call": float(us),
+                             "derived": str(d)})
 
     from benchmarks import bench_aligners
     rows, derived = bench_aligners.table(
         n_reads=8 if args.fast else 24, read_len=500 if args.fast else 1000)
-    for n, us, d in rows:
-        print(f"{n},{us:.1f},{d}")
+    emit(rows)
     all_derived["aligners"] = derived
     print(f"aligners/speedup_improved_vs_unimproved,0.0,"
           f"{derived['improved_vs_unimproved']:.2f}x_paper_cpu1.9x")
@@ -38,27 +48,29 @@ def main() -> None:
 
     from benchmarks import bench_memory
     rows, derived = bench_memory.table()
-    for n, us, d in rows:
-        print(f"{n},{us:.1f},{d}")
+    emit(rows)
     all_derived["memory"] = {k: {kk: float(vv) for kk, vv in v.items()}
                              for k, v in derived.items()}
 
     from benchmarks import bench_kernel
     rows, derived = bench_kernel.table(B=1024 if args.fast else 4096)
-    for n, us, d in rows:
-        print(f"{n},{us:.1f},{d}")
+    emit(rows)
     all_derived["kernel"] = derived
 
     try:
         from benchmarks import roofline_table
         rows, _ = roofline_table.rows()
-        for n, us, d in rows:
-            print(f"{n},{us:.1f},{d}")
+        emit(rows)
     except Exception as e:  # dry-run cells not generated yet
         print(f"roofline/unavailable,0.0,{e}")
 
     print("# derived summary (JSON):")
     print(json.dumps(all_derived, indent=1, default=float))
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump({"rows": all_rows, "derived": all_derived}, fh,
+                      indent=1, default=float)
+        print(f"# wrote {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -1,23 +1,53 @@
 """Public aligner API: batch alignment of (read, candidate-ref) pairs with
-failure rescue, host-side padding, and CIGAR decoding."""
+failure rescue, host-side padding, and CIGAR decoding.
+
+Rescue (pairs whose per-window edit distance exceeds cfg.k retried with
+doubled k) runs in one of two modes:
+
+* ``device`` (default) — a single jitted ``align_pairs_rescued`` call: all
+  k-doubling rounds execute on-device under a per-lane mask, so a batch is
+  uploaded once and downloaded once no matter how many rounds run.
+* ``host`` — the legacy numpy loop (re-pad and re-upload the failed subset
+  every round).  Kept as the differential reference: both modes are
+  bit-identical per lane (ops, dist, k_used, failed — see
+  tests/test_rescue.py) and both are transfer-accounted via core.transfer.
+"""
 from __future__ import annotations
 
 import dataclasses
 
-import jax.numpy as jnp
 import numpy as np
 
+from . import transfer
 from .config import AlignerConfig
-from .oracle import OP_CHARS
 from .cigar import ops_to_string
-from .traceback import OP_NONE
-from .windowing import SENTINEL_READ, SENTINEL_REF, align_pairs, self_tail_width
+from .windowing import (SENTINEL_READ, SENTINEL_REF, align_pairs,
+                        align_pairs_rescued, rescue_schedule, self_tail_width)
 
 DNA = "ACGT"
 
 
 def encode(seq: str) -> np.ndarray:
+    """Encode a READ: non-ACGT chars (N, IUPAC codes) -> SENTINEL_READ,
+    which never matches any reference character."""
     lut = np.full(128, SENTINEL_READ, np.uint8)
+    for i, c in enumerate(DNA):
+        lut[ord(c)] = i
+        lut[ord(c.lower())] = i
+    return lut[np.frombuffer(seq.encode(), np.uint8)]
+
+
+def encode_ref(seq: str) -> np.ndarray:
+    """Encode a REFERENCE: non-ACGT chars -> SENTINEL_REF (the all-ones PM
+    row), which never matches any read character — including a read 'N'.
+
+    Refs must NOT be encoded with ``encode``: a ref 'N' mapped to
+    SENTINEL_READ would raw-compare equal to a read 'N' in the jnp
+    traceback while the DP's pattern masks say mismatch, diverging from
+    the PM-based Pallas kernels.  ``encode_ref`` keeps all backends (and
+    the DP itself) consistent: N never matches anything.
+    """
+    lut = np.full(128, SENTINEL_REF, np.uint8)
     for i, c in enumerate(DNA):
         lut[ord(c)] = i
         lut[ord(c.lower())] = i
@@ -39,18 +69,22 @@ class GenASMAligner:
     cfg.store/early_term select the variant (defaults = all three paper
     improvements on); cfg.backend (or the `backend` override) selects the
     execution path — 'jnp', 'pallas' (kernel DC + host traceback) or
-    'pallas_fused' (DC+TB fused on-chip).  Pairs whose per-window edit
-    distance exceeds cfg.k are retried with doubled k up to `rescue_rounds`
-    times (host-side), mirroring common practice for threshold-based
-    aligners; rescue rounds reuse the same backend with the doubled k.
+    'pallas_fused' (DC+TB fused on-chip, including the rectangular tail
+    window).  Pairs whose per-window edit distance exceeds cfg.k are
+    retried with doubled k up to `rescue_rounds` times; `rescue_mode`
+    selects the on-device masked multi-round path (default) or the legacy
+    host loop (see module docstring).
     """
 
     def __init__(self, cfg: AlignerConfig = AlignerConfig(),
-                 rescue_rounds: int = 2, backend: str | None = None):
+                 rescue_rounds: int = 2, backend: str | None = None,
+                 rescue_mode: str = "device"):
         if backend is not None:
             cfg = dataclasses.replace(cfg, backend=backend)
+        assert rescue_mode in ("device", "host")
         self.cfg = cfg
         self.rescue_rounds = rescue_rounds
+        self.rescue_mode = rescue_mode
 
     def _pad(self, seqs, width, pad_val):
         B = len(seqs)
@@ -62,10 +96,43 @@ class GenASMAligner:
         return out, lens
 
     def align(self, reads, refs) -> AlignResult:
-        """reads/refs: lists of np.uint8 code arrays (see `encode`)."""
+        """reads/refs: lists of np.uint8 code arrays (see `encode` /
+        `encode_ref`)."""
         assert len(reads) == len(refs)
+        if self.rescue_mode == "host":
+            return self._align_host_loop(reads, refs)
+        return self._align_device(reads, refs)
+
+    def _align_device(self, reads, refs) -> AlignResult:
+        """One upload, one jitted multi-round rescue, one download."""
+        cfg = self.cfg
+        max_read_len = max(len(r) for r in reads)
+        # pad ref sentinels for the FINAL rescue round's tail width
+        wt = self_tail_width(rescue_schedule(cfg, self.rescue_rounds)[-1])
+        rpad, rlen = self._pad(reads, max_read_len + cfg.W + 1, SENTINEL_READ)
+        fpad, flen = self._pad(refs,
+                               max(len(f) for f in refs) + cfg.W + wt + 1,
+                               SENTINEL_REF)
+        dev = transfer.to_device((rpad, rlen, fpad, flen))
+        out = align_pairs_rescued(*dev, cfg=cfg, max_read_len=max_read_len,
+                                  rescue_rounds=self.rescue_rounds)
+        host = transfer.to_host({key: out[key] for key in
+                                 ("ops", "n_ops", "dist", "failed", "k_used")})
+        failed = np.asarray(host["failed"])
+        n_ops = np.asarray(host["n_ops"])
+        ops_buf = np.asarray(host["ops"])
+        dist = np.where(failed, 0, np.asarray(host["dist"])).astype(np.int64)
+        k_used = np.where(failed, 0, np.asarray(host["k_used"])).astype(np.int32)
+        all_ops = [ops_buf[i, :n_ops[i]] if not failed[i] else None
+                   for i in range(len(reads))]
+        cigars = [ops_to_string(o) if o is not None else "" for o in all_ops]
+        ops_out = [o if o is not None else np.zeros(0, np.uint8)
+                   for o in all_ops]
+        return AlignResult(dist, cigars, ops_out, failed, k_used)
+
+    def _align_host_loop(self, reads, refs) -> AlignResult:
+        """Legacy rescue: re-pad and re-upload the failed subset per round."""
         B = len(reads)
-        max_r = max(len(r) for r in reads)
         cfg = self.cfg
         dist = np.zeros(B, np.int64)
         failed = np.ones(B, bool)
@@ -84,20 +151,20 @@ class GenASMAligner:
             fpad, flen = self._pad(sub_refs,
                                    max(len(f) for f in sub_refs) + cfg.W + wt + 1,
                                    SENTINEL_REF)
-            out = align_pairs(jnp.asarray(rpad), jnp.asarray(rlen),
-                              jnp.asarray(fpad), jnp.asarray(flen),
-                              cfg=cfg, max_read_len=max_read_len)
-            ops = np.asarray(out["ops"])
-            n_ops = np.asarray(out["n_ops"])
-            ok = ~np.asarray(out["failed"])
-            d = np.asarray(out["dist"])
+            dev = transfer.to_device((rpad, rlen, fpad, flen))
+            out = align_pairs(*dev, cfg=cfg, max_read_len=max_read_len)
+            host = transfer.to_host({key: out[key] for key in
+                                     ("ops", "n_ops", "dist", "failed")})
+            ops = host["ops"]
+            n_ops = host["n_ops"]
+            ok = ~host["failed"]
+            d = host["dist"]
             for loc, glob in enumerate(todo):
                 if ok[loc]:
                     all_ops[glob] = ops[loc, :n_ops[loc]]
                     dist[glob] = d[loc]
                     failed[glob] = False
                     k_used[glob] = cfg.k
-            todo = todo[~ok[np.arange(len(todo))]] if len(todo) else todo
             todo = np.array([g for g in todo if failed[g]])
             # rescue: double k (capped below W so the band math stays valid)
             new_k = min(cfg.k * 2, cfg.W - 1)

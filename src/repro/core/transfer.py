@@ -1,0 +1,58 @@
+"""Host<->device transfer accounting for the aligner pipelines.
+
+The paper's bandwidth argument only holds end-to-end if the serving path
+does not quietly round-trip batches through numpy between rescue rounds.
+Every host->device upload and device->host download in core.aligner and
+serve.engine goes through ``to_device`` / ``to_host`` below, so tests and
+benchmarks can assert transfer *counts* (one upload + one download per
+batch for the on-device rescue path, regardless of rescue rounds) and
+report transfer *bytes* per round.  Pure bookkeeping — no behavior change.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class TransferStats:
+    h2d_calls: int = 0
+    h2d_bytes: int = 0
+    d2h_calls: int = 0
+    d2h_bytes: int = 0
+
+
+_STATS = TransferStats()
+
+
+def reset() -> None:
+    global _STATS
+    _STATS = TransferStats()
+
+
+def stats() -> TransferStats:
+    """Snapshot of the counters since the last reset()."""
+    return dataclasses.replace(_STATS)
+
+
+def _nbytes(tree) -> int:
+    return sum(int(np.asarray(leaf).nbytes)
+               for leaf in jax.tree_util.tree_leaves(tree))
+
+
+def to_device(x):
+    """Upload a host array (or pytree of arrays); counts as ONE transfer."""
+    _STATS.h2d_calls += 1
+    _STATS.h2d_bytes += _nbytes(x)
+    return jax.tree_util.tree_map(jnp.asarray, x)
+
+
+def to_host(x):
+    """Download a device array (or pytree); counts as ONE transfer."""
+    out = jax.device_get(x)
+    _STATS.d2h_calls += 1
+    _STATS.d2h_bytes += _nbytes(out)
+    return out

@@ -13,6 +13,7 @@ re-running those pairs with a larger k, see core.aligner).
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
 
 import jax
@@ -135,20 +136,118 @@ def align_pairs(reads, read_len, refs, ref_len, *, cfg: AlignerConfig,
     tail_bad = (n_rem > wt) | (n_rem < jnp.maximum(m_tail - 2 * k, 0))
     pat_t = _slice_rev(reads, read_pos, W, m_tail)
     txt_t = _slice_rev(refs, ref_pos, wt, n_tail)
-    res_t = dc_jmajor(pat_t, txt_t, m_tail, n_tail, k=k, n=wt, nw=cfg.nw,
-                      store="and")
-    tb_t = traceback(res_t.store, pat_t, txt_t, m_tail, n_tail, res_t.dist,
-                     jnp.int32(2 * (W + wt)), cfg=cfg, mode="and",
-                     max_ops=max_ops_t, max_steps=max_steps_t)
-    t_ok = ~failed & ~tail_bad & res_t.solved
+    if cfg.store == "band" and cfg.backend == "pallas_fused":
+        # rectangular-tail fused kernel: the tail's SENE store is walked in
+        # VMEM scratch too, so whole-read alignment never ships DP state to
+        # HBM (bit-identical to the jnp 'and'-store path below)
+        from ..kernels.ops import default_interpret, genasm_tail_fused_op
+        tb_t = genasm_tail_fused_op(pat_t, txt_t, m_tail, n_tail, cfg=cfg,
+                                    n_text=wt, commit_limit=2 * (W + wt),
+                                    max_ops=max_ops_t, max_steps=max_steps_t,
+                                    interpret=default_interpret())
+        solved_t = tb_t["solved"]
+    else:
+        res_t = dc_jmajor(pat_t, txt_t, m_tail, n_tail, k=k, n=wt, nw=cfg.nw,
+                          store="and")
+        tb_t = traceback(res_t.store, pat_t, txt_t, m_tail, n_tail, res_t.dist,
+                         jnp.int32(2 * (W + wt)), cfg=cfg, mode="and",
+                         max_ops=max_ops_t, max_steps=max_steps_t)
+        solved_t = res_t.solved
+    t_ok = ~failed & ~tail_bad & solved_t
     buf = _append_ops(buf, off, tb_t["ops"], jnp.where(t_ok, tb_t["n_ops"], 0),
                       t_ok)
     n_ops = jnp.where(t_ok, off + tb_t["n_ops"], off)
     dist = jnp.where(t_ok, dist + tb_t["cost"], dist)
-    failed = failed | tail_bad | ~res_t.solved
+    failed = failed | tail_bad | ~solved_t
     read_end = jnp.where(t_ok, read_pos + tb_t["read_adv"], read_pos)
     ref_end = jnp.where(t_ok, ref_pos + tb_t["ref_adv"], ref_pos)
 
     return {"ops": buf, "n_ops": n_ops, "dist": dist, "failed": failed,
             "read_consumed": read_end, "ref_consumed": ref_end,
             "levels_run_total": levels, "n_main_windows": jnp.int32(nm)}
+
+
+def rescue_schedule(cfg: AlignerConfig, rescue_rounds: int):
+    """The k-doubling ladder: round r runs with k_r = min(k * 2**r, W - 1),
+    deduplicated once the cap is hit.  Single source of truth for the
+    host-loop and on-device rescue paths (and for padding geometry)."""
+    cfgs = [cfg]
+    for _ in range(rescue_rounds):
+        new_k = min(cfgs[-1].k * 2, cfg.W - 1)
+        if new_k == cfgs[-1].k:
+            break
+        cfgs.append(dataclasses.replace(cfgs[-1], k=new_k))
+    return tuple(cfgs)
+
+
+@partial(jax.jit, static_argnames=("cfg", "max_read_len", "rescue_rounds"))
+def align_pairs_rescued(reads, read_len, refs, ref_len, *, cfg: AlignerConfig,
+                        max_read_len: int, rescue_rounds: int = 2):
+    """Multi-round k-doubling rescue, entirely on-device: one compile, zero
+    host round-trips between rounds.
+
+    Round 0 is plain ``align_pairs``; each later round re-runs the whole
+    batch with doubled k under a ``lax.cond`` gate (skipped outright when no
+    lane is still failed), and a per-lane mask freezes already-solved lanes
+    so their ops/dist/k_used never change — bit-identical per lane to the
+    host numpy rescue loop in core.aligner.
+
+    refs must be sentinel-padded for the FINAL round's tail width
+    (``self_tail_width(rescue_schedule(cfg, rescue_rounds)[-1])``); reads
+    need the usual >= W padding.  Returns the align_pairs dict plus k_used
+    (0 where never solved), rounds_run and n_rounds.
+    """
+    cfgs = rescue_schedule(cfg, rescue_rounds)
+    B = reads.shape[0]
+    budget = total_op_budget(max_read_len, cfgs[-1])
+    ops = jnp.full((B, budget), OP_NONE, jnp.uint8)
+    n_ops = jnp.zeros((B,), jnp.int32)
+    dist = jnp.zeros((B,), jnp.int32)
+    rcon = jnp.zeros((B,), jnp.int32)
+    fcon = jnp.zeros((B,), jnp.int32)
+    k_used = jnp.zeros((B,), jnp.int32)
+    failed = jnp.ones((B,), bool)
+    levels = jnp.int32(0)
+    rounds_run = jnp.int32(0)
+
+    for rnd, cfg_r in enumerate(cfgs):
+        def run_round(cfg_r=cfg_r):
+            return align_pairs(reads, read_len, refs, ref_len, cfg=cfg_r,
+                               max_read_len=max_read_len)
+        if rnd == 0:
+            out = run_round()
+            ran = jnp.bool_(True)
+        else:
+            ran = jnp.any(failed)
+            spec = jax.eval_shape(run_round)
+
+            def skip_round(spec=spec):
+                z = jax.tree_util.tree_map(
+                    lambda s: jnp.zeros(s.shape, s.dtype), spec)
+                z["failed"] = jnp.ones((B,), bool)  # nothing merges
+                return z
+
+            out = jax.lax.cond(ran, run_round, skip_round)
+        newly = failed & ~out["failed"]
+        # final round also merges the partial progress (committed main-window
+        # ops/dist) of still-failed lanes, so rescue_rounds=0 is bit-equal to
+        # plain align_pairs; a skipped final round has no failed lanes.
+        upd = newly
+        if rnd == len(cfgs) - 1:
+            upd = newly | (failed & out["failed"])
+        ops_r = jnp.pad(out["ops"], ((0, 0), (0, budget - out["ops"].shape[1])),
+                        constant_values=OP_NONE)
+        ops = jnp.where(upd[:, None], ops_r, ops)
+        n_ops = jnp.where(upd, out["n_ops"], n_ops)
+        dist = jnp.where(upd, out["dist"], dist)
+        rcon = jnp.where(upd, out["read_consumed"], rcon)
+        fcon = jnp.where(upd, out["ref_consumed"], fcon)
+        k_used = jnp.where(newly, jnp.int32(cfg_r.k), k_used)
+        failed = failed & out["failed"]
+        levels = levels + out["levels_run_total"]
+        rounds_run = rounds_run + ran.astype(jnp.int32)
+
+    return {"ops": ops, "n_ops": n_ops, "dist": dist, "failed": failed,
+            "k_used": k_used, "read_consumed": rcon, "ref_consumed": fcon,
+            "levels_run_total": levels, "rounds_run": rounds_run,
+            "n_rounds": jnp.int32(len(cfgs))}

@@ -101,6 +101,35 @@ def _pm_lookup(pm_ref, cj, nw, n_sym=4):
     return out
 
 
+def _shift1_words(words, carry_in, nw):
+    """Left-shift a word-list bitvector (LSW first) by one; carry_in at bit 0.
+    words: list of nw (TB,) uint32."""
+    out, carry = [], carry_in
+    for w in range(nw):
+        out.append((words[w] << jnp.uint32(1)) | carry)
+        carry = words[w] >> jnp.uint32(WORD - 1)
+    return out
+
+
+def _ones_below_words(d, nw, lane_shape):
+    """(nw-word, lanes) GenASM level-d init vector ~0 << d for traced d."""
+    out = []
+    for w in range(nw):
+        lo = jnp.clip(d - w * WORD, 0, WORD)
+        val = jnp.where(lo >= WORD, jnp.uint32(0),
+                        jnp.uint32(0xFFFFFFFF) << lo.astype(jnp.uint32))
+        out.append(jnp.broadcast_to(val, lane_shape))
+    return out
+
+
+def _word_select(words, w0):
+    """Per-lane dynamic word pick from a word list; w0: (TB,) int32."""
+    word = words[0]
+    for w in range(1, len(words)):
+        word = jnp.where(w0 == w, words[w], word)
+    return word
+
+
 def _dc_phase(pm_ref, text_ref, rows_ref, band_ref, *, cfg: AlignerConfig):
     """Fill the improved GenASM-DC levels, storing DENT band windows into
     band_ref (output block or VMEM scratch).  Returns (dist, d_end)."""
@@ -111,23 +140,10 @@ def _dc_phase(pm_ref, text_ref, rows_ref, band_ref, *, cfg: AlignerConfig):
     tgt_w, tgt_o = (W - 1) // WORD, jnp.uint32((W - 1) % WORD)
 
     def shift1_words(words, carry_in):
-        """words: list of (TB,) uint32, LSW first."""
-        out = []
-        carry = carry_in
-        for w in range(nw):
-            out.append((words[w] << jnp.uint32(1)) | carry)
-            carry = words[w] >> jnp.uint32(WORD - 1)
-        return out
+        return _shift1_words(words, carry_in, nw)
 
     def ones_below(d):
-        """(nw, TB) init vector ~0 << d for traced scalar d."""
-        out = []
-        for w in range(nw):
-            lo = jnp.clip(d - w * WORD, 0, WORD)
-            val = jnp.where(lo >= WORD, jnp.uint32(0),
-                            jnp.uint32(0xFFFFFFFF) << lo.astype(jnp.uint32))
-            out.append(jnp.broadcast_to(val, text_ref.shape[1:]))
-        return out
+        return _ones_below_words(d, nw, text_ref.shape[1:])
 
     def store_band(d, j, words):
         """Funnel-shift extract the band window of column j and store it."""
@@ -229,76 +245,16 @@ def _kernel(pm_ref, text_ref, band_ref, dist_ref, lvl_ref, rows_ref, *,
     lvl_ref[0, :] = jnp.broadcast_to(d_end, lvl_ref.shape[1:]).astype(jnp.int32)
 
 
-def _kernel_fused(pm_ref, text_ref, ops_ref, meta_ref, rows_ref, band_ref, *,
-                  cfg: AlignerConfig, commit_limit: int, max_ops: int,
-                  max_steps: int):
-    """DC phase into VMEM scratch, then GenASM-TB walked in-kernel.
+def _tb_walk(*, TB, dist, k, init_i, init_j, commit_limit, max_ops, max_steps,
+             avail_words, zbit, peq_at, text_at):
+    """Shared in-kernel GenASM-TB walk, bit-identical to core.traceback:
+    per-lane (i, j, d) cursors advanced with the =,X,D,I preference order, a
+    tail drain (pattern exhausted -> remaining text as deletions), and the
+    commit-limit stop.  ``avail_words(dd, jj)`` gathers the stored bitvector
+    words of (level dd, column jj); ``zbit(words, dd, jj, ii)`` tests bit ii.
 
-    The walk mirrors core.traceback (mode='band') bit for bit: SENE edge
-    availability is recomputed from neighbouring stored band windows + the
-    PM masks, with the =,X,D,I preference order, a per-lane tail drain, and
-    the commit-limit stop.  Per-lane dynamic (d, j) band reads use one-hot
-    sums over the small static (k+1, ncols_band) axes — the inverted form
-    of store_band's funnel-shift stores.
-    """
-    W, k, nw, nwb = cfg.W, cfg.k, cfg.nw, cfg.nwb
-    m_pad = cfg.m_pad
-    ncb = cfg.ncols_band
-    col0 = W + 1 - ncb
-    TB = text_ref.shape[1]
-    u1 = jnp.uint32(1)
-
-    # uncomputed (early-terminated) levels must read as zero, like the jnp
-    # path's zeros-initialized band buffer
-    band_ref[:, :, :, :] = jnp.zeros((k + 1, ncb, nwb, TB), jnp.uint32)
-
-    dist, d_end = _dc_phase(pm_ref, text_ref, rows_ref, band_ref, cfg=cfg)
-
-    # ---------------- traceback phase ----------------
-    d_ids = jax.lax.broadcasted_iota(jnp.int32, (k + 1, ncb, TB), 0)
-    s_ids = jax.lax.broadcasted_iota(jnp.int32, (k + 1, ncb, TB), 1)
-    t_ids = jax.lax.broadcasted_iota(jnp.int32, (W, TB), 0)
+    Returns the final (i, j, d, nops, ops, rd, rf, done, ok) state."""
     slot_ids = jax.lax.broadcasted_iota(jnp.int32, (max_ops, TB), 0)
-
-    def band_words(dd, jj):
-        """Per-lane gather of the stored band window of (level dd, col jj),
-        clipped like core.traceback._zbit_band."""
-        onehot = ((d_ids == jnp.clip(dd, 0, k)[None, None, :]) &
-                  (s_ids == jnp.clip(jj - col0, 0, ncb - 1)[None, None, :]))
-        return [jnp.sum(jnp.where(onehot, band_ref[:, :, b, :], jnp.uint32(0)),
-                        axis=(0, 1), dtype=jnp.uint32) for b in range(nwb)]
-
-    def zbit(words, dd, jj, ii):
-        """bit ii of the band window == 0; ii == -1 encodes the DP's first
-        column: ED(0, jj) <= dd  ⟺  jj <= dd."""
-        base = _band_base(jj, k, m_pad, nwb)
-        off = ii - base
-        inband = (off >= 0) & (off < nwb * WORD)
-        offc = jnp.clip(off, 0, nwb * WORD - 1)
-        w0 = offc // WORD
-        o = (offc % WORD).astype(jnp.uint32)
-        word = words[0]
-        for b in range(1, nwb):
-            word = jnp.where(w0 == b, words[b], word)
-        bit = (word >> o) & u1
-        return jnp.where(ii < 0, jj <= dd, (bit == 0) & inband)
-
-    def text_at(jj):
-        """text char of column jj (= text index jj-1, clipped)."""
-        onehot = t_ids == jnp.clip(jj - 1, 0, W - 1)[None, :]
-        return jnp.sum(jnp.where(onehot, text_ref[:, :], 0),
-                       axis=0).astype(jnp.int32)
-
-    def peq_at(cj, ii):
-        """P[ii] == text char cj, via the PM masks (sentinels never match)."""
-        words = _pm_lookup(pm_ref, cj, nw)
-        iic = jnp.clip(ii, 0, m_pad - 1)
-        w0 = iic // WORD
-        o = (iic % WORD).astype(jnp.uint32)
-        word = words[0]
-        for w in range(1, nw):
-            word = jnp.where(w0 == w, words[w], word)
-        return ((word >> o) & u1) == 0
 
     def body(state):
         i, j, d, nops, ops, rd, rf, done, ok = state
@@ -306,9 +262,9 @@ def _kernel_fused(pm_ref, text_ref, ops_ref, meta_ref, rows_ref, band_ref, *,
         stopped = rd >= commit_limit
         active = ~done & ~stopped
 
-        w_d_jm1 = band_words(d, j - 1)
-        w_dm1_jm1 = band_words(d - 1, j - 1)
-        w_dm1_j = band_words(d - 1, j)
+        w_d_jm1 = avail_words(d, j - 1)
+        w_dm1_jm1 = avail_words(d - 1, j - 1)
+        w_dm1_j = avail_words(d - 1, j)
         peq = peq_at(text_at(j), i)
         mA = (j > 0) & peq & zbit(w_d_jm1, d, j - 1, i - 1)
         sA = (j > 0) & (d > 0) & zbit(w_dm1_jm1, d - 1, j - 1, i - 1)
@@ -359,8 +315,8 @@ def _kernel_fused(pm_ref, text_ref, ops_ref, meta_ref, rows_ref, band_ref, *,
     zeros = jnp.zeros((TB,), jnp.int32)
     skip = dist > k
     init = (
-        jnp.full((TB,), W - 1, jnp.int32),          # i (m_len - 1)
-        jnp.full((TB,), W, jnp.int32),              # j (n_len)
+        init_i,                                     # i (m_len - 1)
+        init_j,                                     # j (n_len)
         dist,                                       # d
         zeros,                                      # nops
         jnp.full((max_ops, TB), OP_NONE, jnp.int32),
@@ -369,8 +325,77 @@ def _kernel_fused(pm_ref, text_ref, ops_ref, meta_ref, rows_ref, band_ref, *,
         skip,                                       # done
         jnp.ones((TB,), bool),                      # ok
     )
-    i, j, d, nops, ops, rd, rf, done, ok = jax.lax.fori_loop(
-        0, max_steps, walk_body, init)
+    return jax.lax.fori_loop(0, max_steps, walk_body, init)
+
+
+def _kernel_fused(pm_ref, text_ref, ops_ref, meta_ref, rows_ref, band_ref, *,
+                  cfg: AlignerConfig, commit_limit: int, max_ops: int,
+                  max_steps: int):
+    """DC phase into VMEM scratch, then GenASM-TB walked in-kernel.
+
+    The walk mirrors core.traceback (mode='band') bit for bit: SENE edge
+    availability is recomputed from neighbouring stored band windows + the
+    PM masks, with the =,X,D,I preference order, a per-lane tail drain, and
+    the commit-limit stop.  Per-lane dynamic (d, j) band reads use one-hot
+    sums over the small static (k+1, ncols_band) axes — the inverted form
+    of store_band's funnel-shift stores.
+    """
+    W, k, nw, nwb = cfg.W, cfg.k, cfg.nw, cfg.nwb
+    m_pad = cfg.m_pad
+    ncb = cfg.ncols_band
+    col0 = W + 1 - ncb
+    TB = text_ref.shape[1]
+    u1 = jnp.uint32(1)
+
+    # uncomputed (early-terminated) levels must read as zero, like the jnp
+    # path's zeros-initialized band buffer
+    band_ref[:, :, :, :] = jnp.zeros((k + 1, ncb, nwb, TB), jnp.uint32)
+
+    dist, d_end = _dc_phase(pm_ref, text_ref, rows_ref, band_ref, cfg=cfg)
+
+    # ---------------- traceback phase ----------------
+    d_ids = jax.lax.broadcasted_iota(jnp.int32, (k + 1, ncb, TB), 0)
+    s_ids = jax.lax.broadcasted_iota(jnp.int32, (k + 1, ncb, TB), 1)
+    t_ids = jax.lax.broadcasted_iota(jnp.int32, (W, TB), 0)
+
+    def band_words(dd, jj):
+        """Per-lane gather of the stored band window of (level dd, col jj),
+        clipped like core.traceback._zbit_band."""
+        onehot = ((d_ids == jnp.clip(dd, 0, k)[None, None, :]) &
+                  (s_ids == jnp.clip(jj - col0, 0, ncb - 1)[None, None, :]))
+        return [jnp.sum(jnp.where(onehot, band_ref[:, :, b, :], jnp.uint32(0)),
+                        axis=(0, 1), dtype=jnp.uint32) for b in range(nwb)]
+
+    def zbit(words, dd, jj, ii):
+        """bit ii of the band window == 0; ii == -1 encodes the DP's first
+        column: ED(0, jj) <= dd  ⟺  jj <= dd."""
+        base = _band_base(jj, k, m_pad, nwb)
+        off = ii - base
+        inband = (off >= 0) & (off < nwb * WORD)
+        offc = jnp.clip(off, 0, nwb * WORD - 1)
+        o = (offc % WORD).astype(jnp.uint32)
+        bit = (_word_select(words, offc // WORD) >> o) & u1
+        return jnp.where(ii < 0, jj <= dd, (bit == 0) & inband)
+
+    def text_at(jj):
+        """text char of column jj (= text index jj-1, clipped)."""
+        onehot = t_ids == jnp.clip(jj - 1, 0, W - 1)[None, :]
+        return jnp.sum(jnp.where(onehot, text_ref[:, :], 0),
+                       axis=0).astype(jnp.int32)
+
+    def peq_at(cj, ii):
+        """P[ii] == text char cj, via the PM masks (sentinels never match)."""
+        words = _pm_lookup(pm_ref, cj, nw)
+        iic = jnp.clip(ii, 0, m_pad - 1)
+        o = (iic % WORD).astype(jnp.uint32)
+        return ((_word_select(words, iic // WORD) >> o) & u1) == 0
+
+    i, j, d, nops, ops, rd, rf, done, ok = _tb_walk(
+        TB=TB, dist=dist, k=k,
+        init_i=jnp.full((TB,), W - 1, jnp.int32),
+        init_j=jnp.full((TB,), W, jnp.int32),
+        commit_limit=commit_limit, max_ops=max_ops, max_steps=max_steps,
+        avail_words=band_words, zbit=zbit, peq_at=peq_at, text_at=text_at)
 
     ops_ref[:, :] = ops
     meta_ref[META_DIST, :] = dist
@@ -380,7 +405,7 @@ def _kernel_fused(pm_ref, text_ref, ops_ref, meta_ref, rows_ref, band_ref, *,
     meta_ref[META_RF, :] = rf
     meta_ref[META_DFIN, :] = d
     meta_ref[META_OK, :] = ok.astype(jnp.int32)
-    meta_ref[META_ROWS - 1, :] = zeros
+    meta_ref[META_ROWS - 1, :] = jnp.zeros((TB,), jnp.int32)
 
 
 def genasm_dc_pallas(pm, text, *, cfg: AlignerConfig, tile: int = 128,
@@ -459,4 +484,202 @@ def genasm_tb_fused_pallas(pm, text, *, cfg: AlignerConfig, commit_limit: int,
         ],
         interpret=interpret,
     )(pm, text)
+    return ops, meta
+
+
+def vmem_bytes_tail(cfg: AlignerConfig, tile: int,
+                    max_ops: int | None = None) -> int:
+    """On-chip working set of the rectangular-tail fused kernel per problem
+    tile: the full (k+1, wt+1, NW) SENE store (no provable DENT band exists
+    for per-lane rectangular geometry) plus IO blocks and traceback state."""
+    wt = cfg.W + 4 * cfg.k
+    store = (cfg.k + 1) * (wt + 1) * cfg.nw * tile * 4
+    io = (5 * cfg.nw + wt + 4) * tile * 4
+    mo = (cfg.W + wt) if max_ops is None else max_ops
+    return store + io + (mo + META_ROWS + 16) * tile * 4
+
+
+def _kernel_tail_fused(pm_ref, text_ref, mlen_ref, nlen_ref, ops_ref, meta_ref,
+                       rfull_ref, *, cfg: AlignerConfig, n_text: int,
+                       commit_limit: int, max_ops: int, max_steps: int):
+    """Rectangular-tail fused DC+TB (the whole-read tail window on-chip).
+
+    Unlike the square main-window kernel the tail is rectangular and ragged:
+    per-lane m_len <= W pattern chars against n_len <= n_text text chars.
+    No provable DENT band exists for that geometry, so the DP stores the
+    full SENE ('and') vectors for every (level, column) in VMEM scratch and
+    the traceback walks them in-kernel — the exact analogue of
+    core.windowing's jnp 'and'-store tail path, bit for bit, with neither
+    the store nor the walk ever leaving the chip.
+
+    Mirrors dc_jmajor semantics: columns beyond a lane's n_len are frozen
+    copies of their left neighbour (hence of column n_len), dist reads the
+    per-lane bit (m_len - 1) of the final column, and the level loop runs
+    whole-tile early termination — the traceback never visits a level above
+    its lane's dist, so ET cannot change results vs the ET-free jnp fill.
+    """
+    W, k, nw = cfg.W, cfg.k, cfg.nw
+    m_pad = cfg.m_pad
+    TB = text_ref.shape[1]
+    u1 = jnp.uint32(1)
+    m_len = mlen_ref[0, :]
+    n_len = nlen_ref[0, :]
+
+    # deterministic reads for ET-skipped levels (never walked, see above)
+    rfull_ref[:, :, :, :] = jnp.zeros((k + 1, n_text + 1, nw, TB), jnp.uint32)
+
+    def col_get(d, j):
+        return [rfull_ref[d, j, w, :] for w in range(nw)]
+
+    def col_set(d, j, words):
+        for w in range(nw):
+            rfull_ref[d, j, w, :] = words[w]
+
+    def level_hit(d):
+        """Per-lane bit (m_len - 1) of the final column == 0.  Empty lanes
+        (m_len == 0) never hit, matching the jnp path's sentinel-region
+        read of bit -1 for every k < WORD - 1 geometry."""
+        last = col_get(d, n_text)
+        t = jnp.clip(m_len - 1, 0, m_pad - 1)
+        o = (t % WORD).astype(jnp.uint32)
+        bit = (_word_select(last, t // WORD) >> o) & u1
+        return (bit == 0) & (m_len >= 1)
+
+    # ---------------- level 0 ----------------
+    col_set(0, 0, _ones_below_words(jnp.int32(0), nw, (TB,)))
+
+    def col_body0(j, _):
+        prev = col_get(0, j - 1)
+        pm_j = _pm_lookup(pm_ref, text_ref[j - 1, :].astype(jnp.int32), nw)
+        bM = ((j - 1) > 0).astype(jnp.uint32)
+        r = [a | b for a, b in zip(_shift1_words(prev, bM, nw), pm_j)]
+        live = j <= n_len
+        col_set(0, j, [jnp.where(live, rw, pw) for rw, pw in zip(r, prev)])
+        return 0
+
+    jax.lax.fori_loop(1, n_text + 1, col_body0, 0)
+    dist0 = jnp.where(level_hit(0), 0, k + 1).astype(jnp.int32)
+
+    # ---------------- levels 1..k with early termination ----------------
+    def fill_level(d):
+        col_set(d, 0, _ones_below_words(d, nw, (TB,)))
+
+        def col_body(j, _):
+            r_prev = col_get(d, j - 1)        # R_{j-1}[d]
+            p_jm1 = col_get(d - 1, j - 1)     # R_{j-1}[d-1]
+            p_j = col_get(d - 1, j)           # R_j[d-1]
+            pm_j = _pm_lookup(pm_ref, text_ref[j - 1, :].astype(jnp.int32), nw)
+            t = j - 1
+            bM = (t > d).astype(jnp.uint32)
+            bS = (t >= d).astype(jnp.uint32)
+            bI = (t >= d - 1).astype(jnp.uint32)
+            M = [a | b for a, b in zip(_shift1_words(r_prev, bM, nw), pm_j)]
+            S = _shift1_words(p_jm1, bS, nw)
+            I = _shift1_words(p_j, bI, nw)
+            r = [M[w] & S[w] & p_jm1[w] & I[w] for w in range(nw)]
+            live = j <= n_len
+            col_set(d, j, [jnp.where(live, rw, pw)
+                           for rw, pw in zip(r, r_prev)])
+            return 0
+
+        jax.lax.fori_loop(1, n_text + 1, col_body, 0)
+        return level_hit(d)
+
+    def lvl_cond(state):
+        d, dist = state
+        go = d <= k
+        if cfg.early_term:
+            go &= jnp.any(dist > k)
+        return go
+
+    def lvl_body(state):
+        d, dist = state
+        hit = fill_level(d)
+        return d + 1, jnp.where((dist > k) & hit, d, dist).astype(jnp.int32)
+
+    d_end, dist = jax.lax.while_loop(lvl_cond, lvl_body, (jnp.int32(1), dist0))
+
+    # ------- traceback phase: full-vector zbit, like core.traceback 'and' ---
+    d_ids = jax.lax.broadcasted_iota(jnp.int32, (k + 1, n_text + 1, TB), 0)
+    c_ids = jax.lax.broadcasted_iota(jnp.int32, (k + 1, n_text + 1, TB), 1)
+    t_ids = jax.lax.broadcasted_iota(jnp.int32, (n_text, TB), 0)
+
+    def r_words(dd, jj):
+        """Per-lane gather of stored R_jj[dd], clipped like _zbit_full."""
+        onehot = ((d_ids == jnp.clip(dd, 0, k)[None, None, :]) &
+                  (c_ids == jnp.clip(jj, 0, n_text)[None, None, :]))
+        return [jnp.sum(jnp.where(onehot, rfull_ref[:, :, w, :], jnp.uint32(0)),
+                        axis=(0, 1), dtype=jnp.uint32) for w in range(nw)]
+
+    def zbit(words, dd, jj, ii):
+        iic = jnp.clip(ii, 0, m_pad - 1)
+        o = (iic % WORD).astype(jnp.uint32)
+        bit = (_word_select(words, iic // WORD) >> o) & u1
+        return jnp.where(ii < 0, jj <= dd, bit == 0)
+
+    def text_at(jj):
+        onehot = t_ids == jnp.clip(jj - 1, 0, n_text - 1)[None, :]
+        return jnp.sum(jnp.where(onehot, text_ref[:, :], 0),
+                       axis=0).astype(jnp.int32)
+
+    def peq_at(cj, ii):
+        words = _pm_lookup(pm_ref, cj, nw)
+        iic = jnp.clip(ii, 0, m_pad - 1)
+        o = (iic % WORD).astype(jnp.uint32)
+        return ((_word_select(words, iic // WORD) >> o) & u1) == 0
+
+    i, j, d, nops, ops, rd, rf, done, ok = _tb_walk(
+        TB=TB, dist=dist, k=k, init_i=m_len - 1, init_j=n_len,
+        commit_limit=commit_limit, max_ops=max_ops, max_steps=max_steps,
+        avail_words=r_words, zbit=zbit, peq_at=peq_at, text_at=text_at)
+
+    ops_ref[:, :] = ops
+    meta_ref[META_DIST, :] = dist
+    meta_ref[META_LVL, :] = jnp.broadcast_to(d_end, (TB,)).astype(jnp.int32)
+    meta_ref[META_NOPS, :] = nops
+    meta_ref[META_RD, :] = rd
+    meta_ref[META_RF, :] = rf
+    meta_ref[META_DFIN, :] = d
+    meta_ref[META_OK, :] = ok.astype(jnp.int32)
+    meta_ref[META_ROWS - 1, :] = jnp.zeros((TB,), jnp.int32)
+
+
+def genasm_tail_fused_pallas(pm, text, m_len, n_len, *, cfg: AlignerConfig,
+                             n_text: int, commit_limit: int, max_ops: int,
+                             max_steps: int, tile: int = 128,
+                             interpret: bool = True):
+    """Fused rectangular-tail DC+TB.  pm: (5, NW, B) uint32; text:
+    (n_text, B) int32; m_len/n_len: (1, B) int32 (kernel layout, problems
+    innermost).  Returns (ops (max_ops, B) int32, meta (META_ROWS, B) int32)
+    like genasm_tb_fused_pallas; the full SENE store lives and dies in VMEM
+    scratch — the tail window never touches HBM either."""
+    _, nw, B = pm.shape
+    assert text.shape[0] == n_text and nw == cfg.nw and B % tile == 0
+    k = cfg.k
+    grid = (B // tile,)
+    kern = functools.partial(_kernel_tail_fused, cfg=cfg, n_text=n_text,
+                             commit_limit=commit_limit, max_ops=max_ops,
+                             max_steps=max_steps)
+    ops, meta = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((5, nw, tile), lambda i: (0, 0, i)),
+            pl.BlockSpec((n_text, tile), lambda i: (0, i)),
+            pl.BlockSpec((1, tile), lambda i: (0, i)),
+            pl.BlockSpec((1, tile), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((max_ops, tile), lambda i: (0, i)),
+            pl.BlockSpec((META_ROWS, tile), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((max_ops, B), jnp.int32),
+            jax.ShapeDtypeStruct((META_ROWS, B), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((k + 1, n_text + 1, nw, tile), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(pm, text, m_len, n_len)
     return ops, meta

@@ -15,7 +15,7 @@ from ..core.config import AlignerConfig
 from ..core.genasm import build_pm_ext
 from .genasm_dc import (META_DFIN, META_DIST, META_LVL, META_NOPS, META_OK,
                         META_RD, META_RF, genasm_dc_pallas,
-                        genasm_tb_fused_pallas)
+                        genasm_tail_fused_pallas, genasm_tb_fused_pallas)
 
 
 def default_interpret() -> bool:
@@ -83,6 +83,10 @@ def genasm_tb_fused_op(pat_codes, text_codes, *, cfg: AlignerConfig,
         max_steps=max_steps, tile=tile, interpret=interpret)
     ops = jnp.transpose(ops_k, (1, 0))[:B].astype(jnp.uint8)   # (B, max_ops)
     meta = meta[:, :B]
+    return _unpack_meta(ops, meta, cfg)
+
+
+def _unpack_meta(ops, meta, cfg):
     dist = meta[META_DIST]
     skip = dist > cfg.k
     return {
@@ -97,3 +101,35 @@ def genasm_tb_fused_op(pat_codes, text_codes, *, cfg: AlignerConfig,
         "solved": ~skip,
         "levels": jnp.max(meta[META_LVL]),
     }
+
+
+@partial(jax.jit, static_argnames=("cfg", "n_text", "commit_limit", "max_ops",
+                                   "max_steps", "tile", "interpret"))
+def genasm_tail_fused_op(pat_codes, text_codes, m_len, n_len, *,
+                         cfg: AlignerConfig, n_text: int, commit_limit: int,
+                         max_ops: int, max_steps: int, tile: int = 128,
+                         interpret: bool = True):
+    """Fused rectangular-tail GenASM-DC+TB: standard layout in, traceback
+    dict out (same contract as the jnp dc_jmajor + traceback mode='and'
+    tail path of core.windowing, bit for bit).
+
+    pat_codes: (B, <= m_pad) reversed tail patterns (sentinel-padded past
+    m_len); text_codes: (B, n_text) reversed tail texts (sentinel-padded
+    past n_len).  Batch-padding lanes are trivial 'A' vs 'A' one-char
+    problems (m_len = n_len = 1): they solve at level 0, so they never
+    stall the kernel's whole-tile early termination, and are trimmed."""
+    B = pat_codes.shape[0]
+    pat_codes, text_codes = _pad_to_tile(pat_codes, text_codes, tile)
+    pad = (-B) % tile
+    m_len = jnp.asarray(m_len, jnp.int32)
+    n_len = jnp.asarray(n_len, jnp.int32)
+    if pad:
+        m_len = jnp.pad(m_len, ((0, pad),), constant_values=1)
+        n_len = jnp.pad(n_len, ((0, pad),), constant_values=1)
+    pm_k, text_k = _to_kernel_layout(pat_codes, text_codes, cfg)
+    ops_k, meta = genasm_tail_fused_pallas(
+        pm_k, text_k, m_len[None, :], n_len[None, :], cfg=cfg, n_text=n_text,
+        commit_limit=commit_limit, max_ops=max_ops, max_steps=max_steps,
+        tile=tile, interpret=interpret)
+    ops = jnp.transpose(ops_k, (1, 0))[:B].astype(jnp.uint8)   # (B, max_ops)
+    return _unpack_meta(ops, meta[:, :B], cfg)

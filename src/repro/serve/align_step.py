@@ -12,7 +12,8 @@ from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from ..core.config import AlignerConfig
-from ..core.windowing import align_pairs, self_tail_width
+from ..core.windowing import (align_pairs, align_pairs_rescued,
+                              rescue_schedule, self_tail_width)
 
 
 def align_step(reads, read_len, refs, ref_len, *, cfg: AlignerConfig,
@@ -24,6 +25,25 @@ def align_step(reads, read_len, refs, ref_len, *, cfg: AlignerConfig,
         "n_failed": jnp.sum(out["failed"].astype(jnp.int32)),
         "total_edits": jnp.sum(out["dist"]),
         "total_ops": jnp.sum(out["n_ops"]),
+    }
+    return out, summary
+
+
+def align_step_rescued(reads, read_len, refs, ref_len, *, cfg: AlignerConfig,
+                       max_read_len: int, rescue_rounds: int):
+    """Sharded alignment with the on-device k-doubling rescue: every rescue
+    round stays inside the one jitted step (no host round-trips between
+    rounds on any shard)."""
+    out = align_pairs_rescued(reads, read_len, refs, ref_len, cfg=cfg,
+                              max_read_len=max_read_len,
+                              rescue_rounds=rescue_rounds)
+    summary = {
+        "n_failed": jnp.sum(out["failed"].astype(jnp.int32)),
+        "n_rescued": jnp.sum((~out["failed"] &
+                              (out["k_used"] > cfg.k)).astype(jnp.int32)),
+        "total_edits": jnp.sum(out["dist"]),
+        "total_ops": jnp.sum(out["n_ops"]),
+        "rounds_run": out["rounds_run"],
     }
     return out, summary
 
@@ -45,9 +65,31 @@ def make_align_step(cfg: AlignerConfig, max_read_len: int, mesh):
                    out_shardings=out_sh)
 
 
-def align_input_specs(batch: int, read_len: int, cfg: AlignerConfig):
-    """ShapeDtypeStructs for the aligner dry-run cell."""
-    wt = self_tail_width(cfg)
+def make_align_step_rescued(cfg: AlignerConfig, max_read_len: int, mesh,
+                            rescue_rounds: int = 2):
+    """Sharded on-device-rescue step (see make_align_step for the sharding
+    rationale; k_used shards with the batch, round counters replicate)."""
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    bsh = NamedSharding(mesh, P(dp, None))
+    vsh = NamedSharding(mesh, P(dp))
+    rep = NamedSharding(mesh, P())
+    out_sh = ({"ops": bsh, "n_ops": vsh, "dist": vsh, "failed": vsh,
+               "k_used": vsh, "read_consumed": vsh, "ref_consumed": vsh,
+               "levels_run_total": rep, "rounds_run": rep, "n_rounds": rep},
+              {"n_failed": rep, "n_rescued": rep, "total_edits": rep,
+               "total_ops": rep, "rounds_run": rep})
+    fn = partial(align_step_rescued, cfg=cfg, max_read_len=max_read_len,
+                 rescue_rounds=rescue_rounds)
+    return jax.jit(fn, in_shardings=(bsh, vsh, bsh, vsh),
+                   out_shardings=out_sh)
+
+
+def align_input_specs(batch: int, read_len: int, cfg: AlignerConfig,
+                      rescue_rounds: int = 0):
+    """ShapeDtypeStructs for the aligner dry-run cell.  With rescue_rounds,
+    the ref padding covers the FINAL round's tail width (the contract of
+    align_pairs_rescued)."""
+    wt = self_tail_width(rescue_schedule(cfg, rescue_rounds)[-1])
     Lr = read_len + cfg.W + 1
     Lf = int(read_len * 1.3) + cfg.W + wt + 1
     sds = jax.ShapeDtypeStruct

@@ -30,30 +30,46 @@ class AlignmentEngine:
     """Micro-batching server: collects requests to batches of `batch_size`
     (or `max_wait_s`), aligns, returns per-request results.  Failed pairs
     (k exceeded after rescue) are reported unaligned, mirroring aligner
-    thresholds in production mappers."""
+    thresholds in production mappers.
+
+    Ragged final batches are padded up to `batch_size` (stable jit shapes,
+    no per-tail recompile) by REPEATING the last real pair: a repeated
+    real pair is exactly as alignable as its twin, so padding lanes can
+    neither keep the on-device rescue loop running extra k-doubling rounds
+    (its round gate is `any(failed)`) nor leak into per-request stats —
+    padded lanes are dropped before results/stats are recorded."""
 
     def __init__(self, cfg: AlignerConfig = AlignerConfig(),
                  batch_size: int = 64, max_wait_s: float = 0.05,
-                 backend: str | None = None):
-        self.aligner = GenASMAligner(cfg, backend=backend)
+                 backend: str | None = None, rescue_rounds: int = 2,
+                 pad_to_batch: bool = True):
+        self.aligner = GenASMAligner(cfg, rescue_rounds=rescue_rounds,
+                                     backend=backend)
         self.batch_size = batch_size
         self.max_wait_s = max_wait_s
+        self.pad_to_batch = pad_to_batch
         self.queue: deque[AlignRequest] = deque()
         self.results: dict[int, dict] = {}
         self.stats = {"batches": 0, "aligned": 0, "failed": 0,
-                      "wall_s": 0.0}
+                      "padded_lanes": 0, "wall_s": 0.0}
 
     def submit(self, req: AlignRequest):
         self.queue.append(req)
 
     def _run_batch(self, batch):
         t0 = time.time()
-        res = self.aligner.align([r.read for r in batch],
-                                 [r.ref for r in batch])
+        reads = [r.read for r in batch]
+        refs = [r.ref for r in batch]
+        n_pad = self.batch_size - len(batch) if self.pad_to_batch else 0
+        if n_pad > 0:
+            reads = reads + [reads[-1]] * n_pad
+            refs = refs + [refs[-1]] * n_pad
+        res = self.aligner.align(reads, refs)
         dt = time.time() - t0
         self.stats["batches"] += 1
+        self.stats["padded_lanes"] += max(0, n_pad)
         self.stats["wall_s"] += dt
-        for i, r in enumerate(batch):
+        for i, r in enumerate(batch):      # padding lanes never reach here
             ok = not res.failed[i]
             self.stats["aligned" if ok else "failed"] += 1
             self.results[r.rid] = {

@@ -43,9 +43,13 @@ def aligned(readset):
     cache = {}
 
     def run(cfg):
+        # rescue_rounds=1: read 0 needs exactly one k-doubling (k_used=24);
+        # the on-device rescue compiles every ladder round up front, so the
+        # shortest sufficient ladder keeps tier-1 compile time down — deeper
+        # ladders get dedicated tests in tests/test_rescue.py.
         if cfg not in cache:
-            cache[cfg] = GenASMAligner(cfg).align(readset.reads,
-                                                  readset.ref_segments)
+            cache[cfg] = GenASMAligner(cfg, rescue_rounds=1).align(
+                readset.reads, readset.ref_segments)
         return cache[cfg]
 
     return run

@@ -1,0 +1,271 @@
+"""Differential fuzz suite: seeded random (read, ref, error-profile) pairs
+aligned by EVERY backend (jnp / pallas / pallas_fused) and by both rescue
+modes (host numpy loop vs on-device masked k-doubling), checked against the
+classic DP oracle (core.oracle) and the KSW2-like banded DP baseline
+(baselines.dp) with unit costs.
+
+The claims CI enforces here:
+  * every produced CIGAR is a valid alignment whose cost equals the
+    reported dist (oracle.validate_cigar),
+  * dist is never below the true edit distance (windowed GenASM is an
+    upper-bound heuristic), and matches the banded-DP baseline within the
+    expected windowing slack on well-behaved profiles,
+  * all backends and both rescue modes are bit-identical (ops, dist,
+    k_used, failed) — the fused-tail + on-device-rescue acceptance sweep
+    (>= 200 pairs) runs nightly (@slow), a fast subset on every push.
+
+Profiles deliberately include indel-heavy, homopolymer, N-base (read 'N'
+encodes to SENTINEL_PAT, ref 'N' to SENTINEL_TEXT — see
+core.aligner.encode_ref) and length-mismatch corner cases.  Uses the
+tests/_hyp shim, so it runs with or without hypothesis installed.
+"""
+import numpy as np
+import pytest
+
+from repro.baselines.dp import banded_affine_dist
+from repro.core.aligner import GenASMAligner
+from repro.core.bitops import SENTINEL_PAT, SENTINEL_TEXT
+from repro.core.config import AlignerConfig
+from repro.core.oracle import levenshtein, validate_cigar
+from tests._hyp import given, settings, st
+
+CFG = AlignerConfig(W=16, O=6, k=4)
+ROUNDS = 1
+PROFILES = ("uniform", "indel_heavy", "homopolymer", "n_base", "len_mismatch")
+# err rate, (sub, ins, del) weights
+_PROFILE_ERR = {
+    "uniform": (0.08, (40, 35, 25)),
+    "indel_heavy": (0.15, (10, 45, 45)),
+    "homopolymer": (0.12, (25, 40, 35)),
+    "n_base": (0.06, (40, 35, 25)),
+    "len_mismatch": (0.08, (40, 35, 25)),
+}
+
+
+def _walk_read(ref, rng, err, fracs, read_len):
+    """Emit a read by walking ref with a (sub, ins, del) error profile;
+    returns (read, ref_span_consumed)."""
+    sub_f, ins_f, del_f = fracs
+    tot = sub_f + ins_f + del_f
+    p_sub, p_ins, p_del = (err * f / tot for f in (sub_f, ins_f, del_f))
+    out = []
+    i = 0
+    while len(out) < read_len and i < len(ref):
+        x = rng.random()
+        if x < p_del:
+            i += 1
+        elif x < p_del + p_ins:
+            out.append(int(rng.integers(0, 4)))
+        elif x < p_del + p_ins + p_sub:
+            out.append(int((ref[i] + 1 + rng.integers(0, 3)) % 4))
+            i += 1
+        else:
+            out.append(int(ref[i]))
+            i += 1
+    while len(out) < read_len:
+        out.append(int(rng.integers(0, 4)))
+    return np.array(out[:read_len], np.uint8), i
+
+
+def _homopolymer_ref(rng, length):
+    out = []
+    while len(out) < length:
+        out.extend([int(rng.integers(0, 4))] * int(1 + rng.integers(1, 8)))
+    return np.array(out[:length], np.uint8)
+
+
+def make_pair(rng, profile, read_len=36):
+    ref_len = int(read_len * 1.3) + 8
+    if profile == "homopolymer":
+        base = _homopolymer_ref(rng, ref_len)
+    else:
+        base = rng.integers(0, 4, ref_len).astype(np.uint8)
+    err, fracs = _PROFILE_ERR[profile]
+    read, span = _walk_read(base, rng, err, fracs, read_len)
+    ref = base[:span].copy()
+    if profile == "n_base":
+        read = np.where(rng.random(len(read)) < 0.04,
+                        np.uint8(SENTINEL_PAT), read)     # read 'N'
+        ref = np.where(rng.random(len(ref)) < 0.04,
+                       np.uint8(SENTINEL_TEXT), ref)      # ref 'N'
+    elif profile == "len_mismatch":
+        if rng.random() < 0.5:
+            ref = ref[:max(4, int(len(ref) * 0.7))]       # ref too short
+        else:                                             # ref too long
+            extra = rng.integers(0, 4, int(rng.integers(4, 12)))
+            ref = np.concatenate([ref, extra.astype(np.uint8)])
+    return read, ref
+
+
+def make_corpus(seed, n_per_profile, read_len=36,
+                profiles=PROFILES):
+    rng = np.random.default_rng(seed)
+    reads, refs, profs = [], [], []
+    for profile in profiles:
+        for _ in range(n_per_profile):
+            r, f = make_pair(rng, profile, read_len)
+            reads.append(r)
+            refs.append(f)
+            profs.append(profile)
+    return reads, refs, profs
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return make_corpus(seed=20260727, n_per_profile=6)
+
+
+@pytest.fixture(scope="module")
+def diff_aligned(corpus):
+    """Module cache: each (backend, rescue_mode) aligns the corpus once."""
+    reads, refs, _ = corpus
+    cache = {}
+
+    def run(backend, rescue_mode="device"):
+        key = (backend, rescue_mode)
+        if key not in cache:
+            cache[key] = GenASMAligner(
+                CFG, rescue_rounds=ROUNDS, backend=backend,
+                rescue_mode=rescue_mode).align(reads, refs)
+        return cache[key]
+
+    return run
+
+
+def test_cigars_valid_and_dist_upper_bounds_oracle(corpus, diff_aligned):
+    """Every non-failed lane: CIGAR is a valid alignment, its cost equals
+    the reported dist, and dist >= the true edit distance."""
+    reads, refs, profs = corpus
+    res = diff_aligned("jnp")
+    n_solved = 0
+    for i in range(len(reads)):
+        if res.failed[i]:
+            continue
+        validate_cigar(reads[i], refs[i], res.ops[i],
+                       expected_dist=res.dist[i])
+        assert res.dist[i] >= levenshtein(reads[i], refs[i]), profs[i]
+        n_solved += 1
+    # the benign profiles must overwhelmingly solve
+    benign = [i for i, p in enumerate(profs) if p != "len_mismatch"]
+    assert sum(not res.failed[i] for i in benign) >= int(0.8 * len(benign))
+    assert n_solved > 0
+
+
+def _assert_bit_identical(res, ref_res, label):
+    assert list(res.dist) == list(ref_res.dist), label
+    assert list(res.failed) == list(ref_res.failed), label
+    assert list(res.k_used) == list(ref_res.k_used), label
+    assert res.cigars == ref_res.cigars, label
+    for a, b in zip(res.ops, ref_res.ops):
+        np.testing.assert_array_equal(a, b, err_msg=label)
+
+
+def test_fused_backend_bit_identical(corpus, diff_aligned):
+    """pallas_fused (fused main windows + fused rectangular tail + on-device
+    rescue) == jnp on the mixed-profile corpus, bit for bit."""
+    _assert_bit_identical(diff_aligned("pallas_fused"), diff_aligned("jnp"),
+                          "pallas_fused")
+
+
+@pytest.mark.slow
+def test_split_pallas_backend_bit_identical(corpus, diff_aligned):
+    """The split kernel (DC on-chip, band to HBM, jnp traceback) too; its
+    per-window DC identity is already covered in tier-1 by test_kernels."""
+    _assert_bit_identical(diff_aligned("pallas"), diff_aligned("jnp"),
+                          "pallas")
+
+
+def test_device_rescue_matches_host_loop(corpus, diff_aligned):
+    """On-device masked rescue == legacy host numpy loop, bit for bit."""
+    dev = diff_aligned("jnp", "device")
+    host = diff_aligned("jnp", "host")
+    assert list(dev.dist) == list(host.dist)
+    assert list(dev.failed) == list(host.failed)
+    assert list(dev.k_used) == list(host.k_used)
+    assert dev.cigars == host.cigars
+    for a, b in zip(dev.ops, host.ops):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_dist_matches_banded_dp_baseline(corpus, diff_aligned):
+    """Against baselines/dp.py with unit costs (= edit distance inside the
+    band): windowed dist is never below it, and stays within the expected
+    windowing slack on the uniform profile."""
+    reads, refs, profs = corpus
+    res = diff_aligned("jnp")
+    B = len(reads)
+    m = max(len(r) for r in reads)
+    n = max(len(f) for f in refs)
+    pat = np.full((B, m), SENTINEL_PAT, np.uint8)
+    txt = np.full((B, n), SENTINEL_TEXT, np.uint8)
+    ml = np.zeros(B, np.int32)
+    nl = np.zeros(B, np.int32)
+    for i, (r, f) in enumerate(zip(reads, refs)):
+        pat[i, :len(r)] = r
+        ml[i] = len(r)
+        txt[i, :len(f)] = f
+        nl[i] = len(f)
+    import jax.numpy as jnp
+    dp = np.asarray(banded_affine_dist(
+        jnp.asarray(pat, jnp.int32), jnp.asarray(txt, jnp.int32),
+        jnp.asarray(ml), jnp.asarray(nl), bw=32, m=m))
+    for i in range(B):
+        if res.failed[i]:
+            continue
+        assert res.dist[i] >= dp[i], (i, profs[i])
+        if profs[i] == "uniform":
+            assert res.dist[i] <= dp[i] * 1.5 + 3, (i, profs[i])
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=2, deadline=None)
+def test_fuzz_random_seeds_host_device_and_oracle(seed):
+    """Property-style sweep over fresh corpora: host-loop and on-device
+    rescue agree, and the produced alignments stay oracle-valid.  Shapes
+    are held fixed across examples so the jit cache is reused."""
+    reads, refs, _ = make_corpus(seed=seed, n_per_profile=2)
+    # pin the padded ref width across examples: one max-width ref
+    rng = np.random.default_rng(seed + 1)
+    width = int(36 * 1.3) + 20
+    refs = [f[:width] for f in refs]
+    refs[0] = np.concatenate(
+        [refs[0], rng.integers(0, 4, width - len(refs[0])).astype(np.uint8)])
+    dev = GenASMAligner(CFG, rescue_rounds=ROUNDS).align(reads, refs)
+    host = GenASMAligner(CFG, rescue_rounds=ROUNDS,
+                         rescue_mode="host").align(reads, refs)
+    assert list(dev.dist) == list(host.dist)
+    assert list(dev.failed) == list(host.failed)
+    assert list(dev.k_used) == list(host.k_used)
+    for i in range(len(reads)):
+        np.testing.assert_array_equal(dev.ops[i], host.ops[i])
+        if not dev.failed[i]:
+            validate_cigar(reads[i], refs[i], dev.ops[i],
+                           expected_dist=dev.dist[i])
+            assert dev.dist[i] >= levenshtein(reads[i], refs[i])
+
+
+@pytest.mark.slow
+def test_differential_sweep_fused_vs_host_jnp_200_pairs():
+    """The acceptance sweep (nightly): >= 200 mixed-profile pairs, fused
+    backend + fused tail + on-device rescue vs the host-loop jnp path —
+    bit-identical ops, dist, k_used and failed on every lane."""
+    reads, refs, profs = make_corpus(seed=424242, n_per_profile=44,
+                                     read_len=72)
+    assert len(reads) >= 200
+    cfg = AlignerConfig(W=32, O=12, k=6)
+    host = GenASMAligner(cfg, rescue_rounds=2, rescue_mode="host").align(
+        reads, refs)
+    dev = GenASMAligner(cfg, rescue_rounds=2,
+                        backend="pallas_fused").align(reads, refs)
+    assert list(dev.dist) == list(host.dist)
+    assert list(dev.failed) == list(host.failed)
+    assert list(dev.k_used) == list(host.k_used)
+    assert dev.cigars == host.cigars
+    for i, (a, b) in enumerate(zip(dev.ops, host.ops)):
+        np.testing.assert_array_equal(a, b, err_msg=f"lane {i} ({profs[i]})")
+    # the corpus must actually exercise rescue and failure paths
+    assert (dev.k_used[~dev.failed] > cfg.k).any()
+    for i in range(len(reads)):
+        if not dev.failed[i]:
+            validate_cigar(reads[i], refs[i], dev.ops[i],
+                           expected_dist=dev.dist[i])

@@ -159,3 +159,50 @@ def test_aligner_shards_over_mesh():
         print('OK aligned', int(summary['total_edits']))
     """)
     assert "OK aligned" in out
+
+
+@pytest.mark.slow
+def test_rescued_aligner_shards_over_mesh():
+    """make_align_step_rescued: the on-device k-doubling ladder inside one
+    sharded jitted step — high-error pairs rescue without any host
+    round-trip on any shard."""
+    out = run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.config import AlignerConfig
+        from repro.serve.align_step import make_align_step_rescued
+        from repro.launch.mesh import make_test_mesh, use_mesh
+        from repro.data.genome import ReadSimConfig, simulate_reads, synth_genome
+        from repro.core.windowing import rescue_schedule, self_tail_width
+
+        g = synth_genome(30000, seed=2)
+        rs = simulate_reads(g, 8, ReadSimConfig(read_len=80, error_rate=0.18,
+                                                seed=3))
+        cfg = AlignerConfig(W=32, O=12, k=4)
+        rounds = 1
+        mesh = make_test_mesh((8,), ('data',))
+        stepf = make_align_step_rescued(cfg, 80, mesh, rescue_rounds=rounds)
+        wt = self_tail_width(rescue_schedule(cfg, rounds)[-1])
+        B = 8
+        reads = np.full((B, 80 + cfg.W + 1), 255, np.uint8)
+        refs = np.full((B, 120 + cfg.W + wt + 1), 9, np.uint8)
+        rl = np.zeros(B, np.int32); fl = np.zeros(B, np.int32)
+        for i in range(B):
+            reads[i, :len(rs.reads[i])] = rs.reads[i]; rl[i] = len(rs.reads[i])
+            refs[i, :len(rs.ref_segments[i])] = rs.ref_segments[i]
+            fl[i] = len(rs.ref_segments[i])
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        bsh = NamedSharding(mesh, P(('data',), None))
+        vsh = NamedSharding(mesh, P(('data',)))
+        args = (jax.device_put(jnp.array(reads), bsh),
+                jax.device_put(jnp.array(rl), vsh),
+                jax.device_put(jnp.array(refs), bsh),
+                jax.device_put(jnp.array(fl), vsh))
+        with use_mesh(mesh):
+            out, summary = stepf(*args)
+        ku = np.asarray(out['k_used'])
+        failed = np.asarray(out['failed'])
+        assert int(summary['n_rescued']) == int(((ku > cfg.k) & ~failed).sum())
+        assert int(summary['rounds_run']) >= 1
+        print('OK rescued', int(summary['n_rescued']), int(summary['n_failed']))
+    """)
+    assert "OK rescued" in out

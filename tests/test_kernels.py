@@ -6,7 +6,7 @@ import pytest
 
 from repro.core.config import AlignerConfig
 from repro.core.oracle import levenshtein
-from repro.kernels.genasm_dc import vmem_bytes
+from repro.kernels.genasm_dc import vmem_bytes, vmem_bytes_tail
 from repro.kernels.ops import genasm_dc_op
 from repro.kernels.ref import genasm_dc_ref
 from tests.conftest import mutate_seq
@@ -90,6 +90,9 @@ def test_vmem_fit():
     for W, k, tile in ((64, 12, 512), (64, 16, 512), (128, 15, 256)):
         cfg = AlignerConfig(W=W, O=W // 3 + 1, k=k)
         assert vmem_bytes(cfg, tile) < 16 * 2**20, (W, k, tile)
+        # the rectangular-tail kernel stores the FULL SENE table, so it runs
+        # at half the main-window tile and must still fit
+        assert vmem_bytes_tail(cfg, tile // 2) < 16 * 2**20, (W, k, tile)
     # and the UNimproved table would not: 4 vectors x all columns x levels
     cfg = AlignerConfig(W=64, O=24, k=16)
     baseline_bytes = 64 * (cfg.k + 1) * 4 * cfg.nw * 4 * 512

@@ -1,0 +1,175 @@
+"""Rescue semantics: the on-device masked k-doubling loop vs the host loop.
+
+Properties enforced:
+  * rescue_rounds=0 is exactly plain align_pairs (plus k_used bookkeeping),
+  * k_used is minimal on the k-doubling ladder (the previous rung fails),
+  * failed / k_used / ops agree between host-loop and on-device rescue,
+  * lanes are independent: permuting the batch permutes the results
+    (the per-lane mask never leaks state across lanes),
+  * the on-device path performs exactly one upload and one download per
+    batch, independent of how many rescue rounds run (the zero
+    per-round-round-trip claim); the host loop pays per executed round.
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import transfer
+from repro.core.aligner import GenASMAligner
+from repro.core.config import AlignerConfig
+from repro.core.oracle import validate_cigar
+from repro.core.windowing import (SENTINEL_READ, SENTINEL_REF, align_pairs,
+                                  align_pairs_rescued, rescue_schedule,
+                                  self_tail_width)
+
+CFG = AlignerConfig(W=16, O=6, k=2)
+ROUNDS = 2                                     # ladder [2, 4, 8]
+
+
+def _mk_corpus(seed=5, n=8, read_len=36):
+    """Error gradient (clean ... heavy-indel) + one decoy: spans the whole
+    k-doubling ladder, including never-solved lanes."""
+    from tests.test_differential import _walk_read
+
+    rng = np.random.default_rng(seed)
+    reads, refs = [], []
+    for i in range(n):
+        ref = rng.integers(0, 4, int(read_len * 1.3) + 8).astype(np.uint8)
+        err = (0.0, 0.05, 0.1, 0.18, 0.28, 0.4)[i % 6]
+        read, span = _walk_read(ref, rng, err, (30, 35, 35), read_len)
+        reads.append(read)
+        refs.append(ref[:span].copy())
+    # decoy: unrelated ref of plausible length -> fails the whole ladder
+    reads.append(reads[0].copy())
+    refs.append(rng.integers(0, 4, len(refs[0])).astype(np.uint8))
+    return reads, refs
+
+
+def _pad_batch(reads, refs, cfg, rescue_rounds):
+    wt = self_tail_width(rescue_schedule(cfg, rescue_rounds)[-1])
+    max_r = max(len(r) for r in reads)
+    B = len(reads)
+    rpad = np.full((B, max_r + cfg.W + 1), SENTINEL_READ, np.uint8)
+    fpad = np.full((B, max(len(f) for f in refs) + cfg.W + wt + 1),
+                   SENTINEL_REF, np.uint8)
+    rlen = np.zeros(B, np.int32)
+    flen = np.zeros(B, np.int32)
+    for i, (r, f) in enumerate(zip(reads, refs)):
+        rpad[i, :len(r)] = r
+        rlen[i] = len(r)
+        fpad[i, :len(f)] = f
+        flen[i] = len(f)
+    return (jnp.asarray(rpad), jnp.asarray(rlen), jnp.asarray(fpad),
+            jnp.asarray(flen)), max_r
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return _mk_corpus()
+
+
+@pytest.fixture(scope="module")
+def dev_res(corpus):
+    return GenASMAligner(CFG, rescue_rounds=ROUNDS).align(*corpus)
+
+
+@pytest.fixture(scope="module")
+def host_res(corpus):
+    return GenASMAligner(CFG, rescue_rounds=ROUNDS,
+                         rescue_mode="host").align(*corpus)
+
+
+def test_rescue_schedule_doubles_and_caps():
+    ks = [c.k for c in rescue_schedule(CFG, 5)]
+    assert ks == [2, 4, 8, 15]                 # doubled, capped at W-1, deduped
+    assert [c.k for c in rescue_schedule(CFG, 0)] == [2]
+    capped = AlignerConfig(W=16, O=6, k=15)
+    assert [c.k for c in rescue_schedule(capped, 3)] == [15]
+
+
+def test_rescue_rounds_zero_equals_plain_align_pairs(corpus):
+    reads, refs = corpus
+    args, max_r = _pad_batch(reads, refs, CFG, 0)
+    plain = align_pairs(*args, cfg=CFG, max_read_len=max_r)
+    resc = align_pairs_rescued(*args, cfg=CFG, max_read_len=max_r,
+                               rescue_rounds=0)
+    for key in ("n_ops", "dist", "failed", "read_consumed", "ref_consumed"):
+        np.testing.assert_array_equal(np.asarray(resc[key]),
+                                      np.asarray(plain[key]), err_msg=key)
+    np.testing.assert_array_equal(np.asarray(resc["ops"]),
+                                  np.asarray(plain["ops"]))
+    failed = np.asarray(plain["failed"])
+    np.testing.assert_array_equal(np.asarray(resc["k_used"]),
+                                  np.where(failed, 0, CFG.k))
+    assert int(resc["n_rounds"]) == 1
+
+
+def test_k_used_minimal_on_ladder(corpus, dev_res):
+    """Solving at k_used implies failing at the previous ladder rung.
+    Lanes are grouped by rung so each distinct prev-k compiles one batched
+    align instead of one per lane."""
+    reads, refs = corpus
+    ks = [c.k for c in rescue_schedule(CFG, ROUNDS)]
+    rescued = [i for i in range(len(reads))
+               if not dev_res.failed[i] and dev_res.k_used[i] > CFG.k]
+    assert rescued, "corpus must exercise the ladder"
+    by_rung = {}
+    for i in rescued:
+        prev_k = ks[ks.index(int(dev_res.k_used[i])) - 1]
+        by_rung.setdefault(prev_k, []).append(i)
+        validate_cigar(reads[i], refs[i], dev_res.ops[i],
+                       expected_dist=dev_res.dist[i])
+    for prev_k, lanes in by_rung.items():
+        again = GenASMAligner(
+            AlignerConfig(W=CFG.W, O=CFG.O, k=prev_k),
+            rescue_rounds=0).align([reads[i] for i in lanes],
+                                   [refs[i] for i in lanes])
+        assert again.failed.all(), \
+            f"lanes {lanes}: k_used minimal claim broken at k={prev_k}"
+
+
+def test_failed_flag_agrees_host_vs_device(corpus, dev_res, host_res):
+    np.testing.assert_array_equal(dev_res.failed, host_res.failed)
+    np.testing.assert_array_equal(dev_res.k_used, host_res.k_used)
+    np.testing.assert_array_equal(dev_res.dist, host_res.dist)
+    for a, b in zip(dev_res.ops, host_res.ops):
+        np.testing.assert_array_equal(a, b)
+    assert dev_res.failed[-1]                  # the decoy never aligns
+    assert not dev_res.failed[0]               # the clean lane always does
+
+
+def test_lane_independence_under_permutation(corpus, dev_res):
+    """Permuting the batch permutes the results: the rescue mask freezes
+    solved lanes without leaking state across lanes.  Same shapes/config as
+    dev_res, so the permuted align reuses its compile."""
+    reads, refs = corpus
+    perm = np.random.default_rng(9).permutation(len(reads))
+    shuf = GenASMAligner(CFG, rescue_rounds=ROUNDS).align(
+        [reads[i] for i in perm], [refs[i] for i in perm])
+    for loc, glob in enumerate(perm):
+        assert shuf.dist[loc] == dev_res.dist[glob]
+        assert shuf.failed[loc] == dev_res.failed[glob]
+        assert shuf.k_used[loc] == dev_res.k_used[glob]
+        np.testing.assert_array_equal(shuf.ops[loc], dev_res.ops[glob])
+
+
+def test_device_rescue_zero_per_round_roundtrips_fused_backend(corpus):
+    """The transfer-counting acceptance check: with the fused backend the
+    whole multi-round rescue costs exactly one host->device upload and one
+    device->host download — zero per-round round-trips — while the host
+    loop pays one of each per executed round."""
+    reads, refs = corpus
+    reads, refs = reads[:4] + [reads[-1]], refs[:4] + [refs[-1]]
+    transfer.reset()
+    GenASMAligner(CFG, rescue_rounds=1,
+                  backend="pallas_fused").align(reads, refs)
+    s = transfer.stats()
+    assert (s.h2d_calls, s.d2h_calls) == (1, 1)
+
+    transfer.reset()
+    GenASMAligner(CFG, rescue_rounds=1, rescue_mode="host",
+                  backend="pallas_fused").align(reads, refs)
+    s_host = transfer.stats()
+    # the decoy fails k=2 and k=4, so both ladder rounds execute
+    assert s_host.d2h_calls == 2
+    assert s_host.h2d_calls == 2

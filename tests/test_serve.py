@@ -16,9 +16,11 @@ def test_alignment_engine_end_to_end():
     rs = simulate_reads(g, 6, ReadSimConfig(read_len=120, error_rate=0.06,
                                             seed=6))
     # same cfg + read length as test_kernel_fused's aligner test -> the
-    # session jit cache already holds the compiled align_pairs
+    # session jit cache already holds the compiled align_pairs; rounds=0
+    # keeps it that way (nothing here fails — rescue is tested separately)
     from repro.core.config import AlignerConfig
-    eng = AlignmentEngine(AlignerConfig(W=32, O=12, k=8), batch_size=4)
+    eng = AlignmentEngine(AlignerConfig(W=32, O=12, k=8), batch_size=4,
+                          rescue_rounds=0)
     for i, (r, s) in enumerate(zip(rs.reads, rs.ref_segments)):
         eng.submit(AlignRequest(rid=i, read=r, ref=s))
     stats = eng.serve_until_empty()
@@ -26,6 +28,39 @@ def test_alignment_engine_end_to_end():
     assert stats["aligned"] == 6
     assert all(eng.results[i]["ok"] for i in range(6))
     assert all(eng.results[i]["cigar"] for i in range(6))
+
+
+def test_engine_ragged_batch_padding_regression():
+    """Non-multiple-of-batch-size request stream: the ragged final batch is
+    padded to batch_size with REPEATS of a real pair (stable jit shapes),
+    and padding lanes must neither consume extra rescue rounds (a garbage
+    pad lane would fail every round and keep the on-device `any(failed)`
+    round gate open) nor pollute stats['failed'] / per-request results."""
+    from repro.core.config import AlignerConfig
+
+    g = synth_genome(30_000, seed=15)
+    rs = simulate_reads(g, 6, ReadSimConfig(read_len=64, error_rate=0.05,
+                                            seed=16))
+    eng = AlignmentEngine(AlignerConfig(W=16, O=6, k=4), batch_size=4,
+                          rescue_rounds=1)
+    seen_sizes = []
+    orig_align = eng.aligner.align
+
+    def spy(reads, refs):
+        seen_sizes.append(len(reads))
+        return orig_align(reads, refs)
+
+    eng.aligner.align = spy
+    for i, (r, s) in enumerate(zip(rs.reads, rs.ref_segments)):
+        eng.submit(AlignRequest(rid=i, read=r, ref=s))
+    stats = eng.serve_until_empty()
+    assert seen_sizes == [4, 4]            # ragged tail padded, stable shape
+    assert stats["batches"] == 2
+    assert stats["padded_lanes"] == 2
+    assert stats["aligned"] + stats["failed"] == 6   # pads never counted
+    assert stats["failed"] == 0
+    assert set(eng.results) == set(range(6))
+    assert all(eng.results[i]["ok"] for i in range(6))
 
 
 @pytest.mark.slow
