@@ -141,6 +141,85 @@ def rescue_paths(n_reads=8, read_len=400, seed=3, rescue_rounds=2):
     return rows, derived
 
 
+def multidevice(n_devices=8, n_reads=32, read_len=240, seed=5,
+                backend="jnp"):
+    """Sharded-vs-single throughput on `n_devices` forced host devices.
+
+    The device count must be fixed before jax imports, so this re-execs a
+    fresh interpreter with XLA_FLAGS=--xla_force_host_platform_device_count
+    and parses a JSON report: wall time per align call, pairs/s (total and
+    per device) and host<->device transfer bytes for the single-device run
+    vs the mesh-sharded run (GenASMAligner(mesh=...) — the shard_map'd
+    Pallas dispatch / GSPMD jnp path of kernels.ops).  On this CPU
+    container the mesh is emulated (no parallel speedup is expected — the
+    number that matters is per-device pairs/s and unchanged transfer
+    counts); on real hardware the same code path is the scaling claim."""
+    import json as _json
+    import os
+    import subprocess
+    import sys
+    # the jnp path's GSPMD constraint (and equal sharding generally) needs
+    # the batch to divide the device count — quantise so the sharded row
+    # can never silently benchmark an unsharded run
+    n_reads = -(-n_reads // n_devices) * n_devices
+    script = f"""
+import json, time
+import numpy as np
+from repro.core.aligner import GenASMAligner
+from repro.core.config import AlignerConfig
+from repro.core import transfer
+from repro.launch.mesh import make_test_mesh
+from repro.data.genome import ReadSimConfig, simulate_reads, synth_genome
+
+g = synth_genome(200_000, seed={seed})
+rs = simulate_reads(g, {n_reads}, ReadSimConfig(read_len={read_len},
+                                                error_rate=0.10,
+                                                seed={seed} + 1))
+cfg = AlignerConfig(W=64, O=24, k=12, backend={backend!r})
+rep = {{}}
+for name, mesh in (('1dev', None),
+                   ('{n_devices}dev', make_test_mesh(({n_devices},),
+                                                     ('data',)))):
+    al = GenASMAligner(cfg, rescue_rounds=1, mesh=mesh)
+    al.align(rs.reads, rs.ref_segments)          # warm / compile
+    transfer.reset()
+    ts = []
+    for _ in range(3):
+        t0 = time.time()
+        al.align(rs.reads, rs.ref_segments)
+        ts.append(time.time() - t0)
+    s = transfer.stats()
+    rep[name] = {{'wall_s': sorted(ts)[1], 'h2d_bytes': s.h2d_bytes // 3,
+                 'd2h_bytes': s.d2h_bytes // 3,
+                 'h2d_calls': s.h2d_calls // 3,
+                 'd2h_calls': s.d2h_calls // 3}}
+print(json.dumps(rep))
+"""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env.setdefault("PYTHONPATH", "src")
+    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                       text=True, env=env, timeout=900)
+    if r.returncode != 0:
+        raise RuntimeError(r.stdout + r.stderr)
+    rep = _json.loads(r.stdout.strip().splitlines()[-1])
+    rows, derived = [], {"n_devices": n_devices, "n_reads": n_reads}
+    for name, d in rep.items():
+        ndev = n_devices if name != "1dev" else 1
+        pairs_s = n_reads / d["wall_s"]
+        rows.append((f"aligners/sharded_{name}", d["wall_s"] * 1e6 / n_reads,
+                     f"pairs_per_s={pairs_s:.1f}_per_dev="
+                     f"{pairs_s / ndev:.1f}_h2d={d['h2d_calls']}x"
+                     f"{d['h2d_bytes']}B_d2h={d['d2h_calls']}x"
+                     f"{d['d2h_bytes']}B"))
+        derived[f"{name}_wall_s"] = d["wall_s"]
+        derived[f"{name}_pairs_per_s_per_dev"] = pairs_s / ndev
+        derived[f"{name}_transfer_bytes"] = d["h2d_bytes"] + d["d2h_bytes"]
+    derived["sharded_vs_single_wall"] = (rep["1dev"]["wall_s"]
+                                         / rep[f"{n_devices}dev"]["wall_s"])
+    return rows, derived
+
+
 def table(n_reads=24, read_len=1000):
     rows, n, L = run(n_reads, read_len)
     t = dict(rows)

@@ -18,6 +18,11 @@ def main() -> None:
                     help="also dump rows + derived metrics as JSON "
                          "(uploaded as a CI artifact to track the perf "
                          "trajectory)")
+    ap.add_argument("--devices", type=int, default=0, metavar="N",
+                    help="also benchmark the mesh-sharded aligner on N "
+                         "forced host devices (re-execs a fresh "
+                         "interpreter; reports per-device pairs/s and "
+                         "transfer bytes)")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
@@ -56,6 +61,11 @@ def main() -> None:
     rows, derived = bench_kernel.table(B=1024 if args.fast else 4096)
     emit(rows)
     all_derived["kernel"] = derived
+
+    if args.devices > 0:
+        rows, derived = bench_aligners.multidevice(n_devices=args.devices)
+        emit(rows)
+        all_derived["multidevice"] = derived
 
     try:
         from benchmarks import roofline_table

@@ -61,6 +61,8 @@ class AlignResult:
     ops: list[np.ndarray]     # raw op arrays
     failed: np.ndarray        # (B,) True if unalignable within rescue budget
     k_used: np.ndarray        # (B,) per-window threshold that succeeded
+    read_consumed: np.ndarray = None  # (B,) read chars the CIGAR consumes
+    ref_consumed: np.ndarray = None   # (B,) ref chars the CIGAR consumes
 
 
 class GenASMAligner:
@@ -78,13 +80,17 @@ class GenASMAligner:
 
     def __init__(self, cfg: AlignerConfig = AlignerConfig(),
                  rescue_rounds: int = 2, backend: str | None = None,
-                 rescue_mode: str = "device"):
+                 rescue_mode: str = "device", mesh=None):
         if backend is not None:
             cfg = dataclasses.replace(cfg, backend=backend)
         assert rescue_mode in ("device", "host")
         self.cfg = cfg
         self.rescue_rounds = rescue_rounds
         self.rescue_mode = rescue_mode
+        # mesh: shard every align call's pair axis over the mesh's data
+        # axes (shard_map'd Pallas dispatch + GSPMD jnp) — results are
+        # bit-identical to mesh=None (tests/test_multidevice.py)
+        self.mesh = mesh
 
     def _pad(self, seqs, width, pad_val):
         B = len(seqs)
@@ -115,20 +121,25 @@ class GenASMAligner:
                                SENTINEL_REF)
         dev = transfer.to_device((rpad, rlen, fpad, flen))
         out = align_pairs_rescued(*dev, cfg=cfg, max_read_len=max_read_len,
-                                  rescue_rounds=self.rescue_rounds)
+                                  rescue_rounds=self.rescue_rounds,
+                                  mesh=self.mesh)
         host = transfer.to_host({key: out[key] for key in
-                                 ("ops", "n_ops", "dist", "failed", "k_used")})
+                                 ("ops", "n_ops", "dist", "failed", "k_used",
+                                  "read_consumed", "ref_consumed")})
         failed = np.asarray(host["failed"])
         n_ops = np.asarray(host["n_ops"])
         ops_buf = np.asarray(host["ops"])
         dist = np.where(failed, 0, np.asarray(host["dist"])).astype(np.int64)
         k_used = np.where(failed, 0, np.asarray(host["k_used"])).astype(np.int32)
+        rcon = np.where(failed, 0, np.asarray(host["read_consumed"]))
+        fcon = np.where(failed, 0, np.asarray(host["ref_consumed"]))
         all_ops = [ops_buf[i, :n_ops[i]] if not failed[i] else None
                    for i in range(len(reads))]
         cigars = [ops_to_string(o) if o is not None else "" for o in all_ops]
         ops_out = [o if o is not None else np.zeros(0, np.uint8)
                    for o in all_ops]
-        return AlignResult(dist, cigars, ops_out, failed, k_used)
+        return AlignResult(dist, cigars, ops_out, failed, k_used,
+                           rcon.astype(np.int32), fcon.astype(np.int32))
 
     def _align_host_loop(self, reads, refs) -> AlignResult:
         """Legacy rescue: re-pad and re-upload the failed subset per round."""
@@ -137,6 +148,8 @@ class GenASMAligner:
         dist = np.zeros(B, np.int64)
         failed = np.ones(B, bool)
         k_used = np.zeros(B, np.int32)
+        rcon = np.zeros(B, np.int32)
+        fcon = np.zeros(B, np.int32)
         all_ops: list[np.ndarray | None] = [None] * B
         todo = np.arange(B)
         for rnd in range(self.rescue_rounds + 1):
@@ -152,9 +165,11 @@ class GenASMAligner:
                                    max(len(f) for f in sub_refs) + cfg.W + wt + 1,
                                    SENTINEL_REF)
             dev = transfer.to_device((rpad, rlen, fpad, flen))
-            out = align_pairs(*dev, cfg=cfg, max_read_len=max_read_len)
+            out = align_pairs(*dev, cfg=cfg, max_read_len=max_read_len,
+                              mesh=self.mesh)
             host = transfer.to_host({key: out[key] for key in
-                                     ("ops", "n_ops", "dist", "failed")})
+                                     ("ops", "n_ops", "dist", "failed",
+                                      "read_consumed", "ref_consumed")})
             ops = host["ops"]
             n_ops = host["n_ops"]
             ok = ~host["failed"]
@@ -165,6 +180,8 @@ class GenASMAligner:
                     dist[glob] = d[loc]
                     failed[glob] = False
                     k_used[glob] = cfg.k
+                    rcon[glob] = host["read_consumed"][loc]
+                    fcon[glob] = host["ref_consumed"][loc]
             todo = np.array([g for g in todo if failed[g]])
             # rescue: double k (capped below W so the band math stays valid)
             new_k = min(cfg.k * 2, cfg.W - 1)
@@ -173,4 +190,4 @@ class GenASMAligner:
             cfg = dataclasses.replace(cfg, k=new_k)
         cigars = [ops_to_string(o) if o is not None else "" for o in all_ops]
         ops_out = [o if o is not None else np.zeros(0, np.uint8) for o in all_ops]
-        return AlignResult(dist, cigars, ops_out, failed, k_used)
+        return AlignResult(dist, cigars, ops_out, failed, k_used, rcon, fcon)

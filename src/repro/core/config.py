@@ -36,10 +36,13 @@ class AlignerConfig:
     tb_margin: int = 3          # extra stored columns beyond the provable band
     backend: str = "jnp"        # 'jnp' | 'pallas' | 'pallas_fused'
     n_symbols: int = 4
+    lane_tile: int = 128        # problems per Pallas grid step (one VPU-lane
+                                # tile); also the per-shard batch pad unit
 
     def __post_init__(self):
         assert 0 < self.O < self.W
         assert 0 < self.k < self.W
+        assert self.lane_tile > 0
         assert self.store in ("edges4", "and", "band")
         assert self.backend in ("jnp", "pallas", "pallas_fused")
         # the Pallas kernels implement the fully-improved (banded) DP only

@@ -215,18 +215,22 @@ def dc_dmajor(pat_codes, text_codes, *, cfg: AlignerConfig) -> DCResult:
     return DCResult(dist, solved, r_fin, store, d_end)
 
 
-def dc(pat_codes, text_codes, m_len, n_len, cfg: AlignerConfig) -> DCResult:
+def dc(pat_codes, text_codes, m_len, n_len, cfg: AlignerConfig,
+       mesh=None) -> DCResult:
     """Dispatch: improved configs use the level-major banded fill when the
     batch is uniform square (m_len = n_len = W); otherwise the full fill.
     cfg.backend routes the banded fill to the Pallas DC kernel ('pallas' /
     'pallas_fused' — the fused TB entry point lives in kernels.ops and is
-    dispatched by core.windowing, which also owns the traceback)."""
+    dispatched by core.windowing, which also owns the traceback).  `mesh`
+    shard_maps the kernel dispatch over the mesh's pair axes (jnp fills
+    ignore it — GSPMD shards them from the caller's constraints)."""
     if cfg.store == "band":
         if cfg.backend in ("pallas", "pallas_fused"):
             # local import: kernels.ops imports build_pm_ext from this module
             from ..kernels.ops import default_interpret, genasm_dc_op
             dist, band, lvl = genasm_dc_op(pat_codes, text_codes, cfg=cfg,
-                                           interpret=default_interpret())
+                                           interpret=default_interpret(),
+                                           mesh=mesh)
             B = pat_codes.shape[0]
             r_fin = jnp.zeros((B, cfg.k + 1, cfg.nw), jnp.uint32)
             return DCResult(dist, dist <= cfg.k, r_fin, {"Rb": band}, lvl)

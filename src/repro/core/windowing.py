@@ -65,16 +65,24 @@ def _append_ops(buf, off, ops, nops, active):
         buf, pos, ops)
 
 
-@partial(jax.jit, static_argnames=("cfg", "max_read_len"))
+@partial(jax.jit, static_argnames=("cfg", "max_read_len", "mesh"))
 def align_pairs(reads, read_len, refs, ref_len, *, cfg: AlignerConfig,
-                max_read_len: int):
+                max_read_len: int, mesh=None):
     """Batched windowed alignment.
 
     reads: (B, Lr_pad) uint8 codes, sentinel-padded by >= W past read_len.
     refs:  (B, Lf_pad) uint8 codes, sentinel-padded by >= W+4k past ref_len.
     Returns dict with front-first op buffer, n_ops, dist, failed, read/ref
     consumption, and window ET stats.
+
+    `mesh`: shard the pair axis over the mesh's data axes — the Pallas
+    dispatches run under shard_map (each device fills/walks its local
+    lanes on-chip) and the jnp paths are GSPMD-constrained.  Bit-identical
+    to the unsharded run on every output (tests/test_multidevice.py).
     """
+    from ..distributed.sharding import constrain_pairs
+    reads, read_len, refs, ref_len = constrain_pairs(
+        mesh, reads, read_len, refs, ref_len)
     B = reads.shape[0]
     W, O, k, stride = cfg.W, cfg.O, cfg.k, cfg.stride
     nm = n_main_windows(max_read_len, cfg)
@@ -100,10 +108,10 @@ def align_pairs(reads, read_len, refs, ref_len, *, cfg: AlignerConfig,
             from ..kernels.ops import default_interpret, genasm_tb_fused_op
             tb = genasm_tb_fused_op(pat, txt, cfg=cfg, commit_limit=stride,
                                     max_ops=max_ops_w, max_steps=max_steps_w,
-                                    interpret=default_interpret())
+                                    interpret=default_interpret(), mesh=mesh)
             solved, levels_run = tb["solved"], tb["levels"]
         else:
-            res = dc(pat, txt, wfull, wfull, cfg)
+            res = dc(pat, txt, wfull, wfull, cfg, mesh=mesh)
             tb = traceback(res.store, pat, txt, wfull, wfull,
                            res.dist, jnp.int32(stride), cfg=cfg,
                            mode=cfg.store, max_ops=max_ops_w,
@@ -144,7 +152,7 @@ def align_pairs(reads, read_len, refs, ref_len, *, cfg: AlignerConfig,
         tb_t = genasm_tail_fused_op(pat_t, txt_t, m_tail, n_tail, cfg=cfg,
                                     n_text=wt, commit_limit=2 * (W + wt),
                                     max_ops=max_ops_t, max_steps=max_steps_t,
-                                    interpret=default_interpret())
+                                    interpret=default_interpret(), mesh=mesh)
         solved_t = tb_t["solved"]
     else:
         res_t = dc_jmajor(pat_t, txt_t, m_tail, n_tail, k=k, n=wt, nw=cfg.nw,
@@ -180,9 +188,10 @@ def rescue_schedule(cfg: AlignerConfig, rescue_rounds: int):
     return tuple(cfgs)
 
 
-@partial(jax.jit, static_argnames=("cfg", "max_read_len", "rescue_rounds"))
+@partial(jax.jit,
+         static_argnames=("cfg", "max_read_len", "rescue_rounds", "mesh"))
 def align_pairs_rescued(reads, read_len, refs, ref_len, *, cfg: AlignerConfig,
-                        max_read_len: int, rescue_rounds: int = 2):
+                        max_read_len: int, rescue_rounds: int = 2, mesh=None):
     """Multi-round k-doubling rescue, entirely on-device: one compile, zero
     host round-trips between rounds.
 
@@ -196,6 +205,12 @@ def align_pairs_rescued(reads, read_len, refs, ref_len, *, cfg: AlignerConfig,
     (``self_tail_width(rescue_schedule(cfg, rescue_rounds)[-1])``); reads
     need the usual >= W padding.  Returns the align_pairs dict plus k_used
     (0 where never solved), rounds_run and n_rounds.
+
+    `mesh` threads through to every round's align_pairs: the whole ladder
+    runs sharded over the pair axes, and the `any(failed)` round gate is a
+    GLOBAL any (GSPMD reduces it across shards), so a round runs on every
+    device whenever any shard still has a failed lane — exactly the
+    single-device schedule, hence bit-identical results.
     """
     cfgs = rescue_schedule(cfg, rescue_rounds)
     B = reads.shape[0]
@@ -213,7 +228,7 @@ def align_pairs_rescued(reads, read_len, refs, ref_len, *, cfg: AlignerConfig,
     for rnd, cfg_r in enumerate(cfgs):
         def run_round(cfg_r=cfg_r):
             return align_pairs(reads, read_len, refs, ref_len, cfg=cfg_r,
-                               max_read_len=max_read_len)
+                               max_read_len=max_read_len, mesh=mesh)
         if rnd == 0:
             out = run_round()
             ran = jnp.bool_(True)

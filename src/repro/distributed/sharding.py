@@ -3,11 +3,72 @@
 Model code calls constrain(x, 'batch', None, 'model') with logical dims;
 the helper resolves them against whatever mesh the enclosing jit runs
 under ('batch' -> ('pod','data') when a pod axis exists), skips axes that
-don't divide, and is a no-op outside a mesh context (CPU unit tests)."""
+don't divide, and is a no-op outside a mesh context (CPU unit tests).
+
+This module is also the single source of truth for how the ALIGNER's pair
+(batch) axis maps onto a mesh: `pair_axes` / `n_pair_shards` name the data
+axes, `pair_shardings` builds the NamedShardings every sharded align step
+uses, `constrain_pairs` pins the (B, ...) batch arrays inside a jit, and
+`pair_pad_multiple` is the batch-size quantum the serving engine must pad
+ragged batches to so every device gets an equal, kernel-tile-aligned
+shard (see serve.engine / kernels.ops)."""
 from __future__ import annotations
 
 import jax
+from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
+
+
+def pair_axes(mesh) -> tuple:
+    """Mesh axes the alignment pair axis shards over (data-parallel)."""
+    if mesh is None:
+        return ()
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def n_pair_shards(mesh) -> int:
+    """How many equal shards the pair axis splits into on `mesh`."""
+    n = 1
+    for a in pair_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def pair_shardings(mesh):
+    """(batch-major (B, L), per-lane (B,), replicated) NamedShardings for
+    the aligner's arrays — shared by every sharded align-step factory."""
+    dp = pair_axes(mesh)
+    return (NamedSharding(mesh, P(dp, None)),
+            NamedSharding(mesh, P(dp)),
+            NamedSharding(mesh, P()))
+
+
+def constrain_pairs(mesh, reads, read_len, refs, ref_len):
+    """Pin the aligner batch inputs to the pair axes inside a jit, so the
+    jnp fills (and everything around the shard_mapped kernels) are GSPMD
+    data-parallel rather than replicated.  No-op when mesh is None or the
+    batch does not divide the pair shards."""
+    if mesh is None:
+        return reads, read_len, refs, ref_len
+    n = n_pair_shards(mesh)
+    if n == 1 or reads.shape[0] % n != 0:
+        return reads, read_len, refs, ref_len
+    bsh, vsh, _ = pair_shardings(mesh)
+    wsc = jax.lax.with_sharding_constraint
+    return (wsc(reads, bsh), wsc(read_len, vsh),
+            wsc(refs, bsh), wsc(ref_len, vsh))
+
+
+def pair_pad_multiple(cfg, mesh) -> int:
+    """Batch-size quantum for sharded serving: lane_tile * n_devices for the
+    Pallas backends (each device's shard must hold whole kernel tiles),
+    n_devices for jnp.  1 when unsharded — single-device behaviour is
+    unchanged."""
+    n = n_pair_shards(mesh)
+    if n == 1:
+        return 1
+    tile = cfg.lane_tile if cfg.backend in ("pallas", "pallas_fused") else 1
+    return n * tile
 
 
 def _mesh():

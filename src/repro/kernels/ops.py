@@ -3,6 +3,17 @@
 On this CPU container the kernels execute in interpret mode; on a real TPU
 pass interpret=False (the BlockSpecs/VMEM scratch are TPU-shaped).  The
 ``backend`` knob in AlignerConfig selects jnp (core) vs pallas paths.
+
+Multi-device: every op takes an optional ``mesh``.  When given, the
+pallas_call is wrapped in ``shard_map`` over the mesh's pair axes
+(distributed.sharding.pair_axes), so each device runs the Pallas grid on
+its local slice of the problem axis — the batch is padded to
+``tile * n_pair_shards`` first so every shard holds whole kernel tiles.
+Per-lane kernel results are independent of tile composition (padding
+lanes solve at level 0 and only whole-tile early termination sees them),
+and the cross-lane ``levels`` reduction is taken OUTSIDE the shard_map on
+the global array, so sharded dispatch is bit-identical to single-device
+dispatch (asserted by tests/test_multidevice.py).
 """
 from __future__ import annotations
 
@@ -10,9 +21,12 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 from ..core.config import AlignerConfig
 from ..core.genasm import build_pm_ext
+from ..distributed.sharding import n_pair_shards, pair_axes
+from ..launch.mesh import shard_map
 from .genasm_dc import (META_DFIN, META_DIST, META_LVL, META_NOPS, META_OK,
                         META_RD, META_RF, genasm_dc_pallas,
                         genasm_tail_fused_pallas, genasm_tb_fused_pallas)
@@ -44,9 +58,34 @@ def _to_kernel_layout(pat_codes, text_codes, cfg):
     return pm_k, text_k
 
 
-@partial(jax.jit, static_argnames=("cfg", "tile", "interpret"))
-def genasm_dc_op(pat_codes, text_codes, *, cfg: AlignerConfig, tile: int = 128,
-                 interpret: bool = True):
+def _pad_unit(cfg, tile, mesh) -> tuple[int, int]:
+    """(resolved lane tile, global batch pad unit): the batch pads to
+    tile * n_shards so every mesh shard holds whole kernel tiles."""
+    tile = tile or cfg.lane_tile
+    return tile, tile * (n_pair_shards(mesh) if mesh is not None else 1)
+
+
+def _shard_pairs(call, mesh, in_specs, out_specs):
+    """Wrap a kernel-layout pallas dispatch in shard_map over the mesh's
+    pair axes (problems are the INNERMOST axis of every kernel array, so
+    the pair dim is the last entry of each spec).  Identity when there is
+    nothing to shard over."""
+    if mesh is None or n_pair_shards(mesh) == 1:
+        return call
+    return shard_map(call, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check=False)
+
+
+def _pair_specs(mesh, ranks_in, ranks_out):
+    """P specs placing the pair axes on the last dim of each operand."""
+    ax = pair_axes(mesh) if mesh is not None else ()
+    mk = lambda r: P(*([None] * (r - 1) + [ax]))
+    return tuple(mk(r) for r in ranks_in), tuple(mk(r) for r in ranks_out)
+
+
+@partial(jax.jit, static_argnames=("cfg", "tile", "interpret", "mesh"))
+def genasm_dc_op(pat_codes, text_codes, *, cfg: AlignerConfig,
+                 tile: int | None = None, interpret: bool = True, mesh=None):
     """Standard layout in, standard layout out.
 
     pat_codes/text_codes: (B, W).  Returns DCResult-like tuple
@@ -54,19 +93,22 @@ def genasm_dc_op(pat_codes, text_codes, *, cfg: AlignerConfig, tile: int = 128,
     store layout, so core.traceback consumes it unchanged.
     """
     B = pat_codes.shape[0]
-    pat_codes, text_codes = _pad_to_tile(pat_codes, text_codes, tile)
+    tile, unit = _pad_unit(cfg, tile, mesh)
+    pat_codes, text_codes = _pad_to_tile(pat_codes, text_codes, unit)
     pm_k, text_k = _to_kernel_layout(pat_codes, text_codes, cfg)
-    dist, band, lvl = genasm_dc_pallas(pm_k, text_k, cfg=cfg, tile=tile,
-                                       interpret=interpret)
+    call = partial(genasm_dc_pallas, cfg=cfg, tile=tile, interpret=interpret)
+    in_sp, out_sp = _pair_specs(mesh, (3, 2), (1, 4, 1))
+    dist, band, lvl = _shard_pairs(call, mesh, in_sp, out_sp)(pm_k, text_k)
     band = jnp.transpose(band, (0, 1, 3, 2))              # (K1, ncb, B', nwb)
     return dist[:B], band[:, :, :B, :], jnp.max(lvl)
 
 
 @partial(jax.jit, static_argnames=("cfg", "commit_limit", "max_ops",
-                                   "max_steps", "tile", "interpret"))
+                                   "max_steps", "tile", "interpret", "mesh"))
 def genasm_tb_fused_op(pat_codes, text_codes, *, cfg: AlignerConfig,
                        commit_limit: int, max_ops: int, max_steps: int,
-                       tile: int = 128, interpret: bool = True):
+                       tile: int | None = None, interpret: bool = True,
+                       mesh=None):
     """Fused GenASM-DC+TB: standard layout in, traceback dict out.
 
     pat_codes/text_codes: (B, W) reversed square windows (the windowed
@@ -76,11 +118,14 @@ def genasm_tb_fused_op(pat_codes, text_codes, *, cfg: AlignerConfig,
     kernel's VMEM scratch.
     """
     B = pat_codes.shape[0]
-    pat_codes, text_codes = _pad_to_tile(pat_codes, text_codes, tile)
+    tile, unit = _pad_unit(cfg, tile, mesh)
+    pat_codes, text_codes = _pad_to_tile(pat_codes, text_codes, unit)
     pm_k, text_k = _to_kernel_layout(pat_codes, text_codes, cfg)
-    ops_k, meta = genasm_tb_fused_pallas(
-        pm_k, text_k, cfg=cfg, commit_limit=commit_limit, max_ops=max_ops,
-        max_steps=max_steps, tile=tile, interpret=interpret)
+    call = partial(genasm_tb_fused_pallas, cfg=cfg, commit_limit=commit_limit,
+                   max_ops=max_ops, max_steps=max_steps, tile=tile,
+                   interpret=interpret)
+    in_sp, out_sp = _pair_specs(mesh, (3, 2), (2, 2))
+    ops_k, meta = _shard_pairs(call, mesh, in_sp, out_sp)(pm_k, text_k)
     ops = jnp.transpose(ops_k, (1, 0))[:B].astype(jnp.uint8)   # (B, max_ops)
     meta = meta[:, :B]
     return _unpack_meta(ops, meta, cfg)
@@ -104,11 +149,11 @@ def _unpack_meta(ops, meta, cfg):
 
 
 @partial(jax.jit, static_argnames=("cfg", "n_text", "commit_limit", "max_ops",
-                                   "max_steps", "tile", "interpret"))
+                                   "max_steps", "tile", "interpret", "mesh"))
 def genasm_tail_fused_op(pat_codes, text_codes, m_len, n_len, *,
                          cfg: AlignerConfig, n_text: int, commit_limit: int,
-                         max_ops: int, max_steps: int, tile: int = 128,
-                         interpret: bool = True):
+                         max_ops: int, max_steps: int, tile: int | None = None,
+                         interpret: bool = True, mesh=None):
     """Fused rectangular-tail GenASM-DC+TB: standard layout in, traceback
     dict out (same contract as the jnp dc_jmajor + traceback mode='and'
     tail path of core.windowing, bit for bit).
@@ -119,17 +164,20 @@ def genasm_tail_fused_op(pat_codes, text_codes, m_len, n_len, *,
     problems (m_len = n_len = 1): they solve at level 0, so they never
     stall the kernel's whole-tile early termination, and are trimmed."""
     B = pat_codes.shape[0]
-    pat_codes, text_codes = _pad_to_tile(pat_codes, text_codes, tile)
-    pad = (-B) % tile
+    tile, unit = _pad_unit(cfg, tile, mesh)
+    pat_codes, text_codes = _pad_to_tile(pat_codes, text_codes, unit)
+    pad = (-B) % unit
     m_len = jnp.asarray(m_len, jnp.int32)
     n_len = jnp.asarray(n_len, jnp.int32)
     if pad:
         m_len = jnp.pad(m_len, ((0, pad),), constant_values=1)
         n_len = jnp.pad(n_len, ((0, pad),), constant_values=1)
     pm_k, text_k = _to_kernel_layout(pat_codes, text_codes, cfg)
-    ops_k, meta = genasm_tail_fused_pallas(
-        pm_k, text_k, m_len[None, :], n_len[None, :], cfg=cfg, n_text=n_text,
-        commit_limit=commit_limit, max_ops=max_ops, max_steps=max_steps,
-        tile=tile, interpret=interpret)
+    call = partial(genasm_tail_fused_pallas, cfg=cfg, n_text=n_text,
+                   commit_limit=commit_limit, max_ops=max_ops,
+                   max_steps=max_steps, tile=tile, interpret=interpret)
+    in_sp, out_sp = _pair_specs(mesh, (3, 2, 2, 2), (2, 2))
+    ops_k, meta = _shard_pairs(call, mesh, in_sp, out_sp)(
+        pm_k, text_k, m_len[None, :], n_len[None, :])
     ops = jnp.transpose(ops_k, (1, 0))[:B].astype(jnp.uint8)   # (B, max_ops)
     return _unpack_meta(ops, meta[:, :B], cfg)

@@ -17,6 +17,7 @@ import numpy as np
 
 from ..core.aligner import GenASMAligner
 from ..core.config import AlignerConfig
+from ..distributed.sharding import pair_pad_multiple
 
 
 @dataclasses.dataclass
@@ -32,20 +33,31 @@ class AlignmentEngine:
     (k exceeded after rescue) are reported unaligned, mirroring aligner
     thresholds in production mappers.
 
-    Ragged final batches are padded up to `batch_size` (stable jit shapes,
-    no per-tail recompile) by REPEATING the last real pair: a repeated
-    real pair is exactly as alignable as its twin, so padding lanes can
-    neither keep the on-device rescue loop running extra k-doubling rounds
-    (its round gate is `any(failed)`) nor leak into per-request stats —
-    padded lanes are dropped before results/stats are recorded."""
+    Ragged final batches are padded up (stable jit shapes, no per-tail
+    recompile) by REPEATING the last real pair: a repeated real pair is
+    exactly as alignable as its twin, so padding lanes can neither keep
+    the on-device rescue loop running extra k-doubling rounds (its round
+    gate is `any(failed)`) nor leak into per-request stats — padded lanes
+    are dropped before results/stats are recorded.
+
+    Sharded serving: pass `mesh` and every batch runs sharded over the
+    mesh's pair axes (shard_map'd Pallas hot path — see kernels.ops).
+    Batch sizes are then quantised to `pair_pad_multiple(cfg, mesh)` =
+    lane_tile * n_devices for the Pallas backends (n_devices for jnp), so
+    a ragged batch can never hand devices unequal shards or split a
+    kernel tile across devices; `batch_size` itself is rounded up to that
+    quantum at construction.  Unsharded (mesh=None) the quantum is 1 and
+    behaviour is unchanged."""
 
     def __init__(self, cfg: AlignerConfig = AlignerConfig(),
                  batch_size: int = 64, max_wait_s: float = 0.05,
                  backend: str | None = None, rescue_rounds: int = 2,
-                 pad_to_batch: bool = True):
+                 pad_to_batch: bool = True, mesh=None):
         self.aligner = GenASMAligner(cfg, rescue_rounds=rescue_rounds,
-                                     backend=backend)
-        self.batch_size = batch_size
+                                     backend=backend, mesh=mesh)
+        self.pad_multiple = pair_pad_multiple(self.aligner.cfg, mesh)
+        self.batch_size = -(-batch_size // self.pad_multiple) \
+            * self.pad_multiple
         self.max_wait_s = max_wait_s
         self.pad_to_batch = pad_to_batch
         self.queue: deque[AlignRequest] = deque()
@@ -56,11 +68,18 @@ class AlignmentEngine:
     def submit(self, req: AlignRequest):
         self.queue.append(req)
 
+    def _pad_target(self, n: int) -> int:
+        """Lanes this batch is padded to: batch_size when pad_to_batch,
+        else the next pair_pad_multiple (both keep shards equal and
+        tile-aligned on a mesh)."""
+        base = self.batch_size if self.pad_to_batch else n
+        return -(-base // self.pad_multiple) * self.pad_multiple
+
     def _run_batch(self, batch):
         t0 = time.time()
         reads = [r.read for r in batch]
         refs = [r.ref for r in batch]
-        n_pad = self.batch_size - len(batch) if self.pad_to_batch else 0
+        n_pad = self._pad_target(len(batch)) - len(batch)
         if n_pad > 0:
             reads = reads + [reads[-1]] * n_pad
             refs = refs + [refs[-1]] * n_pad

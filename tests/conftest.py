@@ -35,6 +35,35 @@ def readset():
 
 
 @pytest.fixture(scope="session")
+def corpus():
+    """The differential mixed-profile corpus (session-scoped so the CIGAR
+    invariant tests and the differential suite share one corpus and one
+    jit cache — see tests/test_differential.py for the profiles)."""
+    from tests.test_differential import make_corpus
+    return make_corpus(seed=20260727, n_per_profile=6)
+
+
+@pytest.fixture(scope="session")
+def diff_aligned(corpus):
+    """Session cache: each (backend, rescue_mode) aligns the differential
+    corpus once, shared by test_differential and test_cigar."""
+    from repro.core.aligner import GenASMAligner
+    from tests.test_differential import CFG, ROUNDS
+    reads, refs, _ = corpus
+    cache = {}
+
+    def run(backend, rescue_mode="device"):
+        key = (backend, rescue_mode)
+        if key not in cache:
+            cache[key] = GenASMAligner(
+                CFG, rescue_rounds=ROUNDS, backend=backend,
+                rescue_mode=rescue_mode).align(reads, refs)
+        return cache[key]
+
+    return run
+
+
+@pytest.fixture(scope="session")
 def aligned(readset):
     """Session cache of GenASMAligner results keyed by (frozen) config:
     each aligner variant is jitted and executed once per session, however

@@ -1,9 +1,19 @@
-"""CIGAR packing roundtrip + RLE string."""
+"""CIGAR packing roundtrip + RLE string + seeded per-backend invariants.
+
+The invariant suite (no hypothesis, seeded corpus shared with
+tests/test_differential.py via the session fixtures in conftest): for
+every backend, the op array of each solved lane must decode to a CIGAR
+whose consumed read/ref lengths equal the reported
+read_consumed/ref_consumed and whose edit count equals dist."""
+import re
+
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from tests._hyp import given, settings, st
 
 from repro.core.cigar import ops_to_string, pack_ops, unpack_ops
+from repro.core.oracle import OP_DEL, OP_INS, OP_MATCH, OP_SUBST
 from repro.core.traceback import OP_NONE
 
 
@@ -21,3 +31,63 @@ def test_pack_unpack_roundtrip(ops):
 def test_rle_string():
     assert ops_to_string(np.array([0, 0, 0, 1, 3, 3, 2])) == "3=1X2D1I"
     assert ops_to_string(np.array([], np.uint8)) == ""
+
+
+# ---- seeded per-backend CIGAR invariants (differential corpus) ----
+
+_CIGAR_RE = re.compile(r"(\d+)([=XID])")
+_READ_CONSUMES = {"=", "X", "I"}
+_REF_CONSUMES = {"=", "X", "D"}
+
+
+def _cigar_counts(cigar: str):
+    counts = {"=": 0, "X": 0, "I": 0, "D": 0}
+    spans = _CIGAR_RE.findall(cigar)
+    assert "".join(f"{n}{c}" for n, c in spans) == cigar, cigar
+    for n, c in spans:
+        counts[c] += int(n)
+    return counts
+
+
+@pytest.mark.parametrize("backend", [
+    "jnp",
+    "pallas_fused",
+    pytest.param("pallas", marks=pytest.mark.slow),
+])
+def test_cigar_consumption_invariants_per_backend(corpus, diff_aligned,
+                                                  backend):
+    """Solved lanes: the ops decode to a CIGAR that (a) fully consumes the
+    read (read_consumed == len(read)), (b) consumes exactly ref_consumed
+    reference chars (never more than the ref holds), and (c) carries
+    exactly `dist` edits.  Failed lanes report empty CIGARs and zeroed
+    consumption."""
+    reads, refs, profs = corpus
+    res = diff_aligned(backend)
+    n_solved = 0
+    for i in range(len(reads)):
+        if res.failed[i]:
+            assert res.cigars[i] == "" and res.ops[i].size == 0
+            assert res.read_consumed[i] == 0 and res.ref_consumed[i] == 0
+            continue
+        ops = res.ops[i]
+        n_eq = int((ops == OP_MATCH).sum())
+        n_x = int((ops == OP_SUBST).sum())
+        n_i = int((ops == OP_INS).sum())
+        n_d = int((ops == OP_DEL).sum())
+        assert n_eq + n_x + n_i + n_d == len(ops), profs[i]   # no strays
+        assert n_eq + n_x + n_i == res.read_consumed[i] == len(reads[i])
+        assert n_eq + n_x + n_d == res.ref_consumed[i] <= len(refs[i])
+        assert n_x + n_i + n_d == res.dist[i], (i, profs[i])
+        # and the RLE string agrees with the raw op array
+        counts = _cigar_counts(res.cigars[i])
+        assert counts == {"=": n_eq, "X": n_x, "I": n_i, "D": n_d}
+        n_solved += 1
+    assert n_solved > 0
+
+
+def test_cigar_invariants_backends_agree(diff_aligned):
+    """The invariant inputs themselves (consumption vectors) are part of
+    the backend equivalence contract."""
+    a, b = diff_aligned("jnp"), diff_aligned("pallas_fused")
+    assert list(a.read_consumed) == list(b.read_consumed)
+    assert list(a.ref_consumed) == list(b.ref_consumed)

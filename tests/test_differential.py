@@ -110,26 +110,8 @@ def make_corpus(seed, n_per_profile, read_len=36,
     return reads, refs, profs
 
 
-@pytest.fixture(scope="module")
-def corpus():
-    return make_corpus(seed=20260727, n_per_profile=6)
-
-
-@pytest.fixture(scope="module")
-def diff_aligned(corpus):
-    """Module cache: each (backend, rescue_mode) aligns the corpus once."""
-    reads, refs, _ = corpus
-    cache = {}
-
-    def run(backend, rescue_mode="device"):
-        key = (backend, rescue_mode)
-        if key not in cache:
-            cache[key] = GenASMAligner(
-                CFG, rescue_rounds=ROUNDS, backend=backend,
-                rescue_mode=rescue_mode).align(reads, refs)
-        return cache[key]
-
-    return run
+# `corpus` and `diff_aligned` are session fixtures in tests/conftest.py
+# (shared with the CIGAR invariant suite in tests/test_cigar.py).
 
 
 def test_cigars_valid_and_dist_upper_bounds_oracle(corpus, diff_aligned):
@@ -175,8 +157,11 @@ def test_split_pallas_backend_bit_identical(corpus, diff_aligned):
                           "pallas")
 
 
+@pytest.mark.slow
 def test_device_rescue_matches_host_loop(corpus, diff_aligned):
-    """On-device masked rescue == legacy host numpy loop, bit for bit."""
+    """On-device masked rescue == legacy host numpy loop, bit for bit.
+    (@slow: the host loop re-pads/re-compiles per round; tier-1 keeps the
+    host-vs-device gate via tests/test_rescue.py's smaller geometry.)"""
     dev = diff_aligned("jnp", "device")
     host = diff_aligned("jnp", "host")
     assert list(dev.dist) == list(host.dist)
@@ -217,6 +202,7 @@ def test_dist_matches_banded_dp_baseline(corpus, diff_aligned):
             assert res.dist[i] <= dp[i] * 1.5 + 3, (i, profs[i])
 
 
+@pytest.mark.slow
 @given(st.integers(0, 2**31 - 1))
 @settings(max_examples=2, deadline=None)
 def test_fuzz_random_seeds_host_device_and_oracle(seed):

@@ -136,6 +136,51 @@ def test_fused_windowed_alignment_matches_jnp(rng):
     assert res_j.cigars == res_f.cigars
 
 
+def _kernel_call(pats, txts, cfg, **kw):
+    return genasm_tb_fused_op(jnp.array(pats), jnp.array(txts), cfg=cfg,
+                              commit_limit=cfg.stride, max_ops=cfg.tb_max_ops,
+                              max_steps=cfg.tb_max_steps, **kw)
+
+
+def test_fused_tile_grouping_invariance(rng):
+    """Per-lane results must not depend on which problem tile a lane lands
+    in (whole-tile early termination only changes how many levels run, and
+    the walk never visits levels above a lane's own dist).  This is the
+    property that makes sharded dispatch bit-identical: the mesh regroups
+    lanes into per-device tiles (kernels.ops)."""
+    cfg = AlignerConfig(W=16, O=6, k=4)
+    pats, txts, _ = batch(rng, 16, 4, 16)
+    a = _kernel_call(pats, txts, cfg, tile=4)
+    b = _kernel_call(pats, txts, cfg, tile=16)
+    for key in ("ops", "n_ops", "dist", "read_adv", "ref_adv", "cost"):
+        np.testing.assert_array_equal(np.array(a[key]), np.array(b[key]),
+                                      err_msg=key)
+
+
+from jax.experimental.pallas import tpu as pltpu  # noqa: E402
+
+_TPU_INTERPRET = getattr(pltpu, "force_tpu_interpret_mode", None)
+
+
+@pytest.mark.skipif(_TPU_INTERPRET is None,
+                    reason="this jax lacks pltpu.force_tpu_interpret_mode "
+                           "(added after 0.4.37) — parity runs once CI's "
+                           "jax is upgraded; see docs/backends.md")
+def test_fused_kernels_tpu_interpret_parity(rng):
+    """ROADMAP item: the fused kernel under pltpu.force_tpu_interpret_mode
+    (the TPU lowering semantics, emulated) must be bit-identical to plain
+    interpret mode, so interpret=False defaults can be flipped safely on
+    real TPUs."""
+    cfg = AlignerConfig(W=16, O=6, k=4)
+    pats, txts, _ = batch(rng, 16, 4, 8)
+    plain = _kernel_call(pats, txts, cfg, tile=4, interpret=True)
+    with _TPU_INTERPRET():
+        tpu_interp = _kernel_call(pats, txts, cfg, tile=4, interpret=False)
+    for key in ("ops", "n_ops", "dist", "read_adv", "ref_adv", "cost"):
+        np.testing.assert_array_equal(np.array(plain[key]),
+                                      np.array(tpu_interp[key]), err_msg=key)
+
+
 @pytest.mark.slow
 def test_fused_rescue_doubles_k(rng):
     """rescue-round k doubling recompiles the fused kernel with the doubled

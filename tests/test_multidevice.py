@@ -1,0 +1,228 @@
+"""Forced-multi-device parity: the sharded fused Pallas hot path must be
+BIT-identical to the single-device run.
+
+`XLA_FLAGS=--xla_force_host_platform_device_count=8` must be set before
+jax import (and must not leak into the other single-device tests), so
+every test here re-execs a subprocess, same as tests/test_distributed.py.
+
+What tier-1 proves (one subprocess, the differential corpus profiles):
+  * GenASMAligner(mesh=...) with backend='pallas_fused' + on-device
+    k-doubling rescue == the mesh=None run on every output (ops, dist,
+    k_used, failed, cigars, read/ref consumption) — including a ragged
+    batch (B=30 is not a multiple of lane_tile * n_devices, so the kernel
+    dispatch pads globally and shards evenly) and a rescue ladder where
+    only SOME shards hold failed lanes (the round gate is a global any);
+  * the sharded ladder still costs exactly 1 upload + 1 download;
+  * the collapsed make_align_step factory: sharded summaries == eager
+    single-device summaries, and per-lane outputs actually land sharded
+    over all 8 devices;
+  * serve.AlignmentEngine(mesh=...): ragged request streams are padded to
+    pair_pad_multiple = lane_tile * n_devices (equal, tile-aligned shards)
+    and padding lanes never reach results or summary stats.
+
+The nightly (@slow) sweep extends the same parity to the jnp and split
+pallas backends, the host rescue mode, a 2-D ('data','model') mesh and
+the plain (no-rescue) factory.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# shared by both subprocess scripts: corpus + cfg + mesh + base aligner run
+PRELUDE = """
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from repro.core.aligner import GenASMAligner
+    from repro.core.config import AlignerConfig
+    from repro.core import transfer
+    from repro.launch.mesh import make_test_mesh
+    from tests.test_differential import make_corpus
+
+    def assert_bit_identical(a, b, label):
+        assert list(a.dist) == list(b.dist), label
+        assert list(a.failed) == list(b.failed), label
+        assert list(a.k_used) == list(b.k_used), label
+        assert list(a.read_consumed) == list(b.read_consumed), label
+        assert list(a.ref_consumed) == list(b.ref_consumed), label
+        assert a.cigars == b.cigars, label
+        for i, (x, y) in enumerate(zip(a.ops, b.ops)):
+            np.testing.assert_array_equal(x, y, err_msg=f"{label} lane {i}")
+"""
+
+
+def run_py(code: str, n_dev: int = 8, timeout=480):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_dev}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=timeout,
+                       env=env, cwd=REPO)
+    assert r.returncode == 0, r.stdout + r.stderr
+    return r.stdout
+
+
+def test_sharded_fused_rescue_bit_identical_and_engine_padding():
+    out = run_py(PRELUDE + """
+    cfg = AlignerConfig(W=16, O=6, k=4, lane_tile=4)
+    mesh = make_test_mesh((8,), ('data',))
+    n_shards = 8
+    reads, refs, profs = make_corpus(seed=20260727, n_per_profile=6)
+    B = len(reads)
+    assert B == 30 and B % (cfg.lane_tile * n_shards) != 0   # ragged batch
+
+    # ---- single-device baseline vs sharded run: bit-identical ----
+    base = GenASMAligner(cfg, rescue_rounds=1,
+                         backend='pallas_fused').align(reads, refs)
+    transfer.reset()
+    shard = GenASMAligner(cfg, rescue_rounds=1, backend='pallas_fused',
+                          mesh=mesh).align(reads, refs)
+    ts = transfer.stats()
+    assert (ts.h2d_calls, ts.d2h_calls) == (1, 1), ts   # no per-round trips
+    assert_bit_identical(shard, base, 'sharded pallas_fused')
+
+    # the corpus must really exercise the rescue ladder, with failed lanes
+    # in only SOME shards (the kernel pads B=30 -> 32, 4 lanes per shard)
+    assert (base.k_used[~base.failed] > cfg.k).any()
+    failed_shards = {i // 4 for i in range(B) if base.failed[i]}
+    assert failed_shards and len(failed_shards) < n_shards
+    print('PARITY OK', int(base.failed.sum()),
+          int((base.k_used > cfg.k).sum()))
+
+    # ---- engine: ragged 13-request stream on the mesh ----
+    from repro.serve.engine import AlignmentEngine, AlignRequest
+    eng = AlignmentEngine(cfg, batch_size=13, rescue_rounds=1,
+                          backend='pallas_fused', mesh=mesh)
+    assert eng.pad_multiple == cfg.lane_tile * n_shards == 32
+    assert eng.batch_size == 32        # quantised up at construction
+    seen = []
+    orig = eng.aligner.align
+    eng.aligner.align = lambda r, f: (seen.append(len(r)), orig(r, f))[1]
+    for i in range(13):
+        eng.submit(AlignRequest(rid=i, read=reads[i], ref=refs[i]))
+    stats = eng.serve_until_empty()
+    assert seen == [32]                               # equal 4-lane shards
+    assert stats['batches'] == 1 and stats['padded_lanes'] == 19
+    assert stats['aligned'] + stats['failed'] == 13   # pads never counted
+    assert set(eng.results) == set(range(13))
+    for i in range(13):
+        assert eng.results[i]['ok'] == (not base.failed[i])
+        if not base.failed[i]:
+            assert eng.results[i]['dist'] == int(base.dist[i])
+            assert eng.results[i]['cigar'] == base.cigars[i]
+    print('ENGINE OK', stats['aligned'], stats['failed'])
+
+    # ---- collapsed factory: sharded summaries == single-device ----
+    from repro.core.windowing import (SENTINEL_READ, SENTINEL_REF,
+                                      rescue_schedule, self_tail_width)
+    from repro.serve.align_step import align_step, make_align_step
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    b13 = [(reads[i], refs[i]) for i in range(13)]
+    b32 = b13 + [b13[-1]] * 19                 # the engine's padded batch
+    L = max(len(r) for r, _ in b32)
+    wt = self_tail_width(rescue_schedule(cfg, 1)[-1])
+    Lf = max(len(f) for _, f in b32) + cfg.W + wt + 1
+    rp = np.full((32, L + cfg.W + 1), SENTINEL_READ, np.uint8)
+    fp = np.full((32, Lf), SENTINEL_REF, np.uint8)
+    rl = np.zeros(32, np.int32); fl = np.zeros(32, np.int32)
+    for i, (r, f) in enumerate(b32):
+        rp[i, :len(r)] = r; rl[i] = len(r)
+        fp[i, :len(f)] = f; fl[i] = len(f)
+    ref_out, ref_sum = align_step(jnp.array(rp), jnp.array(rl),
+                                  jnp.array(fp), jnp.array(fl), cfg=cfg,
+                                  max_read_len=L, rescue_rounds=1)
+    stepf = make_align_step(cfg, L, mesh, rescue_rounds=1)
+    bsh = NamedSharding(mesh, P(('data',), None))
+    vsh = NamedSharding(mesh, P(('data',)))
+    args = (jax.device_put(jnp.array(rp), bsh), jax.device_put(jnp.array(rl), vsh),
+            jax.device_put(jnp.array(fp), bsh), jax.device_put(jnp.array(fl), vsh))
+    out, summ = stepf(*args)
+    assert len(out['dist'].sharding.device_set) == 8   # really distributed
+    for key in ('ops', 'n_ops', 'dist', 'failed', 'k_used',
+                'read_consumed', 'ref_consumed', 'rounds_run'):
+        np.testing.assert_array_equal(np.asarray(out[key]),
+                                      np.asarray(ref_out[key]), err_msg=key)
+    for key in ('n_failed', 'n_rescued', 'total_edits', 'total_ops',
+                'rounds_run'):
+        assert int(summ[key]) == int(ref_sum[key]), key
+    print('FACTORY OK', int(summ['n_failed']), int(summ['total_edits']))
+    """)
+    assert "PARITY OK" in out and "ENGINE OK" in out and "FACTORY OK" in out
+
+
+@pytest.mark.slow
+def test_sharded_parity_all_backends_and_meshes():
+    """Nightly sweep: jnp + split-pallas backends, host rescue mode, the
+    plain (no-rescue) factory and a 2-D mesh whose 'model' axis the pair
+    sharding must ignore — all bit-identical to single-device."""
+    out = run_py(PRELUDE + """
+    from repro.core.windowing import (SENTINEL_READ, SENTINEL_REF,
+                                      self_tail_width)
+    from repro.serve.align_step import align_step, make_align_step
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    cfg = AlignerConfig(W=16, O=6, k=4, lane_tile=4)
+    mesh = make_test_mesh((8,), ('data',))
+    reads, refs, profs = make_corpus(seed=77, n_per_profile=8, read_len=48)
+    B = len(reads)
+    assert B == 40 and B % 8 == 0   # jnp GSPMD constraint path engages
+
+    for backend in ('jnp', 'pallas'):
+        base = GenASMAligner(cfg, rescue_rounds=2,
+                             backend=backend).align(reads, refs)
+        shard = GenASMAligner(cfg, rescue_rounds=2, backend=backend,
+                              mesh=mesh).align(reads, refs)
+        assert_bit_identical(shard, base, backend)
+        print('OK backend', backend)
+
+    # legacy host rescue loop, sharded per round
+    base_h = GenASMAligner(cfg, rescue_rounds=1,
+                           rescue_mode='host').align(reads, refs)
+    shard_h = GenASMAligner(cfg, rescue_rounds=1, rescue_mode='host',
+                            mesh=mesh).align(reads, refs)
+    assert_bit_identical(shard_h, base_h, 'host rescue')
+    print('OK host rescue')
+
+    # 2-D mesh: pair axis shards over 'data' (4), 'model' axis ignored
+    mesh2 = make_test_mesh((4, 2), ('data', 'model'))
+    base_f = GenASMAligner(cfg, rescue_rounds=1,
+                           backend='pallas_fused').align(reads, refs)
+    shard_f = GenASMAligner(cfg, rescue_rounds=1, backend='pallas_fused',
+                            mesh=mesh2).align(reads, refs)
+    assert_bit_identical(shard_f, base_f, '2d mesh pallas_fused')
+    print('OK 2d mesh')
+
+    # plain factory (rescue_rounds=None): summaries + lanes match eager
+    L = max(len(r) for r in reads)
+    wt = self_tail_width(cfg)
+    rp = np.full((B, L + cfg.W + 1), SENTINEL_READ, np.uint8)
+    fp = np.full((B, max(len(f) for f in refs) + cfg.W + wt + 1),
+                 SENTINEL_REF, np.uint8)
+    rl = np.zeros(B, np.int32); fl = np.zeros(B, np.int32)
+    for i, (r, f) in enumerate(zip(reads, refs)):
+        rp[i, :len(r)] = r; rl[i] = len(r)
+        fp[i, :len(f)] = f; fl[i] = len(f)
+    ref_out, ref_sum = align_step(jnp.array(rp), jnp.array(rl),
+                                  jnp.array(fp), jnp.array(fl), cfg=cfg,
+                                  max_read_len=L)
+    stepf = make_align_step(cfg, L, mesh)
+    bsh = NamedSharding(mesh, P(('data',), None))
+    vsh = NamedSharding(mesh, P(('data',)))
+    out, summ = stepf(jax.device_put(jnp.array(rp), bsh),
+                      jax.device_put(jnp.array(rl), vsh),
+                      jax.device_put(jnp.array(fp), bsh),
+                      jax.device_put(jnp.array(fl), vsh))
+    for key in ('ops', 'n_ops', 'dist', 'failed'):
+        np.testing.assert_array_equal(np.asarray(out[key]),
+                                      np.asarray(ref_out[key]), err_msg=key)
+    for key in ('n_failed', 'total_edits', 'total_ops'):
+        assert int(summ[key]) == int(ref_sum[key]), key
+    print('OK plain factory')
+    """, timeout=560)
+    for tag in ("OK backend jnp", "OK backend pallas", "OK host rescue",
+                "OK 2d mesh", "OK plain factory"):
+        assert tag in out

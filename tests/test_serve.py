@@ -30,12 +30,16 @@ def test_alignment_engine_end_to_end():
     assert all(eng.results[i]["cigar"] for i in range(6))
 
 
+@pytest.mark.slow
 def test_engine_ragged_batch_padding_regression():
     """Non-multiple-of-batch-size request stream: the ragged final batch is
     padded to batch_size with REPEATS of a real pair (stable jit shapes),
     and padding lanes must neither consume extra rescue rounds (a garbage
     pad lane would fail every round and keep the on-device `any(failed)`
-    round gate open) nor pollute stats['failed'] / per-request results."""
+    round gate open) nor pollute stats['failed'] / per-request results.
+    (@slow: its own W=16 ladder compile; the tier-1 representative is the
+    stronger 8-forced-device version in tests/test_multidevice.py, which
+    additionally checks the pair_pad_multiple quantisation.)"""
     from repro.core.config import AlignerConfig
 
     g = synth_genome(30_000, seed=15)

@@ -18,7 +18,10 @@ CFG_AND = AlignerConfig(W=64, O=24, k=12, store="and", early_term=True)
 
 @pytest.mark.parametrize("cfg", [
     pytest.param(CFG_BAND, id="band"),
-    pytest.param(CFG_EDGES, id="edges4"),
+    # edges4/and ride nightly: tier-1 covers the store-mode equivalence at
+    # window scale via test_kernel_fused/test_genasm_tb (W=32), and the
+    # W=64 edges4 fill is the slowest single compile in the suite
+    pytest.param(CFG_EDGES, id="edges4", marks=pytest.mark.slow),
     pytest.param(CFG_AND, id="and", marks=pytest.mark.slow),
 ])
 def test_windowed_alignment_valid_all_variants(readset, aligned, cfg):
@@ -29,8 +32,10 @@ def test_windowed_alignment_valid_all_variants(readset, aligned, cfg):
                        res.ops[i], expected_dist=res.dist[i])
 
 
+@pytest.mark.slow
 def test_improved_equals_unimproved_distances(aligned):
-    """The paper's improvements change memory traffic, not results."""
+    """The paper's improvements change memory traffic, not results.
+    (@slow with the edges4 variant above — it triggers the same compile.)"""
     assert list(aligned(CFG_BAND).dist) == list(aligned(CFG_EDGES).dist)
 
 
@@ -44,8 +49,11 @@ def test_windowed_distance_near_optimal(readset, aligned):
         assert res.dist[i] <= ed * 1.08 + 3
 
 
+@pytest.mark.slow
 def test_rescue_on_high_error_pair(rng):
-    """A pair exceeding k in some window gets rescued with doubled k."""
+    """A pair exceeding k in some window gets rescued with doubled k.
+    (@slow: a W=64 ladder compile; tier-1 rescue semantics live in
+    tests/test_rescue.py at W=16.)"""
     g = synth_genome(20_000, seed=21)
     rs = simulate_reads(g, 2, ReadSimConfig(read_len=200, error_rate=0.20,
                                             seed=22))
