@@ -51,6 +51,14 @@ def main() -> None:
     print(f"aligners/speedup_dc_engine_vs_edlib_like,0.0,"
           f"{derived['dc_engine_vs_edlib_like']:.2f}x_paper_cpu1.7x")
 
+    # the session front door: ragged-stream pairs/s + bucket-hit stats
+    # (the compile-stability numbers the PR-over-PR trajectory tracks)
+    rows, derived = bench_aligners.session_stream(
+        n_reads=9 if args.fast else 24,
+        max_len=160 if args.fast else 400)
+    emit(rows)
+    all_derived["session"] = derived
+
     from benchmarks import bench_memory
     rows, derived = bench_memory.table()
     emit(rows)

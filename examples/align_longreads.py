@@ -11,7 +11,7 @@ import time
 
 import numpy as np
 
-from repro.core.aligner import GenASMAligner
+from repro.api import plan
 from repro.core.config import AlignerConfig
 from repro.core.oracle import validate_cigar
 from repro.data.genome import (ReadSimConfig, candidate_chains, simulate_reads,
@@ -22,9 +22,11 @@ ap.add_argument("--reads", type=int, default=16)
 ap.add_argument("--len", type=int, default=2000, dest="rlen")
 ap.add_argument("--decoys", type=int, default=1)
 ap.add_argument("--error-rate", type=float, default=0.10)
+ap.add_argument("--genome", type=int, default=1_000_000)
+ap.add_argument("--W", type=int, default=64)
 args = ap.parse_args()
 
-genome = synth_genome(1_000_000, seed=11)
+genome = synth_genome(args.genome, seed=11)
 rs = simulate_reads(genome, args.reads,
                     ReadSimConfig(read_len=args.rlen,
                                   error_rate=args.error_rate, seed=5))
@@ -32,16 +34,21 @@ chains = candidate_chains(genome, rs, decoys_per_read=args.decoys)
 print(f"{args.reads} reads x {args.rlen}bp @ {args.error_rate:.0%} error, "
       f"{len(chains)} candidate locations")
 
-aligner = GenASMAligner(AlignerConfig(W=64, O=24, k=12), rescue_rounds=1)
+# the session front door: plan once, warm the one bucket this pipeline
+# hits, and the steady-state pass is pure cache hits (no re-tracing)
+session = plan(AlignerConfig(W=args.W, O=args.W * 3 // 8, k=args.W * 3 // 16),
+               rescue_rounds=1, batch_lanes=len(chains))
 reads = [rs.reads[i] for i, _ in chains]
 refs = [seg for _, seg in chains]
 
 t0 = time.time()
-res = aligner.align(reads, refs)          # first call includes jit compile
+res = session.align(reads, refs)          # first call AOT-compiles buckets
 t_first = time.time() - t0
+lowered = session.cache.lowerings
 t0 = time.time()
-res = aligner.align(reads, refs)
+res = session.align(reads, refs)
 t_steady = time.time() - t0
+assert session.cache.lowerings == lowered, "steady state re-traced!"
 
 ok = ~res.failed
 true_mask = np.array([j == 0 for i, (ri, _) in enumerate(chains)
@@ -58,6 +65,7 @@ for i in range(0, len(chains), max(1, len(chains) // 4)):
 bp = sum(len(r) for r in reads)
 print(f"aligned true loci: {aligned_true}/{n_true}; "
       f"rejected decoys: {rejected_decoys}/{len(chains)-n_true}")
+print(f"summary: {res.summary(base_k=session.cfg.k)}")
 print(f"steady-state: {t_steady:.2f}s = {len(chains)/t_steady:.1f} pairs/s = "
       f"{bp/t_steady/1e6:.2f} Mbp/s (single CPU core, jnp backend)")
 print(f"mean edit distance of true alignments: "

@@ -1,25 +1,70 @@
-"""Alignment-as-a-service: batched request queue over the aligner engine
-(the paper's GPU batch processing mapped to the framework's serving layer).
+"""Alignment-as-a-service through the ONE front door (repro.api): plan an
+AlignSession, AOT warm-up its length buckets before traffic, stream ragged
+requests as futures, and read the compile-stability counters — the paper's
+GPU batch processing mapped to a production-shaped serving layer.
 
-    PYTHONPATH=src python examples/serve_alignment.py
+    PYTHONPATH=src python examples/serve_alignment.py [--requests 32]
+        [--len 800] [--fast]
 """
+import argparse
+
 import numpy as np
 
+from repro.api import plan
+from repro.core.config import AlignerConfig
 from repro.data.genome import ReadSimConfig, simulate_reads, synth_genome
-from repro.serve.engine import AlignmentEngine, AlignRequest
 
-genome = synth_genome(500_000, seed=3)
-rs = simulate_reads(genome, 32, ReadSimConfig(read_len=800, error_rate=0.08,
-                                              seed=9))
-engine = AlignmentEngine(batch_size=16)
-for i, (read, seg) in enumerate(zip(rs.reads, rs.ref_segments)):
-    engine.submit(AlignRequest(rid=i, read=read, ref=seg))
+ap = argparse.ArgumentParser()
+ap.add_argument("--requests", type=int, default=32)
+ap.add_argument("--len", type=int, default=800, dest="rlen")
+ap.add_argument("--fast", action="store_true",
+                help="small geometry for CI smoke runs")
+args = ap.parse_args()
 
-stats = engine.serve_until_empty()
-ok = sum(1 for r in engine.results.values() if r["ok"])
-print(f"served {len(engine.results)} requests in {stats['batches']} batches, "
-      f"{ok} aligned, {stats['failed']} failed, "
-      f"{len(engine.results)/stats['wall_s']:.1f} req/s")
-r0 = engine.results[0]
+cfg = AlignerConfig(W=32, O=12, k=8) if args.fast \
+    else AlignerConfig(W=64, O=24, k=12)
+genome = synth_genome(200_000 if args.fast else 500_000, seed=3)
+# a RAGGED stream: three read-length classes hitting different buckets
+lens = [max(64, args.rlen // 4), max(96, args.rlen // 2), args.rlen]
+streams = [simulate_reads(genome, -(-args.requests // len(lens)),
+                          ReadSimConfig(read_len=L, error_rate=0.08,
+                                        seed=9 + i))
+           for i, L in enumerate(lens)]
+
+session = plan(cfg, rescue_rounds=1, batch_lanes=8)
+# warm-up is a METHOD: from a traffic sample, compile every length bucket
+# before the first request arrives (one AOT executable per bucket) —
+# including the smaller lane class the ragged stream tails land in
+buckets = sorted({session.bucket_for(len(r), len(s))
+                  for rs in streams
+                  for r, s in zip(rs.reads, rs.ref_segments)})
+session.warmup(buckets)
+tail = -(-args.requests // len(lens)) % session.spec.batch_lanes
+warm = session.warmup(buckets, lanes=tail) if tail \
+    else session.cache.stats()
+print(f"warmed {warm['executables']} executables "
+      f"(lowerings={warm['lowerings']})")
+
+futures = {}
+for rs in streams:
+    for read, seg in zip(rs.reads, rs.ref_segments):
+        fut = session.submit(read, seg)   # routed to its length bucket;
+        futures[fut.rid] = fut            # dispatches double-buffer
+session.flush()
+results = {rid: fut.result() for rid, fut in futures.items()}
+
+st = session.session_stats()
+ok = sum(1 for r in results.values() if r["ok"])
+print(f"served {len(results)} requests in {st['dispatches']} dispatches "
+      f"({st['pad_lanes']} pad lanes), {ok} aligned, "
+      f"{len(results) - ok} failed, "
+      f"{len(results) / max(st['wall_s'], 1e-9):.1f} req/s")
+cc = st["compile_cache"]
+print(f"compile cache: {cc['lowerings']} lowerings "
+      f"({cc['lowerings'] - warm['lowerings']} after warm-up, rescue-rung "
+      f"lane classes) for {st['dispatches'] + st['rescue_dispatches']} "
+      f"dispatches, {cc['hits']} hits — steady state never re-traces")
+r0 = results[0]
 print(f"request 0: dist={r0['dist']} k_used={r0['k_used']} "
       f"cigar[:60]={r0['cigar'][:60]}")
+assert ok > 0

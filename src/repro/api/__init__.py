@@ -1,0 +1,18 @@
+"""repro.api — the one front door for alignment serving.
+
+    from repro.api import plan
+    session = plan(W=64, O=24, k=12, backend="pallas_fused",
+                   rescue_rounds=2)
+    session.warmup([(10_000, 13_000)])       # AOT-compile before traffic
+    fut = session.submit(read_codes, ref_codes)
+    ...
+    print(fut.result()["cigar"], session.session_stats())
+
+See docs/api.md for the session lifecycle, bucketing and the deprecation
+table for the legacy GenASMAligner / AlignmentEngine entry points.
+"""
+from .session import (AlignFuture, AlignSession, AlignSpec, CompileCache,
+                      plan)
+
+__all__ = ["AlignFuture", "AlignSession", "AlignSpec", "CompileCache",
+           "plan"]

@@ -1,0 +1,473 @@
+"""One front door for alignment: plan an `AlignSession`, then stream.
+
+The paper's GPU speedups come from keeping the chip busy; a serving path
+dies on compile stalls if pad widths derive from each batch's ragged
+``max_read_len`` (every new length = a fresh jit trace).  The session
+fixes that the way Scrooge / AnySeq-style production aligners do — a thin
+facade over pre-planned, shape-stable executables:
+
+* ``plan(cfg-like spec)`` resolves one validated :class:`AlignSpec`
+  (merging the knobs formerly scattered over ``GenASMAligner`` /
+  ``AlignmentEngine`` / ``make_align_step``) and returns a session.
+* Lengths are quantised to power-of-two **buckets**
+  (``core.windowing.pow2_bucket``); lane counts to the batch quantum
+  (``distributed.sharding.bucket_lanes``).  One executable exists per
+  (spec, bucket, mesh), AOT-lowered via ``jit(...).lower().compile()``
+  into an explicit :class:`CompileCache` whose hit/miss/lowering counters
+  are the compile-stability contract (tests/test_api.py).
+* ``warmup()`` is a *method*, not a side effect: compile before traffic.
+* ``submit()`` routes requests to buckets and returns an
+  :class:`AlignFuture`; dispatches are double-buffered — batch N+1 is
+  encoded/padded on host while batch N computes under jax async dispatch
+  — and ``results()`` / ``future.result()`` stream decoded CIGARs back.
+* Rescue (``rescue_mode='bucket'``, the default) gathers still-failed
+  lanes and compacts them into the next-smaller length/lane bucket per
+  k-doubling rung, so solved lanes' windows are never recomputed and the
+  rung executables are cached like any other bucket.  Bit-identical to
+  the legacy host loop and the on-device ladder (tests/test_rescue.py).
+
+``GenASMAligner`` (exact shapes) and ``AlignmentEngine`` (now a shim over
+this session) remain as the reference implementations — docs/api.md has
+the deprecation table.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+
+import numpy as np
+
+from ..core import transfer
+from ..core.aligner import AlignResult
+from ..core.cigar import ops_to_string
+from ..core.config import AlignerConfig, resolve_config
+from ..core.windowing import (SENTINEL_READ, SENTINEL_REF, bucket_avals,
+                              pad_geometry, pow2_bucket, rescue_schedule)
+from ..distributed.sharding import bucket_lanes
+
+
+# --------------------------------------------------------------------------
+# spec
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AlignSpec:
+    """Everything a session needs, resolved and validated ONCE at plan time
+    (the former GenASMAligner/AlignmentEngine/make_align_step knob trio).
+
+    cfg           — the aligner geometry/backend (see core.config).
+    rescue_rounds — k-doubling ladder depth past the base k.
+    rescue_mode   — 'bucket' (compact failed lanes into smaller bucket
+                    executables per rung; default) or 'device' (the
+                    on-device masked ladder: 1 upload + 1 download total).
+    batch_lanes   — lanes per full dispatch (quantised up to the pair
+                    quantum at plan time).
+    bucket_floor  — smallest power-of-two length bucket.
+    max_inflight  — dispatches in flight before the oldest is retired
+                    (2 = double buffering: pad N+1 while N computes).
+    mesh          — optional device mesh; every executable is lowered
+                    against it (shard_map'd Pallas / GSPMD jnp paths).
+    """
+    cfg: AlignerConfig = AlignerConfig()
+    rescue_rounds: int = 2
+    rescue_mode: str = "bucket"
+    batch_lanes: int = 64
+    bucket_floor: int = 32
+    max_inflight: int = 2
+    mesh: object = None
+
+    def __post_init__(self):
+        assert self.rescue_mode in ("bucket", "device"), self.rescue_mode
+        assert self.rescue_rounds >= 0
+        assert self.batch_lanes >= 1
+        assert self.bucket_floor >= 1
+        assert self.max_inflight >= 1
+
+    def key(self):
+        """Hashable identity of everything that shapes an executable
+        (mesh excluded — it is a separate component of the cache key)."""
+        return (self.cfg, self.rescue_rounds, self.rescue_mode)
+
+    def read_bucket(self, read_len: int) -> int:
+        return pow2_bucket(read_len, self.bucket_floor)
+
+    def ref_bucket(self, ref_len: int) -> int:
+        return pow2_bucket(ref_len, self.bucket_floor)
+
+
+def plan(cfg: AlignerConfig | None = None, *, backend: str | None = None,
+         rescue_rounds: int = 2, rescue_mode: str = "bucket",
+         batch_lanes: int = 64, bucket_floor: int = 32,
+         max_inflight: int = 2, mesh=None, **cfg_overrides) -> "AlignSession":
+    """Resolve a cfg-like spec into a planned :class:`AlignSession`.
+
+    Accepts an AlignerConfig (or None for defaults) plus any AlignerConfig
+    field as a keyword override (``backend=``, ``W=``, ``k=``, ...) and the
+    session knobs above.  This is the one validation funnel — nothing
+    downstream re-derives or re-checks knobs.
+    """
+    cfg = resolve_config(cfg, backend=backend, **cfg_overrides)
+    spec = AlignSpec(cfg=cfg, rescue_rounds=rescue_rounds,
+                     rescue_mode=rescue_mode,
+                     batch_lanes=bucket_lanes(batch_lanes, cfg, mesh),
+                     bucket_floor=bucket_floor, max_inflight=max_inflight,
+                     mesh=mesh)
+    return AlignSession(spec)
+
+
+# --------------------------------------------------------------------------
+# compile cache
+# --------------------------------------------------------------------------
+
+class CompileCache:
+    """Explicit AOT-executable cache keyed by (spec, bucket, mesh).
+
+    ``get(key, build)`` returns the cached executable or AOT-lowers a new
+    one via ``build()`` (``jax.jit(...).lower(*avals).compile()`` — one
+    trace + one lowering, counted).  The counters ARE the compile-
+    stability contract: a ragged stream must show ``misses == lowerings ==
+    number of distinct buckets`` and hits for everything else.
+    """
+
+    def __init__(self):
+        self._exe: dict = {}
+        self.hits = 0
+        self.misses = 0
+        self.lowerings = 0
+        self.bucket_hits: dict = {}     # key -> times served from cache
+
+    def get(self, key, build):
+        exe = self._exe.get(key)
+        if exe is None:
+            self.misses += 1
+            self.lowerings += 1
+            exe = self._exe[key] = build()
+        else:
+            self.hits += 1
+            self.bucket_hits[key] = self.bucket_hits.get(key, 0) + 1
+        return exe
+
+    def __len__(self):
+        return len(self._exe)
+
+    def stats(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "lowerings": self.lowerings, "executables": len(self),
+                "bucket_hits": {str(k): v
+                                for k, v in self.bucket_hits.items()}}
+
+
+# --------------------------------------------------------------------------
+# futures
+# --------------------------------------------------------------------------
+
+class AlignFuture:
+    """Handle for one submitted pair; fulfilled when its dispatch retires."""
+
+    __slots__ = ("rid", "_session", "_value")
+
+    def __init__(self, session: "AlignSession", rid: int):
+        self._session = session
+        self.rid = rid
+        self._value = None
+
+    def done(self) -> bool:
+        return self._value is not None
+
+    def result(self) -> dict:
+        """Block until this pair's result is available and return it:
+        {ok, dist, cigar, k_used, ops, read_consumed, ref_consumed}.
+        Collecting here counts as collecting: the session forgets the rid
+        (it will not appear in results()), keeping long-lived streaming
+        memory bounded by what is in flight."""
+        if self._value is None:
+            self._session._force(self)
+        assert self._value is not None
+        self._session._open.pop(self.rid, None)
+        return self._value
+
+
+@dataclasses.dataclass
+class _Dispatch:
+    """One in-flight bucket batch: device outputs + what retiring needs."""
+    futures: list          # n_real AlignFutures, lane order
+    reads: list            # n_real host code arrays (for bucket rescue)
+    refs: list
+    out: dict              # device arrays (async) from the executable
+
+
+# --------------------------------------------------------------------------
+# session
+# --------------------------------------------------------------------------
+
+class AlignSession:
+    """The planned front door: shape-stable, AOT-compiled, streaming.
+
+    Lifecycle: ``plan(...)`` -> optional ``warmup(...)`` -> ``submit(...)``
+    per request (or ``align(reads, refs)`` for a one-shot batch) ->
+    ``flush()`` / ``results()`` / ``future.result()``.
+    """
+
+    def __init__(self, spec: AlignSpec):
+        self.spec = spec
+        self.cfg = spec.cfg          # resolved; exposed for shims/stats
+        self.mesh = spec.mesh
+        self.cache = CompileCache()
+        self._queues: dict[tuple, list] = {}   # bucket -> [(future, r, f)]
+        self._inflight: deque[_Dispatch] = deque()
+        self._open: dict[int, AlignFuture] = {}   # not yet handed out
+        self._next_rid = 0
+        self.stats = {"dispatches": 0, "lanes": 0, "pad_lanes": 0,
+                      "requests": 0, "rescue_dispatches": 0,
+                      "rescue_lanes": 0, "wall_s": 0.0}
+
+    # ---- planning / warm-up -------------------------------------------
+
+    def bucket_for(self, read_len: int, ref_len: int) -> tuple[int, int]:
+        """The (read_bucket, ref_bucket) length class a pair routes to."""
+        return (self.spec.read_bucket(read_len),
+                self.spec.ref_bucket(ref_len))
+
+    def warmup(self, length_classes, lanes: int | None = None) -> dict:
+        """AOT-compile executables ahead of traffic — an explicit method,
+        not a side effect of the first submit.
+
+        length_classes: iterable of (read_len, ref_len) pairs; each is
+        bucketed and compiled at the `lanes` lane class (default
+        spec.batch_lanes) — for 'bucket' rescue, every k-doubling rung is
+        compiled at that same bucket/lane class too.  Note the residual
+        stall this cannot remove: a compacted rescue round re-derives its
+        length bucket and lane class from however many lanes actually
+        failed, which is unknowable ahead of traffic — if that smaller
+        class was never warmed (call warmup again with smaller `lanes` /
+        lengths to cover expected failure rates), its first occurrence
+        lowers mid-traffic.  rescue_mode='device' has no such stall (the
+        whole ladder is one executable).  Returns the cache stats
+        snapshot."""
+        lanes = self.spec.batch_lanes if lanes is None else lanes
+        for read_len, ref_len in length_classes:
+            rb, fb = self.bucket_for(read_len, ref_len)
+            nb = bucket_lanes(lanes, self.cfg, self.mesh)
+            if self.spec.rescue_mode == "device":
+                self._executable(self.cfg, nb, rb, fb,
+                                 rescue_rounds=self.spec.rescue_rounds)
+            else:
+                self._executable(self.cfg, nb, rb, fb, rescue_rounds=None)
+                for cfg_r in rescue_schedule(self.cfg,
+                                             self.spec.rescue_rounds)[1:]:
+                    self._executable(cfg_r, nb, rb, fb, rescue_rounds=None)
+        return self.cache.stats()
+
+    # ---- executables ---------------------------------------------------
+
+    def _executable(self, cfg, lanes, read_bucket, ref_bucket,
+                    rescue_rounds):
+        """The (spec, bucket, mesh)-keyed AOT executable for one batch
+        shape.  rescue_rounds=None -> plain align step (one ladder rung);
+        an int -> the whole on-device ladder."""
+        key = (self.spec.key(), cfg, lanes, read_bucket, ref_bucket,
+               rescue_rounds, self.mesh)
+
+        def build():
+            from ..serve.align_step import make_align_step
+            step = make_align_step(cfg, read_bucket, self.mesh,
+                                   rescue_rounds=rescue_rounds)
+            avals = bucket_avals(cfg, lanes, read_bucket, ref_bucket,
+                                 rescue_rounds or 0)
+            return step.lower(*avals).compile()
+
+        return self.cache.get(key, build)
+
+    # ---- streaming -----------------------------------------------------
+
+    def submit(self, read: np.ndarray, ref: np.ndarray) -> AlignFuture:
+        """Queue one encoded (read, ref) pair; dispatches fire whenever a
+        bucket queue reaches batch_lanes (earlier batches keep computing —
+        double buffering)."""
+        fut = AlignFuture(self, self._next_rid)
+        self._next_rid += 1
+        self._open[fut.rid] = fut
+        self.stats["requests"] += 1
+        bucket = self.bucket_for(len(read), len(ref))
+        q = self._queues.setdefault(bucket, [])
+        q.append((fut, read, ref))
+        if len(q) >= self.spec.batch_lanes:
+            self._dispatch(bucket, self._queues.pop(bucket))
+        return fut
+
+    def flush(self):
+        """Dispatch every partially-filled bucket queue."""
+        for bucket in list(self._queues):
+            self._dispatch(bucket, self._queues.pop(bucket))
+
+    def results(self) -> dict[int, dict]:
+        """Flush, retire every in-flight dispatch, and return
+        {rid: result dict} for every request not yet collected.  Collected
+        rids are forgotten, so a long-lived session's memory stays bounded
+        by what is in flight."""
+        self.flush()
+        while self._inflight:
+            self._retire(self._inflight.popleft())
+        done = {rid: fut._value for rid, fut in self._open.items()
+                if fut.done()}
+        for rid in done:
+            del self._open[rid]
+        return done
+
+    def align(self, reads, refs) -> AlignResult:
+        """One-shot batch: submit all pairs, drain, and assemble an
+        AlignResult in input order — drop-in for GenASMAligner.align and
+        bit-identical to it (tests/test_api.py)."""
+        assert len(reads) == len(refs)
+        futs = [self.submit(r, f) for r, f in zip(reads, refs)]
+        self.flush()
+        recs = [f.result() for f in futs]   # result() collects each rid
+        B = len(recs)
+        dist = np.array([r["dist"] for r in recs], np.int64)
+        failed = np.array([not r["ok"] for r in recs], bool)
+        k_used = np.array([r["k_used"] for r in recs], np.int32)
+        rcon = np.array([r["read_consumed"] for r in recs], np.int32)
+        fcon = np.array([r["ref_consumed"] for r in recs], np.int32)
+        return AlignResult(dist, [r["cigar"] for r in recs],
+                           [r["ops"] for r in recs], failed, k_used,
+                           rcon, fcon)
+
+    # ---- dispatch / retire ---------------------------------------------
+
+    def _pad_batch(self, reads, refs, lanes, Lr, Lf):
+        """Pad to `lanes` rows of (Lr, Lf) sentinels; ragged lane tails are
+        REPEATS of the last real pair (exactly as alignable as its twin,
+        so pads can't keep rescue gates open or skew stats — the engine
+        trick, now session-wide)."""
+        n = len(reads)
+        reads = list(reads) + [reads[-1]] * (lanes - n)
+        refs = list(refs) + [refs[-1]] * (lanes - n)
+        rpad = np.full((lanes, Lr), SENTINEL_READ, np.uint8)
+        fpad = np.full((lanes, Lf), SENTINEL_REF, np.uint8)
+        rlen = np.zeros(lanes, np.int32)
+        flen = np.zeros(lanes, np.int32)
+        for i, (r, f) in enumerate(zip(reads, refs)):
+            rpad[i, :len(r)] = r
+            rlen[i] = len(r)
+            fpad[i, :len(f)] = f
+            flen[i] = len(f)
+        return rpad, rlen, fpad, flen
+
+    def _dispatch(self, bucket, items):
+        """Pad one bucket batch on host, upload once, launch the executable
+        (async — control returns while the device computes), and queue the
+        dispatch for retirement.  Exceeding max_inflight retires the
+        oldest first, which is what makes this double-buffered."""
+        while len(self._inflight) >= self.spec.max_inflight:
+            self._retire(self._inflight.popleft())
+        t0 = time.time()
+        futs = [it[0] for it in items]
+        reads = [it[1] for it in items]
+        refs = [it[2] for it in items]
+        rb, fb = bucket
+        lanes = bucket_lanes(len(items), self.cfg, self.mesh)
+        device_mode = self.spec.rescue_mode == "device"
+        rounds = self.spec.rescue_rounds if device_mode else None
+        exe = self._executable(self.cfg, lanes, rb, fb, rescue_rounds=rounds)
+        Lr, Lf = pad_geometry(self.cfg, rb, fb, rounds or 0)
+        dev = transfer.to_device(self._pad_batch(reads, refs, lanes, Lr, Lf))
+        out, _ = exe(*dev)
+        self._inflight.append(_Dispatch(futs, reads, refs, out))
+        self.stats["dispatches"] += 1
+        self.stats["lanes"] += lanes
+        self.stats["pad_lanes"] += lanes - len(items)
+        self.stats["wall_s"] += time.time() - t0
+
+    def _retire(self, d: _Dispatch):
+        """Force one dispatch: download once, run compacted bucket-rescue
+        rounds if needed, decode CIGARs, fulfill futures."""
+        t0 = time.time()
+        n = len(d.futures)
+        keys = ("ops", "n_ops", "dist", "failed", "read_consumed",
+                "ref_consumed") + (("k_used",) if "k_used" in d.out else ())
+        host = transfer.to_host({k: d.out[k] for k in keys})
+        failed = np.array(host["failed"][:n], bool)   # writable (rescue merge)
+        dist = np.asarray(host["dist"])[:n].astype(np.int64)
+        n_ops = np.asarray(host["n_ops"])[:n]
+        ops_buf = np.asarray(host["ops"])[:n]
+        rcon = np.asarray(host["read_consumed"])[:n].astype(np.int32)
+        fcon = np.asarray(host["ref_consumed"])[:n].astype(np.int32)
+        if "k_used" in host:
+            k_used = np.asarray(host["k_used"])[:n].astype(np.int32)
+        else:
+            k_used = np.where(failed, 0, self.cfg.k).astype(np.int32)
+        all_ops = [ops_buf[i, :n_ops[i]].copy() if not failed[i] else None
+                   for i in range(n)]
+        if self.spec.rescue_mode == "bucket" and failed.any():
+            self._rescue_compacted(d, failed, dist, k_used, rcon, fcon,
+                                   all_ops)
+        dist = np.where(failed, 0, dist)
+        for i, fut in enumerate(d.futures):
+            ops = all_ops[i] if all_ops[i] is not None \
+                else np.zeros(0, np.uint8)
+            fut._value = {
+                "ok": not failed[i], "dist": int(dist[i]),
+                "cigar": ops_to_string(ops) if not failed[i] else "",
+                "k_used": int(k_used[i]), "ops": ops,
+                "read_consumed": int(0 if failed[i] else rcon[i]),
+                "ref_consumed": int(0 if failed[i] else fcon[i]),
+            }
+        self.stats["wall_s"] += time.time() - t0
+
+    def _rescue_compacted(self, d, failed, dist, k_used, rcon, fcon,
+                          all_ops):
+        """The ROADMAP rescue-efficiency item: instead of recomputing every
+        lane's windows each k-doubling round (the on-device ladder) or
+        re-tracing ragged subsets (the host loop), gather the still-failed
+        lanes and compact them into the next-smaller length/lane bucket —
+        solved lanes never recompute, shapes stay bucket-stable, and the
+        rung executables live in the same CompileCache.  Bit-identical to
+        rescue_mode='host' per lane (tests/test_rescue.py)."""
+        todo = [i for i in range(len(d.futures)) if failed[i]]
+        for cfg_r in rescue_schedule(self.cfg, self.spec.rescue_rounds)[1:]:
+            if not todo:
+                return
+            reads = [d.reads[i] for i in todo]
+            refs = [d.refs[i] for i in todo]
+            rb = self.spec.read_bucket(max(len(r) for r in reads))
+            fb = self.spec.ref_bucket(max(len(f) for f in refs))
+            lanes = bucket_lanes(len(todo), cfg_r, self.mesh)
+            exe = self._executable(cfg_r, lanes, rb, fb, rescue_rounds=None)
+            Lr, Lf = pad_geometry(cfg_r, rb, fb, 0)
+            dev = transfer.to_device(
+                self._pad_batch(reads, refs, lanes, Lr, Lf))
+            out, _ = exe(*dev)
+            host = transfer.to_host(
+                {k: out[k] for k in ("ops", "n_ops", "dist", "failed",
+                                     "read_consumed", "ref_consumed")})
+            self.stats["rescue_dispatches"] += 1
+            self.stats["rescue_lanes"] += lanes
+            ok = ~np.asarray(host["failed"])
+            for loc, glob in enumerate(todo):
+                if ok[loc]:
+                    nops = int(host["n_ops"][loc])
+                    all_ops[glob] = np.asarray(
+                        host["ops"])[loc, :nops].copy()
+                    dist[glob] = int(host["dist"][loc])
+                    k_used[glob] = cfg_r.k
+                    rcon[glob] = int(host["read_consumed"][loc])
+                    fcon[glob] = int(host["ref_consumed"][loc])
+                    failed[glob] = False
+            todo = [g for g in todo if failed[g]]
+
+    # ---- forcing -------------------------------------------------------
+
+    def _force(self, fut: AlignFuture):
+        """Resolve one future: retire in-flight dispatches oldest-first
+        (they were launched first), dispatching its queue if still held."""
+        for bucket, q in list(self._queues.items()):
+            if any(it[0] is fut for it in q):
+                self._dispatch(bucket, self._queues.pop(bucket))
+                break
+        while self._inflight and not fut.done():
+            self._retire(self._inflight.popleft())
+
+    def session_stats(self) -> dict:
+        """Serving + compile-cache counters in one dict (benchmarks/CI)."""
+        return dict(self.stats, compile_cache=self.cache.stats())

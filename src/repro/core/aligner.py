@@ -19,10 +19,10 @@ import dataclasses
 import numpy as np
 
 from . import transfer
-from .config import AlignerConfig
+from .config import AlignerConfig, resolve_config
 from .cigar import ops_to_string
 from .windowing import (SENTINEL_READ, SENTINEL_REF, align_pairs,
-                        align_pairs_rescued, rescue_schedule, self_tail_width)
+                        align_pairs_rescued, pad_geometry)
 
 DNA = "ACGT"
 
@@ -61,8 +61,36 @@ class AlignResult:
     ops: list[np.ndarray]     # raw op arrays
     failed: np.ndarray        # (B,) True if unalignable within rescue budget
     k_used: np.ndarray        # (B,) per-window threshold that succeeded
-    read_consumed: np.ndarray = None  # (B,) read chars the CIGAR consumes
-    ref_consumed: np.ndarray = None   # (B,) ref chars the CIGAR consumes
+    read_consumed: np.ndarray | None = None  # (B,) read chars CIGAR consumes
+    ref_consumed: np.ndarray | None = None   # (B,) ref chars CIGAR consumes
+
+    def summary(self, n: int | None = None,
+                base_k: int | None = None) -> dict:
+        """Aggregate stats over the first `n` lanes (all by default) — the
+        one summary dict the serving engine, the session front door and the
+        benchmarks share instead of ad-hoc per-caller dicts.  Pass `n` to
+        exclude padding lanes, `base_k` (the pre-rescue threshold) to also
+        count rescued lanes."""
+        n = len(self.cigars) if n is None else n
+        failed = np.asarray(self.failed[:n], bool)
+        ok = ~failed
+        out = {
+            "n_pairs": int(n),
+            "n_aligned": int(ok.sum()),
+            "n_failed": int(failed.sum()),
+            "total_edits": int(np.asarray(self.dist[:n])[ok].sum()),
+            "total_ops": int(sum(len(self.ops[i]) for i in range(n)
+                                 if ok[i])),
+            "max_k_used": int(np.asarray(self.k_used[:n]).max(initial=0)),
+        }
+        if base_k is not None:
+            out["n_rescued"] = int(
+                (np.asarray(self.k_used[:n])[ok] > base_k).sum())
+        if self.read_consumed is not None:
+            out["read_bp"] = int(np.asarray(self.read_consumed[:n])[ok].sum())
+        if self.ref_consumed is not None:
+            out["ref_bp"] = int(np.asarray(self.ref_consumed[:n])[ok].sum())
+        return out
 
 
 class GenASMAligner:
@@ -76,13 +104,20 @@ class GenASMAligner:
     retried with doubled k up to `rescue_rounds` times; `rescue_mode`
     selects the on-device masked multi-round path (default) or the legacy
     host loop (see module docstring).
+
+    .. deprecated:: PR 4
+        This is the legacy exact-shape door: pad widths derive from each
+        batch's max_read_len, so every new length triggers a fresh jit
+        trace.  New code should plan a ``repro.api.AlignSession`` (length
+        -bucketed AOT-compiled executables, streaming submit/results) —
+        see docs/api.md for the migration table.  Kept indefinitely as the
+        bit-exactness reference the session is tested against.
     """
 
     def __init__(self, cfg: AlignerConfig = AlignerConfig(),
                  rescue_rounds: int = 2, backend: str | None = None,
                  rescue_mode: str = "device", mesh=None):
-        if backend is not None:
-            cfg = dataclasses.replace(cfg, backend=backend)
+        cfg = resolve_config(cfg, backend=backend)
         assert rescue_mode in ("device", "host")
         self.cfg = cfg
         self.rescue_rounds = rescue_rounds
@@ -114,11 +149,10 @@ class GenASMAligner:
         cfg = self.cfg
         max_read_len = max(len(r) for r in reads)
         # pad ref sentinels for the FINAL rescue round's tail width
-        wt = self_tail_width(rescue_schedule(cfg, self.rescue_rounds)[-1])
-        rpad, rlen = self._pad(reads, max_read_len + cfg.W + 1, SENTINEL_READ)
-        fpad, flen = self._pad(refs,
-                               max(len(f) for f in refs) + cfg.W + wt + 1,
-                               SENTINEL_REF)
+        Lr, Lf = pad_geometry(cfg, max_read_len, max(len(f) for f in refs),
+                              self.rescue_rounds)
+        rpad, rlen = self._pad(reads, Lr, SENTINEL_READ)
+        fpad, flen = self._pad(refs, Lf, SENTINEL_REF)
         dev = transfer.to_device((rpad, rlen, fpad, flen))
         out = align_pairs_rescued(*dev, cfg=cfg, max_read_len=max_read_len,
                                   rescue_rounds=self.rescue_rounds,
@@ -158,12 +192,10 @@ class GenASMAligner:
             sub_reads = [reads[i] for i in todo]
             sub_refs = [refs[i] for i in todo]
             max_read_len = max(len(r) for r in sub_reads)
-            wt = self_tail_width(cfg)
-            rpad, rlen = self._pad(sub_reads, max_read_len + cfg.W + 1,
-                                   SENTINEL_READ)
-            fpad, flen = self._pad(sub_refs,
-                                   max(len(f) for f in sub_refs) + cfg.W + wt + 1,
-                                   SENTINEL_REF)
+            Lr, Lf = pad_geometry(cfg, max_read_len,
+                                  max(len(f) for f in sub_refs), 0)
+            rpad, rlen = self._pad(sub_reads, Lr, SENTINEL_READ)
+            fpad, flen = self._pad(sub_refs, Lf, SENTINEL_REF)
             dev = transfer.to_device((rpad, rlen, fpad, flen))
             out = align_pairs(*dev, cfg=cfg, max_read_len=max_read_len,
                               mesh=self.mesh)

@@ -85,6 +85,10 @@ class AlignerConfig:
         commits <= W-O read chars, hence visits <= W-O+k text columns."""
         return min(self.W + 1, self.stride + self.k + self.tb_margin)
 
+    def replace(self, **overrides) -> "AlignerConfig":
+        """A copy with `overrides` applied (re-validated by __post_init__)."""
+        return dataclasses.replace(self, **overrides)
+
     def band_base(self, j, m_pad: int | None = None):
         """Lowest stored bit of column j's band window (static per column
         for square W x W windows: band center = j-1)."""
@@ -92,3 +96,24 @@ class AlignerConfig:
         lo = j - 2 - self.k
         hi = m_pad - WORD_BITS * self.nwb
         return max(0, min(lo, hi)) if isinstance(j, int) else None
+
+
+def resolve_config(cfg: AlignerConfig | None = None,
+                   **overrides) -> AlignerConfig:
+    """Resolve a cfg-like spec into ONE validated AlignerConfig.
+
+    Accepts an existing config (or None for defaults) plus keyword
+    overrides; None-valued overrides are ignored so callers can thread
+    optional knobs straight through (e.g. the legacy ``backend=``
+    parameter of GenASMAligner / AlignmentEngine).  Validation happens
+    once, here, via the dataclass __post_init__ — the single funnel the
+    session front door (repro.api.plan) and the legacy shims share."""
+    cfg = cfg if cfg is not None else AlignerConfig()
+    # reject typo'd knobs even when their value is None (optional params
+    # threaded through with =None defaults must still name real fields)
+    unknown = set(overrides) - {f.name
+                                for f in dataclasses.fields(AlignerConfig)}
+    if unknown:
+        raise TypeError(f"unknown AlignerConfig knobs: {sorted(unknown)}")
+    real = {k: v for k, v in overrides.items() if v is not None}
+    return dataclasses.replace(cfg, **real) if real else cfg

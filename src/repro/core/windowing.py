@@ -42,6 +42,41 @@ def self_tail_width(cfg: AlignerConfig) -> int:
     return cfg.W + 4 * cfg.k
 
 
+# ---- bucket-shaped geometry (the session front door's shape classes) ----
+#
+# `repro.api.AlignSession` never derives pad widths from a batch's ragged
+# max_read_len: it quantises lengths to power-of-two BUCKETS and compiles
+# one executable per bucket.  These helpers are the single source of truth
+# for that geometry — the legacy aligner's exact-shape path uses the same
+# pad_geometry so both doors stay bit-identical.
+
+def pow2_bucket(n: int, floor: int = 1) -> int:
+    """Smallest power of two >= max(n, floor): the static length class a
+    ragged length is padded into."""
+    assert n >= 0 and floor >= 1
+    b = 1 << max(n - 1, floor - 1, 0).bit_length()
+    return max(b, floor)
+
+
+def pad_geometry(cfg: AlignerConfig, max_read_len: int, max_ref_len: int,
+                 rescue_rounds: int = 0) -> tuple[int, int]:
+    """(Lr, Lf) padded array widths for a (read, ref) length class: reads
+    carry >= W sentinels past read_len, refs enough for the FINAL rescue
+    round's tail width (the contract of align_pairs / align_pairs_rescued)."""
+    wt = self_tail_width(rescue_schedule(cfg, rescue_rounds)[-1])
+    return max_read_len + cfg.W + 1, max_ref_len + cfg.W + wt + 1
+
+
+def bucket_avals(cfg: AlignerConfig, lanes: int, read_bucket: int,
+                 ref_bucket: int, rescue_rounds: int = 0):
+    """ShapeDtypeStructs of one bucket's batch — what the session AOT-lowers
+    an executable against (see repro.api.CompileCache)."""
+    Lr, Lf = pad_geometry(cfg, read_bucket, ref_bucket, rescue_rounds)
+    sds = jax.ShapeDtypeStruct
+    return (sds((lanes, Lr), jnp.uint8), sds((lanes,), jnp.int32),
+            sds((lanes, Lf), jnp.uint8), sds((lanes,), jnp.int32))
+
+
 def _slice_rev(seq, pos, width, length):
     """Per-problem: take seq[pos:pos+width], reversed, with the `length` real
     chars packed at the front (sentinel padding after).  seq must be padded

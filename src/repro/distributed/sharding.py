@@ -71,6 +71,29 @@ def pair_pad_multiple(cfg, mesh) -> int:
     return n * tile
 
 
+def quantise_lanes(n: int, cfg, mesh) -> int:
+    """Round a lane count up to the batch quantum: the smallest multiple of
+    `pair_pad_multiple(cfg, mesh)` >= n.  Single source of truth for how
+    the serving engine AND the session front door (repro.api) quantise
+    ragged batches so no device ever gets an unequal or tile-split shard."""
+    q = pair_pad_multiple(cfg, mesh)
+    return -(-max(n, 1) // q) * q
+
+
+def bucket_lanes(n: int, cfg, mesh) -> int:
+    """The session's static lane class for an n-request dispatch: the
+    smallest quantised power-of-two class >= n (classes are
+    ``quantise_lanes(2**j)``), so ragged dispatch sizes collapse onto a
+    handful of compiled batch shapes instead of one executable per
+    distinct n.  Idempotent — a value that already IS a class maps to
+    itself, even when the pair quantum is not a power of two (otherwise a
+    planned batch_lanes would inflate again at dispatch time)."""
+    p2 = 1
+    while quantise_lanes(p2, cfg, mesh) < n:
+        p2 *= 2
+    return quantise_lanes(p2, cfg, mesh)
+
+
 def _mesh():
     try:
         m = jax.sharding.get_abstract_mesh()

@@ -19,7 +19,7 @@ import jax.numpy as jnp
 
 from ..core.config import AlignerConfig
 from ..core.windowing import (align_pairs, align_pairs_rescued,
-                              rescue_schedule, self_tail_width)
+                              bucket_avals)
 from ..distributed.sharding import pair_shardings
 
 
@@ -52,13 +52,21 @@ def align_step(reads, read_len, refs, ref_len, *, cfg: AlignerConfig,
 
 def make_align_step(cfg: AlignerConfig, max_read_len: int, mesh,
                     rescue_rounds: int | None = None):
-    """The sharded align-step factory (plain or rescued, one code path).
+    """The align-step factory (plain or rescued, one code path) — also the
+    executable builder behind ``repro.api.AlignSession``: the session
+    AOT-lowers this jit per length bucket (``.lower(*bucket_avals)
+    .compile()``) so steady-state serving never re-traces.
 
-    out_shardings are explicit: without them GSPMD replicates the CIGAR
-    buffer to every device (a ~1.7 GB all-gather for 128k pairs — §Perf
-    aligner iteration in EXPERIMENTS.md).  Per-lane outputs (k_used, the
-    op buffer, consumption) shard with the batch; scalar stats and round
-    counters replicate."""
+    With ``mesh=None`` it is a plain jit (single device, no shardings).
+    Sharded, out_shardings are explicit: without them GSPMD replicates the
+    CIGAR buffer to every device (a ~1.7 GB all-gather for 128k pairs —
+    §Perf aligner iteration in EXPERIMENTS.md).  Per-lane outputs (k_used,
+    the op buffer, consumption) shard with the batch; scalar stats and
+    round counters replicate."""
+    fn = partial(align_step, cfg=cfg, max_read_len=max_read_len,
+                 rescue_rounds=rescue_rounds, mesh=mesh)
+    if mesh is None:
+        return jax.jit(fn)
     bsh, vsh, rep = pair_shardings(mesh)
     out_lanes = {"ops": bsh, "n_ops": vsh, "dist": vsh, "failed": vsh,
                  "read_consumed": vsh, "ref_consumed": vsh,
@@ -68,8 +76,6 @@ def make_align_step(cfg: AlignerConfig, max_read_len: int, mesh,
         out_lanes = dict(out_lanes, k_used=vsh, rounds_run=rep, n_rounds=rep)
         del out_lanes["n_main_windows"]
         sum_sh = dict(sum_sh, n_rescued=rep, rounds_run=rep)
-    fn = partial(align_step, cfg=cfg, max_read_len=max_read_len,
-                 rescue_rounds=rescue_rounds, mesh=mesh)
     return jax.jit(fn, in_shardings=(bsh, vsh, bsh, vsh),
                    out_shardings=(out_lanes, sum_sh))
 
@@ -83,12 +89,9 @@ def make_align_step_rescued(cfg: AlignerConfig, max_read_len: int, mesh,
 
 def align_input_specs(batch: int, read_len: int, cfg: AlignerConfig,
                       rescue_rounds: int = 0):
-    """ShapeDtypeStructs for the aligner dry-run cell.  With rescue_rounds,
-    the ref padding covers the FINAL round's tail width (the contract of
-    align_pairs_rescued)."""
-    wt = self_tail_width(rescue_schedule(cfg, rescue_rounds)[-1])
-    Lr = read_len + cfg.W + 1
-    Lf = int(read_len * 1.3) + cfg.W + wt + 1
-    sds = jax.ShapeDtypeStruct
-    return (sds((batch, Lr), jnp.uint8), sds((batch,), jnp.int32),
-            sds((batch, Lf), jnp.uint8), sds((batch,), jnp.int32))
+    """ShapeDtypeStructs for the aligner dry-run cell — the bucket_avals
+    geometry with the dry-run's 1.3x read->ref length model.  With
+    rescue_rounds, the ref padding covers the FINAL round's tail width
+    (the contract of align_pairs_rescued)."""
+    return bucket_avals(cfg, batch, read_len, int(read_len * 1.3),
+                        rescue_rounds)

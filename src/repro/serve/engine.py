@@ -1,23 +1,24 @@
-"""Alignment serving engine: batched request queue over the sharded
-aligner — the GPU-batching analogue from the paper mapped to a pod
-(requests fan out over the ('pod','data') mesh axes; each device runs the
-GenASM kernel/jnp path on its shard).
+"""Alignment serving engine — now a thin shim over the session front door
+(`repro.api.AlignSession`): the engine keeps its micro-batching queue and
+legacy stats/results surface, but every batch executes through the
+session's length-bucketed, AOT-compiled executables, so a ragged request
+stream no longer re-traces per distinct batch shape.
 
-Also provides a minimal LM decode engine (fixed batch slots + greedy
-sampling) for the serving example of the transformer stack."""
+.. deprecated:: PR 4
+    New code should ``plan()`` a session directly (submit/futures,
+    double-buffered dispatch, warm-up as a method — see docs/api.md).
+    This class remains for the engine-shaped call sites and tests."""
 from __future__ import annotations
 
 import dataclasses
 import time
 from collections import deque
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from ..core.aligner import GenASMAligner
+from ..api import plan
 from ..core.config import AlignerConfig
-from ..distributed.sharding import pair_pad_multiple
+from ..distributed.sharding import pair_pad_multiple, quantise_lanes
 
 
 @dataclasses.dataclass
@@ -29,20 +30,20 @@ class AlignRequest:
 
 class AlignmentEngine:
     """Micro-batching server: collects requests to batches of `batch_size`
-    (or `max_wait_s`), aligns, returns per-request results.  Failed pairs
-    (k exceeded after rescue) are reported unaligned, mirroring aligner
-    thresholds in production mappers.
+    (or `max_wait_s`), aligns through an AlignSession, returns per-request
+    results.  Failed pairs (k exceeded after rescue) are reported
+    unaligned, mirroring aligner thresholds in production mappers.
 
-    Ragged final batches are padded up (stable jit shapes, no per-tail
-    recompile) by REPEATING the last real pair: a repeated real pair is
-    exactly as alignable as its twin, so padding lanes can neither keep
-    the on-device rescue loop running extra k-doubling rounds (its round
-    gate is `any(failed)`) nor leak into per-request stats — padded lanes
-    are dropped before results/stats are recorded.
+    Ragged final batches are padded up (stable shapes) by REPEATING the
+    last real pair: a repeated real pair is exactly as alignable as its
+    twin, so padding lanes can neither keep the rescue ladder running
+    extra k-doubling rounds nor leak into per-request stats — padded
+    lanes are dropped before results/stats are recorded.  (The session
+    applies the same trick again at its lane quantum.)
 
     Sharded serving: pass `mesh` and every batch runs sharded over the
     mesh's pair axes (shard_map'd Pallas hot path — see kernels.ops).
-    Batch sizes are then quantised to `pair_pad_multiple(cfg, mesh)` =
+    Batch sizes are quantised to `pair_pad_multiple(cfg, mesh)` =
     lane_tile * n_devices for the Pallas backends (n_devices for jnp), so
     a ragged batch can never hand devices unequal shards or split a
     kernel tile across devices; `batch_size` itself is rounded up to that
@@ -53,11 +54,13 @@ class AlignmentEngine:
                  batch_size: int = 64, max_wait_s: float = 0.05,
                  backend: str | None = None, rescue_rounds: int = 2,
                  pad_to_batch: bool = True, mesh=None):
-        self.aligner = GenASMAligner(cfg, rescue_rounds=rescue_rounds,
-                                     backend=backend, mesh=mesh)
+        # the engine's aligner IS a planned session: one spec resolution,
+        # bucketed AOT executables, compacted bucket rescue
+        self.aligner = plan(cfg, backend=backend,
+                            rescue_rounds=rescue_rounds,
+                            batch_lanes=batch_size, mesh=mesh)
         self.pad_multiple = pair_pad_multiple(self.aligner.cfg, mesh)
-        self.batch_size = -(-batch_size // self.pad_multiple) \
-            * self.pad_multiple
+        self.batch_size = quantise_lanes(batch_size, self.aligner.cfg, mesh)
         self.max_wait_s = max_wait_s
         self.pad_to_batch = pad_to_batch
         self.queue: deque[AlignRequest] = deque()
@@ -71,9 +74,10 @@ class AlignmentEngine:
     def _pad_target(self, n: int) -> int:
         """Lanes this batch is padded to: batch_size when pad_to_batch,
         else the next pair_pad_multiple (both keep shards equal and
-        tile-aligned on a mesh)."""
+        tile-aligned on a mesh; the session further quantises lanes to
+        its power-of-two batch classes)."""
         base = self.batch_size if self.pad_to_batch else n
-        return -(-base // self.pad_multiple) * self.pad_multiple
+        return quantise_lanes(base, self.aligner.cfg, self.aligner.mesh)
 
     def _run_batch(self, batch):
         t0 = time.time()
@@ -85,14 +89,15 @@ class AlignmentEngine:
             refs = refs + [refs[-1]] * n_pad
         res = self.aligner.align(reads, refs)
         dt = time.time() - t0
+        s = res.summary(len(batch))        # padding lanes never counted
         self.stats["batches"] += 1
         self.stats["padded_lanes"] += max(0, n_pad)
         self.stats["wall_s"] += dt
-        for i, r in enumerate(batch):      # padding lanes never reach here
-            ok = not res.failed[i]
-            self.stats["aligned" if ok else "failed"] += 1
+        self.stats["aligned"] += s["n_aligned"]
+        self.stats["failed"] += s["n_failed"]
+        for i, r in enumerate(batch):
             self.results[r.rid] = {
-                "ok": ok, "dist": int(res.dist[i]),
+                "ok": not res.failed[i], "dist": int(res.dist[i]),
                 "cigar": res.cigars[i], "k_used": int(res.k_used[i]),
             }
 

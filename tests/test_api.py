@@ -1,0 +1,238 @@
+"""The session front door (repro.api): compile stability, parity, streaming.
+
+Claims enforced:
+  * compile stability — a ragged stream of 20 mixed-length batches AOT-
+    compiles each (length bucket, lane class) EXACTLY once, counted by the
+    session's own CompileCache (misses == lowerings == distinct buckets;
+    every further dispatch is a cache hit, including a full second pass),
+  * the session is bit-identical to the legacy GenASMAligner door on the
+    differential corpus (ops, dist, k_used, failed, consumption),
+  * submit()/results() stream: double buffering caps in-flight dispatches
+    at spec.max_inflight and retires oldest-first; futures resolve out of
+    order; results() drains and forgets,
+  * warmup() is an explicit method: a warmed session serves the stream
+    with zero additional lowerings,
+  * lane/bucket quantisation math (incl. the engine's pad_to_batch=False
+    path, where the session's power-of-two lane classes take over batch
+    shape stability from the engine).
+"""
+import numpy as np
+import pytest
+
+from repro.api import AlignSpec, CompileCache, plan
+from repro.core.config import AlignerConfig, resolve_config
+from repro.distributed.sharding import bucket_lanes, quantise_lanes
+
+CFG = AlignerConfig(W=16, O=6, k=4)     # = test_differential.CFG
+
+# one length class per band: read lens stay inside one pow2 bucket
+_LEN_BANDS = ((24, 30), (50, 60), (100, 120))
+
+
+def _ragged_stream(rng, n_batches=20, lanes=4):
+    """n_batches of `lanes` (read, ref) pairs; batch j draws every length
+    from one band so its bucket is deterministic, and bands rotate so the
+    stream is genuinely mixed-length."""
+    batches = []
+    for j in range(n_batches):
+        lo, hi = _LEN_BANDS[j % len(_LEN_BANDS)]
+        reads, refs = [], []
+        for _ in range(lanes):
+            L = int(rng.integers(lo, hi + 1))
+            read = rng.integers(0, 4, L).astype(np.uint8)
+            reads.append(read)                # exact match: rounds=0 enough,
+            refs.append(read.copy())          # dist == 0, nothing fails
+        batches.append((reads, refs))
+    return batches
+
+
+@pytest.fixture(scope="module")
+def stream_session():
+    """One planned session shared by the streaming tests (its CompileCache
+    persists, so later tests assert counter DELTAS)."""
+    return plan(CFG, rescue_rounds=0, batch_lanes=4, max_inflight=2)
+
+
+@pytest.fixture(scope="module")
+def stream(stream_session):
+    return _ragged_stream(np.random.default_rng(77))
+
+
+def test_ragged_stream_compiles_each_bucket_exactly_once(stream_session,
+                                                         stream):
+    s = stream_session
+    expected = set()
+    for reads, refs in stream:
+        expected.add((s.bucket_for(max(len(r) for r in reads),
+                                   max(len(f) for f in refs)),
+                      bucket_lanes(len(reads), s.cfg, s.mesh)))
+        res = s.align(reads, refs)
+        assert not res.failed.any()
+    assert len(expected) == len(_LEN_BANDS)        # the stream is mixed
+    assert s.stats["dispatches"] == len(stream)
+    cs = s.cache.stats()
+    # THE compile-stability claim: one lowering per distinct bucket, ever
+    assert cs["misses"] == cs["lowerings"] == cs["executables"] \
+        == len(expected)
+    assert cs["hits"] == len(stream) - len(expected)
+    # a whole second pass over the same ragged stream compiles NOTHING
+    for reads, refs in stream:
+        s.align(reads, refs)
+    cs2 = s.cache.stats()
+    assert cs2["lowerings"] == cs["lowerings"]
+    assert cs2["hits"] == 2 * len(stream) - len(expected)
+    assert sum(s.cache.bucket_hits.values()) == cs2["hits"]
+
+
+def test_futures_resolve_out_of_order_and_double_buffering(stream_session,
+                                                           stream):
+    s = stream_session
+    low0 = s.cache.lowerings
+    futs = []
+    for reads, refs in stream[:6]:           # 6 dispatches through 3 buckets
+        for r, f in zip(reads, refs):
+            futs.append(s.submit(r, f))
+        # double buffering: at most max_inflight dispatches ever in flight
+        assert len(s._inflight) <= s.spec.max_inflight
+    # with 6 dispatches and max_inflight=2, the oldest retired eagerly:
+    # their futures resolved while later batches were still being padded
+    assert any(f.done() for f in futs[:4])
+    assert not all(f.done() for f in futs)
+    # resolve a LATE future first — earlier dispatches retire in order
+    last = futs[-1].result()
+    assert last["ok"] and last["dist"] == 0      # exact-match pairs
+    assert all(f.done() for f in futs)
+    got = s.results()
+    # result() counts as collecting: the directly-collected rid is gone
+    assert set(got) == {f.rid for f in futs} - {futs[-1].rid}
+    assert s.results() == {}                     # drained and forgotten
+    assert not s._open                           # streaming memory bounded
+    assert s.cache.lowerings == low0             # streaming reused every exe
+
+
+def test_warmup_is_a_method_not_a_side_effect(stream):
+    """One band only: warm its bucket explicitly, then traffic is pure
+    cache hits (the full 3-band warm+stream version is the serve example,
+    a CI smoke job)."""
+    s = plan(CFG, rescue_rounds=0, batch_lanes=4)
+    assert s.cache.lowerings == 0                # planning compiles nothing
+    band = [b for b in stream
+            if s.bucket_for(len(b[0][0]), len(b[1][0]))
+            == s.bucket_for(_LEN_BANDS[0][1], _LEN_BANDS[0][1])]
+    snap = s.warmup([(max(len(r) for r in reads), max(len(f) for f in refs))
+                     for reads, refs in band])
+    assert snap["lowerings"] == 1
+    for reads, refs in band:
+        s.align(reads, refs)
+    assert s.cache.lowerings == snap["lowerings"]   # traffic compiles nothing
+
+
+def test_session_bit_identical_to_legacy_aligner(corpus, diff_aligned):
+    """Acceptance: the bucketed, AOT-compiled session reproduces
+    GenASMAligner.align bit-for-bit on the differential corpus, although
+    its pad widths are pow2 buckets rather than the batch's ragged max."""
+    from tests.test_differential import CFG as DCFG, ROUNDS
+    reads, refs, _ = corpus
+    base = diff_aligned("jnp")
+    s = plan(DCFG, rescue_rounds=ROUNDS, batch_lanes=len(reads))
+    res = s.align(reads, refs)
+    np.testing.assert_array_equal(res.failed, base.failed)
+    np.testing.assert_array_equal(res.dist, base.dist)
+    np.testing.assert_array_equal(res.k_used, base.k_used)
+    np.testing.assert_array_equal(res.read_consumed, base.read_consumed)
+    np.testing.assert_array_equal(res.ref_consumed, base.ref_consumed)
+    assert res.cigars == base.cigars
+    for a, b in zip(res.ops, base.ops):
+        np.testing.assert_array_equal(a, b)
+    # and the one summary dict both doors share
+    assert res.summary(base_k=DCFG.k) == base.summary(base_k=DCFG.k)
+
+
+@pytest.mark.slow
+def test_session_device_rescue_mode_matches_bucket_mode(corpus):
+    """rescue_mode='device' (whole on-device ladder per bucket, 1 upload +
+    1 download) and 'bucket' (compacted per-rung dispatches) are the same
+    alignment function.  (@slow: a second full-ladder AOT compile.)"""
+    from tests.test_differential import CFG as DCFG, ROUNDS
+    reads, refs, _ = corpus
+    a = plan(DCFG, rescue_rounds=ROUNDS, rescue_mode="bucket",
+             batch_lanes=len(reads)).align(reads, refs)
+    b = plan(DCFG, rescue_rounds=ROUNDS, rescue_mode="device",
+             batch_lanes=len(reads)).align(reads, refs)
+    np.testing.assert_array_equal(a.failed, b.failed)
+    np.testing.assert_array_equal(a.dist, b.dist)
+    np.testing.assert_array_equal(a.k_used, b.k_used)
+    for x, y in zip(a.ops, b.ops):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_plan_resolves_and_validates_once():
+    s = plan(CFG, backend="jnp", k=6, batch_lanes=3)
+    assert s.cfg.k == 6 and s.cfg.W == CFG.W
+    assert s.spec.batch_lanes == 4          # quantised to a pow2 lane class
+    with pytest.raises(TypeError):
+        plan(CFG, not_a_knob=1)
+    with pytest.raises(AssertionError):
+        plan(CFG, rescue_mode="teleport")
+    with pytest.raises(AssertionError):
+        resolve_config(CFG, backend="pallas_fused", store="and")
+    assert AlignSpec(cfg=CFG).key() == AlignSpec(cfg=CFG).key()
+
+
+def test_lane_and_bucket_quantisation_math(monkeypatch):
+    cfg = CFG
+    assert quantise_lanes(5, cfg, None) == 5        # unsharded quantum is 1
+    assert bucket_lanes(5, cfg, None) == 8          # pow2 lane class
+    assert bucket_lanes(0, cfg, None) == 1
+    assert bucket_lanes(bucket_lanes(50, cfg, None), cfg, None) \
+        == bucket_lanes(50, cfg, None) == 64        # idempotent unsharded
+    # a mesh-like quantum (lane_tile * n_devices) — patched, no devices
+    from repro.distributed import sharding
+    monkeypatch.setattr(sharding, "pair_pad_multiple",
+                        lambda cfg, mesh: 6)
+    assert sharding.quantise_lanes(5, cfg, "fake-mesh") == 6
+    assert sharding.quantise_lanes(7, cfg, "fake-mesh") == 12
+    # lane classes are quantise(2^j) = 6, 12, 18, 36, ... : smallest >= n
+    assert sharding.bucket_lanes(5, cfg, "fake-mesh") == 6
+    assert sharding.bucket_lanes(7, cfg, "fake-mesh") == 12
+    assert sharding.bucket_lanes(13, cfg, "fake-mesh") == 18
+    # idempotent: a planned batch_lanes never inflates at dispatch time
+    for n in (6, 12, 18, 36):
+        assert sharding.bucket_lanes(n, cfg, "fake-mesh") == n
+
+
+@pytest.mark.slow
+def test_engine_pad_to_batch_false_leans_on_session_buckets(corpus):
+    """pad_to_batch=False: the engine no longer pads to batch_size, so the
+    SESSION's pow2 lane classes are what keeps shapes stable — 7 requests
+    become dispatches of 8 and 2 lanes, with engine-level padded_lanes 0.
+    (@slow: two fresh lane-class compiles; the quantisation math itself is
+    covered tier-1 by test_lane_and_bucket_quantisation_math, and the
+    sharded pad_multiple path by tests/test_multidevice.py.)"""
+    from repro.serve.engine import AlignmentEngine, AlignRequest
+    from tests.test_differential import CFG as DCFG
+    reads, refs, _ = corpus
+    eng = AlignmentEngine(DCFG, batch_size=5, rescue_rounds=0,
+                          pad_to_batch=False)
+    assert eng.batch_size == 5              # quantum 1 unsharded
+    for i in range(7):
+        eng.submit(AlignRequest(rid=i, read=reads[i], ref=refs[i]))
+    stats = eng.serve_until_empty()
+    assert stats["batches"] == 2 and stats["padded_lanes"] == 0
+    assert stats["aligned"] + stats["failed"] == 7
+    ses = eng.aligner
+    assert ses.stats["dispatches"] == 2
+    assert ses.stats["lanes"] == 8 + 2      # session lane classes
+    assert ses.stats["pad_lanes"] == 3      # 5->8; 2->2
+    assert set(eng.results) == set(range(7))
+
+
+def test_compile_cache_counters_unit():
+    c = CompileCache()
+    built = []
+    assert c.get("a", lambda: built.append(1) or "exe-a") == "exe-a"
+    assert c.get("a", lambda: built.append(1) or "never") == "exe-a"
+    assert c.get("b", lambda: "exe-b") == "exe-b"
+    assert (c.hits, c.misses, c.lowerings, len(c)) == (1, 2, 2, 2)
+    assert built == [1]
+    assert c.stats()["bucket_hits"] == {"a": 1}

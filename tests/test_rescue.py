@@ -153,6 +153,36 @@ def test_lane_independence_under_permutation(corpus, dev_res):
         np.testing.assert_array_equal(shuf.ops[loc], dev_res.ops[glob])
 
 
+def test_session_bucket_rescue_bit_identical_to_host_loop(corpus, host_res):
+    """The rescue-efficiency item (ROADMAP): repro.api.AlignSession's
+    'bucket' rescue gathers still-failed lanes and compacts them into the
+    next-smaller length/lane bucket per k-doubling rung — solved lanes'
+    windows are never recomputed (unlike the on-device ladder, which
+    re-runs the whole batch under a mask) and shapes stay bucket-stable
+    (unlike the host loop, which re-traces ragged subsets).  Must be
+    bit-identical per lane to rescue_mode='host'."""
+    from repro.api import plan
+    reads, refs = corpus
+    s = plan(CFG, rescue_rounds=ROUNDS, rescue_mode="bucket",
+             batch_lanes=len(reads))
+    res = s.align(reads, refs)
+    np.testing.assert_array_equal(res.failed, host_res.failed)
+    np.testing.assert_array_equal(res.dist, host_res.dist)
+    np.testing.assert_array_equal(res.k_used, host_res.k_used)
+    np.testing.assert_array_equal(res.read_consumed, host_res.read_consumed)
+    np.testing.assert_array_equal(res.ref_consumed, host_res.ref_consumed)
+    assert res.cigars == host_res.cigars
+    for a, b in zip(res.ops, host_res.ops):
+        np.testing.assert_array_equal(a, b)
+    # compaction really happened: the decoy keeps every ladder rung alive,
+    # and each rescue dispatch ran on a SMALLER lane class than round 0
+    st = s.stats
+    assert st["rescue_dispatches"] == ROUNDS
+    assert st["rescue_lanes"] < st["rescue_dispatches"] * st["lanes"]
+    # each rung's executable is its own cached bucket (round 0 + 2 rungs)
+    assert s.cache.stats()["lowerings"] == 1 + ROUNDS
+
+
 @pytest.mark.slow
 def test_device_rescue_zero_per_round_roundtrips_fused_backend(corpus):
     """The transfer-counting acceptance check: with the fused backend the

@@ -15,12 +15,13 @@ def test_alignment_engine_end_to_end():
     g = synth_genome(40_000, seed=5)
     rs = simulate_reads(g, 6, ReadSimConfig(read_len=120, error_rate=0.06,
                                             seed=6))
-    # same cfg + read length as test_kernel_fused's aligner test -> the
-    # session jit cache already holds the compiled align_pairs; rounds=0
-    # keeps it that way (nothing here fails — rescue is tested separately)
+    # the engine is a shim over repro.api.AlignSession: both 4-request
+    # batches land in ONE (length bucket, lane class) -> exactly one AOT
+    # compile; rounds=0 keeps the ladder out (rescue is tested separately)
     from repro.core.config import AlignerConfig
     eng = AlignmentEngine(AlignerConfig(W=32, O=12, k=8), batch_size=4,
                           rescue_rounds=0)
+    assert eng.aligner.cache.stats()["lowerings"] == 0
     for i, (r, s) in enumerate(zip(rs.reads, rs.ref_segments)):
         eng.submit(AlignRequest(rid=i, read=r, ref=s))
     stats = eng.serve_until_empty()
@@ -28,6 +29,10 @@ def test_alignment_engine_end_to_end():
     assert stats["aligned"] == 6
     assert all(eng.results[i]["ok"] for i in range(6))
     assert all(eng.results[i]["cigar"] for i in range(6))
+    # compile stability through the shim: the ragged 2-request tail was
+    # padded into the same 4-lane bucket as the full batch
+    cs = eng.aligner.cache.stats()
+    assert cs["lowerings"] == 1 and cs["hits"] == 1
 
 
 @pytest.mark.slow
