@@ -192,6 +192,78 @@ def session_stream(n_reads=24, max_len=400, seed=7,
     return rows, derived
 
 
+def session_concurrent(n_reads=24, max_len=320, seed=11, backend="jnp",
+                       error_rate=0.16, rescue_rounds=2):
+    """The background retire executor's claim in numbers: one ragged,
+    rescue-heavy stream served twice through repro.api — executor='sync'
+    (retire inline: decode + compacted rescue serialise with dispatch) vs
+    executor='thread' (decode/rescue run on the retire thread, overlapping
+    the dispatch thread's padding and the device's compute).  The high
+    error rate makes rescue rounds — retire-side device round-trips — a
+    real fraction of the work, which is exactly what the executor
+    overlaps.  Both sessions share one CompileCache, so the row also
+    measures cross-session sharing: the second session must lower
+    NOTHING (the multi-tenant claim, asserted by its own counters)."""
+    from repro.api import CompileCache, plan
+
+    g = synth_genome(200_000, seed=seed)
+    lens = [max(48, max_len // 4), max(64, max_len // 2), max_len]
+    per = -(-n_reads // len(lens))
+    sets = [simulate_reads(g, per, ReadSimConfig(read_len=L,
+                                                 error_rate=error_rate,
+                                                 seed=seed + i))
+            for i, L in enumerate(lens)]
+    reads = [r for rs in sets for r in rs.reads]
+    refs = [f for rs in sets for f in rs.ref_segments]
+    order = np.random.default_rng(seed).permutation(len(reads))
+    cfg = AlignerConfig(W=32, O=12, k=6, backend=backend)
+    store = CompileCache()   # shared across both sessions (and executors)
+    rows, derived = [], {}
+    sessions = {}
+    for mode in ("sync", "thread"):
+        ses = plan(cfg, rescue_rounds=rescue_rounds, batch_lanes=8,
+                   executor=mode, cache=store)
+        sessions[mode] = ses
+
+        def stream(ses=ses):
+            futs = [ses.submit(reads[i], refs[i]) for i in order]
+            ses.flush()
+            return [f.result() for f in futs]
+
+        t = _median_time(stream)
+        res = stream()
+        st = ses.session_stats()
+        cc = st["compile_cache"]
+        pairs_s = len(reads) / t
+        rows.append((f"aligners/session_concurrent_{mode}_{backend}",
+                     t * 1e6 / len(reads),
+                     f"pairs_per_s={pairs_s:.1f}_rescue_dispatches="
+                     f"{st['rescue_dispatches']}_lowerings="
+                     f"{cc['lowerings']}_shared_hits={cc['shared_hits']}"))
+        derived[f"concurrent_{mode}_{backend}_pairs_per_s"] = pairs_s
+        derived[f"concurrent_{mode}_{backend}_aligned"] = sum(
+            1 for r in res if r["ok"])
+        derived[f"concurrent_{mode}_{backend}_lowerings"] = cc["lowerings"]
+        derived[f"concurrent_{mode}_{backend}_shared_hits"] = \
+            cc["shared_hits"]
+    sessions["thread"].close()
+    # decode-overlap gain (>1: the retire thread bought wall-clock) and the
+    # multi-tenant sharing claim (the second session lowered nothing)
+    derived[f"concurrent_overlap_gain_{backend}"] = (
+        derived[f"concurrent_sync_{backend}_pairs_per_s"] and
+        derived[f"concurrent_thread_{backend}_pairs_per_s"]
+        / derived[f"concurrent_sync_{backend}_pairs_per_s"])
+    derived[f"concurrent_shared_lowerings_saved_{backend}"] = (
+        derived[f"concurrent_sync_{backend}_lowerings"]
+        - derived[f"concurrent_thread_{backend}_lowerings"])
+    assert derived[f"concurrent_thread_{backend}_lowerings"] == 0, \
+        "cross-session cache sharing broken: second session re-lowered"
+    # both executors must agree lane for lane (cheap spot check)
+    assert (derived[f"concurrent_sync_{backend}_aligned"]
+            == derived[f"concurrent_thread_{backend}_aligned"])
+    return rows, derived
+
+
 def multidevice(n_devices=8, n_reads=32, read_len=240, seed=5,
                 backend="jnp"):
     """Sharded-vs-single throughput on `n_devices` forced host devices.

@@ -1,0 +1,135 @@
+"""Nightly perf-trajectory gate: diff a fresh bench_report.json against the
+latest committed BENCH_*.json baseline and FAIL on large pairs/s
+regressions, so the serving path's throughput can only ratchet forward.
+
+    PYTHONPATH=src python -m benchmarks.compare bench_report.json
+        [--baseline BENCH_PR5.json] [--threshold 0.30]
+
+Compared metrics are every numeric ``derived`` entry whose name contains
+``pairs_per_s`` (one per backend/executor row — the numbers the PR-over-PR
+trajectory tracks).  A metric regresses when
+``current < baseline * (1 - threshold)``; the default 30% tolerance
+absorbs runner-to-runner noise (the committed baselines come from a
+different container than the CI runners) while still catching a serving
+path that quietly fell off a cliff.  New metrics (no baseline) and
+retired metrics (no current value) are reported but never fail.
+
+A markdown trajectory table is printed, and appended to
+``$GITHUB_STEP_SUMMARY`` when set (the CI job summary).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import re
+import sys
+
+
+def _flatten_pairs_metrics(report: dict) -> dict[str, float]:
+    """{section.key: value} for every numeric derived metric that names a
+    pairs/s throughput."""
+    out = {}
+    for section, d in (report.get("derived") or {}).items():
+        if not isinstance(d, dict):
+            continue
+        for k, v in d.items():
+            if "pairs_per_s" in k and isinstance(v, (int, float)):
+                out[f"{section}.{k}"] = float(v)
+    return out
+
+
+def latest_baseline(root: str) -> str | None:
+    """The committed BENCH_PR<N>.json with the highest N (falls back to
+    lexicographic order for non-PR-numbered files)."""
+    cands = glob.glob(os.path.join(root, "BENCH_*.json"))
+    if not cands:
+        return None
+
+    def key(p):
+        m = re.search(r"BENCH_PR(\d+)", os.path.basename(p))
+        return (1, int(m.group(1))) if m else (0, os.path.basename(p))
+
+    return max(cands, key=key)
+
+
+def compare(current: dict, baseline: dict, threshold: float):
+    """Returns (table_rows, regressions): one row per metric as
+    (name, base, cur, delta_frac|None, status)."""
+    cur = _flatten_pairs_metrics(current)
+    base = _flatten_pairs_metrics(baseline)
+    rows, regressions = [], []
+    for name in sorted(set(cur) | set(base)):
+        c, b = cur.get(name), base.get(name)
+        if b is None:
+            rows.append((name, None, c, None, "new"))
+        elif c is None:
+            rows.append((name, b, None, None, "gone"))
+        else:
+            delta = (c - b) / b if b else 0.0
+            status = "ok" if c >= b * (1.0 - threshold) else "REGRESSION"
+            rows.append((name, b, c, delta, status))
+            if status == "REGRESSION":
+                regressions.append(name)
+    return rows, regressions
+
+
+def render(rows, threshold: float, baseline_path: str) -> str:
+    lines = [
+        f"### Bench trajectory vs `{os.path.basename(baseline_path)}` "
+        f"(gate: -{threshold:.0%} pairs/s)",
+        "",
+        "| metric | baseline | current | delta | status |",
+        "|---|---:|---:|---:|---|",
+    ]
+    for name, b, c, delta, status in rows:
+        bs = f"{b:.1f}" if b is not None else "—"
+        cs = f"{c:.1f}" if c is not None else "—"
+        ds = f"{delta:+.1%}" if delta is not None else "—"
+        mark = "❌" if status == "REGRESSION" else "✅" \
+            if status == "ok" else "·"
+        lines.append(f"| {name} | {bs} | {cs} | {ds} | {mark} {status} |")
+    return "\n".join(lines) + "\n"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("report", help="fresh bench_report.json (benchmarks.run "
+                                   "--json)")
+    ap.add_argument("--baseline", default=None,
+                    help="committed BENCH_*.json to diff against "
+                         "(default: the latest by PR number)")
+    ap.add_argument("--threshold", type=float, default=0.30,
+                    help="allowed fractional pairs/s drop (default 0.30)")
+    args = ap.parse_args()
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    baseline_path = args.baseline or latest_baseline(root)
+    if baseline_path is None:
+        print("no committed BENCH_*.json baseline found — nothing to gate")
+        return 0
+    with open(args.report) as fh:
+        current = json.load(fh)
+    with open(baseline_path) as fh:
+        baseline = json.load(fh)
+
+    rows, regressions = compare(current, baseline, args.threshold)
+    table = render(rows, args.threshold, baseline_path)
+    print(table)
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as fh:
+            fh.write(table)
+    if regressions:
+        print(f"FAIL: {len(regressions)} pairs/s regression(s) beyond "
+              f"{args.threshold:.0%}: {', '.join(regressions)}",
+              file=sys.stderr)
+        return 1
+    print(f"ok: {sum(1 for r in rows if r[4] == 'ok')} metric(s) within "
+          f"{args.threshold:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

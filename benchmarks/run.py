@@ -59,6 +59,17 @@ def main() -> None:
     emit(rows)
     all_derived["session"] = derived
 
+    # the serving executor: sync vs background-retire on a rescue-heavy
+    # ragged stream (decode-overlap gain) + cross-session cache sharing.
+    # Not shrunk under --fast: below ~24 pairs the stream is too short for
+    # overlap to beat thread-handoff overhead, and this row carries the
+    # decode-overlap claim in the committed BENCH_* trajectory.
+    rows, derived = bench_aligners.session_concurrent()
+    emit(rows)
+    print(f"aligners/session_concurrent_overlap_gain,0.0,"
+          f"{derived['concurrent_overlap_gain_jnp']:.2f}x_thread_vs_sync")
+    all_derived["session_concurrent"] = derived
+
     from benchmarks import bench_memory
     rows, derived = bench_memory.table()
     emit(rows)

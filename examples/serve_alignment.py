@@ -1,12 +1,15 @@
 """Alignment-as-a-service through the ONE front door (repro.api): plan an
-AlignSession, AOT warm-up its length buckets before traffic, stream ragged
-requests as futures, and read the compile-stability counters — the paper's
-GPU batch processing mapped to a production-shaped serving layer.
+AlignSession with the background retire executor, AOT warm-up its length
+buckets before traffic, stream ragged requests as futures while host CIGAR
+decode overlaps dispatch on the retire thread, and read the
+compile-stability counters — the paper's GPU batch processing mapped to a
+production-shaped serving layer.
 
     PYTHONPATH=src python examples/serve_alignment.py [--requests 32]
         [--len 800] [--fast]
 """
 import argparse
+import time
 
 import numpy as np
 
@@ -19,6 +22,10 @@ ap.add_argument("--requests", type=int, default=32)
 ap.add_argument("--len", type=int, default=800, dest="rlen")
 ap.add_argument("--fast", action="store_true",
                 help="small geometry for CI smoke runs")
+ap.add_argument("--executor", choices=("thread", "sync"), default="thread",
+                help="'thread' (default) retires dispatches on the "
+                     "background executor so CIGAR decode overlaps "
+                     "dispatch; 'sync' is the single-threaded reference")
 args = ap.parse_args()
 
 cfg = AlignerConfig(W=32, O=12, k=8) if args.fast \
@@ -31,40 +38,60 @@ streams = [simulate_reads(genome, -(-args.requests // len(lens)),
                                         seed=9 + i))
            for i, L in enumerate(lens)]
 
-session = plan(cfg, rescue_rounds=1, batch_lanes=8)
-# warm-up is a METHOD: from a traffic sample, compile every length bucket
-# before the first request arrives (one AOT executable per bucket) —
-# including the smaller lane class the ragged stream tails land in
-buckets = sorted({session.bucket_for(len(r), len(s))
-                  for rs in streams
-                  for r, s in zip(rs.reads, rs.ref_segments)})
-session.warmup(buckets)
-tail = -(-args.requests // len(lens)) % session.spec.batch_lanes
-warm = session.warmup(buckets, lanes=tail) if tail \
-    else session.cache.stats()
-print(f"warmed {warm['executables']} executables "
-      f"(lowerings={warm['lowerings']})")
+# the session is a context manager: __exit__ drains and stops the
+# background retire thread (clean shutdown is part of the executor API)
+with plan(cfg, rescue_rounds=1, batch_lanes=8,
+          executor=args.executor) as session:
+    # warm-up is a METHOD: from a traffic sample, compile every length
+    # bucket before the first request arrives (one AOT executable per
+    # bucket) — including the smaller lane class the ragged stream tails
+    # land in
+    buckets = sorted({session.bucket_for(len(r), len(s))
+                      for rs in streams
+                      for r, s in zip(rs.reads, rs.ref_segments)})
+    session.warmup(buckets)
+    tail = -(-args.requests // len(lens)) % session.spec.batch_lanes
+    warm = session.warmup(buckets, lanes=tail) if tail \
+        else session.cache.stats()
+    print(f"warmed {warm['executables']} executables "
+          f"(lowerings={warm['lowerings']})")
 
-futures = {}
-for rs in streams:
-    for read, seg in zip(rs.reads, rs.ref_segments):
-        fut = session.submit(read, seg)   # routed to its length bucket;
-        futures[fut.rid] = fut            # dispatches double-buffer
-session.flush()
-results = {rid: fut.result() for rid, fut in futures.items()}
+    # req/s is END-TO-END wall clock around the whole stream (submit ->
+    # last result collected): the session's own wall_s/retire_wall_s split
+    # per-thread time, which under the threaded executor overlaps and
+    # would overstate throughput if divided into either alone
+    t0 = time.time()
+    futures = {}
+    for rs in streams:
+        for read, seg in zip(rs.reads, rs.ref_segments):
+            fut = session.submit(read, seg)   # routed to its length bucket;
+            futures[fut.rid] = fut            # retire overlaps dispatch
+    session.flush()
+    results = {rid: fut.result() for rid, fut in futures.items()}
+    elapsed = max(time.time() - t0, 1e-9)
 
-st = session.session_stats()
-ok = sum(1 for r in results.values() if r["ok"])
-print(f"served {len(results)} requests in {st['dispatches']} dispatches "
-      f"({st['pad_lanes']} pad lanes), {ok} aligned, "
-      f"{len(results) - ok} failed, "
-      f"{len(results) / max(st['wall_s'], 1e-9):.1f} req/s")
-cc = st["compile_cache"]
-print(f"compile cache: {cc['lowerings']} lowerings "
-      f"({cc['lowerings'] - warm['lowerings']} after warm-up, rescue-rung "
-      f"lane classes) for {st['dispatches'] + st['rescue_dispatches']} "
-      f"dispatches, {cc['hits']} hits — steady state never re-traces")
-r0 = results[0]
-print(f"request 0: dist={r0['dist']} k_used={r0['k_used']} "
-      f"cigar[:60]={r0['cigar'][:60]}")
-assert ok > 0
+    st = session.session_stats()
+    cc = st["compile_cache"]
+    ok = sum(1 for r in results.values() if r["ok"])
+    stalls = cc["lowerings"] - warm["lowerings"]
+    print(f"served {len(results)} requests in {st['dispatches']} dispatches "
+          f"({st['pad_lanes']} pad lanes), {ok} aligned, "
+          f"{len(results) - ok} failed, "
+          f"{len(results) / elapsed:.1f} req/s end-to-end"
+          + (f" (incl. {stalls} mid-stream rescue-rung lowering(s) — the "
+             f"residual warmup stall documented in docs/api.md)"
+             if stalls else ""))
+    if args.executor == "thread":
+        # decode/rescue wall-clock that ran on the retire thread instead
+        # of serialising after each dispatch (the overlap the executor buys)
+        print(f"retire thread absorbed {st['retire_wall_s']:.3f}s of host "
+              f"decode + rescue alongside {st['wall_s']:.3f}s of dispatch")
+    print(f"compile cache: {cc['lowerings']} lowerings "
+          f"({cc['lowerings'] - warm['lowerings']} after warm-up, rescue-rung "
+          f"lane classes) for {st['dispatches'] + st['rescue_dispatches']} "
+          f"dispatches, {cc['hits']} hits ({cc['shared_hits']} from other "
+          f"sessions of this spec) — steady state never re-traces")
+    r0 = results[0]
+    print(f"request 0: dist={r0['dist']} k_used={r0['k_used']} "
+          f"cigar[:60]={r0['cigar'][:60]}")
+    assert ok > 0

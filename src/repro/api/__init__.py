@@ -2,17 +2,20 @@
 
     from repro.api import plan
     session = plan(W=64, O=24, k=12, backend="pallas_fused",
-                   rescue_rounds=2)
+                   rescue_rounds=2, executor="thread")
     session.warmup([(10_000, 13_000)])       # AOT-compile before traffic
     fut = session.submit(read_codes, ref_codes)
     ...
     print(fut.result()["cigar"], session.session_stats())
+    session.close()                          # or use it as a context manager
 
-See docs/api.md for the session lifecycle, bucketing and the deprecation
-table for the legacy GenASMAligner / AlignmentEngine entry points.
+See docs/api.md for the session lifecycle, the background retire
+executor's thread model, bucketing, the process-shared compile cache and
+the deprecation table for the legacy GenASMAligner / AlignmentEngine
+entry points.
 """
 from .session import (AlignFuture, AlignSession, AlignSpec, CompileCache,
-                      plan)
+                      SessionPoisonedError, plan, shared_compile_cache)
 
 __all__ = ["AlignFuture", "AlignSession", "AlignSpec", "CompileCache",
-           "plan"]
+           "SessionPoisonedError", "plan", "shared_compile_cache"]

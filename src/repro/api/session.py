@@ -13,18 +13,35 @@ facade over pre-planned, shape-stable executables:
   (``core.windowing.pow2_bucket``); lane counts to the batch quantum
   (``distributed.sharding.bucket_lanes``).  One executable exists per
   (spec, bucket, mesh), AOT-lowered via ``jit(...).lower().compile()``
-  into an explicit :class:`CompileCache` whose hit/miss/lowering counters
-  are the compile-stability contract (tests/test_api.py).
+  into a **process-shared** :class:`CompileCache` keyed by (spec-hash,
+  bucket, mesh-fingerprint): N sessions of the same spec lower each
+  bucket exactly once across the process.  Each session keeps its own
+  hit/miss/lowering counters (a :class:`_SessionCacheView`) — they are
+  the compile-stability contract (tests/test_api.py, tests/test_executor.py).
 * ``warmup()`` is a *method*, not a side effect: compile before traffic.
 * ``submit()`` routes requests to buckets and returns an
-  :class:`AlignFuture`; dispatches are double-buffered — batch N+1 is
-  encoded/padded on host while batch N computes under jax async dispatch
-  — and ``results()`` / ``future.result()`` stream decoded CIGARs back.
+  :class:`AlignFuture`; ``executor='thread'`` retires dispatches on a
+  background thread (bounded queue = backpressure), so host CIGAR decode
+  and compacted rescue overlap the dispatch thread's padding and the
+  device's compute.  ``executor='sync'`` (default) retires inline under
+  jax async dispatch — bit-identical either way: the executor reorders
+  work in time, never in value.
+* ``adaptive_lanes=True`` tracks per-bucket fill over a sliding window
+  and steps the dispatch lane class down/up the quantised ladder
+  (``distributed.sharding.lane_classes``), so sparse traffic stops
+  padding to the worst case.
 * Rescue (``rescue_mode='bucket'``, the default) gathers still-failed
   lanes and compacts them into the next-smaller length/lane bucket per
   k-doubling rung, so solved lanes' windows are never recomputed and the
   rung executables are cached like any other bucket.  Bit-identical to
   the legacy host loop and the on-device ladder (tests/test_rescue.py).
+
+A session's mutating API (submit/flush/results/close) is meant to be
+driven by ONE user thread; the background retire thread is the session's
+own.  Exceptions on either thread poison the session: the owning
+dispatch's futures carry the original exception, every other outstanding
+future fails with :class:`SessionPoisonedError`, and later submits refuse
+immediately — nothing blocks forever on a dead dispatch.
 
 ``GenASMAligner`` (exact shapes) and ``AlignmentEngine`` (now a shim over
 this session) remain as the reference implementations — docs/api.md has
@@ -33,6 +50,8 @@ the deprecation table.
 from __future__ import annotations
 
 import dataclasses
+import queue
+import threading
 import time
 from collections import deque
 
@@ -40,11 +59,18 @@ import numpy as np
 
 from ..core import transfer
 from ..core.aligner import AlignResult
-from ..core.cigar import ops_to_string
+from ..core.cigar import decode_batch, records_from_state
 from ..core.config import AlignerConfig, resolve_config
 from ..core.windowing import (SENTINEL_READ, SENTINEL_REF, bucket_avals,
                               pad_geometry, pow2_bucket, rescue_schedule)
-from ..distributed.sharding import bucket_lanes
+from ..distributed.sharding import (bucket_lanes, lane_classes,
+                                    mesh_fingerprint)
+
+
+class SessionPoisonedError(RuntimeError):
+    """The session hit an unrecoverable dispatch/retire error: every
+    outstanding future fails with this (the owning dispatch's futures
+    carry the original exception) and further submits are refused."""
 
 
 # --------------------------------------------------------------------------
@@ -62,10 +88,19 @@ class AlignSpec:
                     executables per rung; default) or 'device' (the
                     on-device masked ladder: 1 upload + 1 download total).
     batch_lanes   — lanes per full dispatch (quantised up to the pair
-                    quantum at plan time).
+                    quantum at plan time); the adaptive ceiling.
     bucket_floor  — smallest power-of-two length bucket.
-    max_inflight  — dispatches in flight before the oldest is retired
-                    (2 = double buffering: pad N+1 while N computes).
+    max_inflight  — dispatches in flight before backpressure: the sync
+                    executor retires the oldest inline (2 = double
+                    buffering); the threaded executor bounds its retire
+                    queue at this depth.
+    executor      — 'sync' (retire inline on the dispatch thread) or
+                    'thread' (background retire thread overlaps host
+                    decode with dispatch — see docs/api.md).
+    adaptive_lanes / occupancy_window — occupancy-driven lane classes:
+                    track per-bucket fill over the last `occupancy_window`
+                    dispatches and step the lane class down/up the
+                    quantised ladder (never above batch_lanes).
     mesh          — optional device mesh; every executable is lowered
                     against it (shard_map'd Pallas / GSPMD jnp paths).
     """
@@ -75,19 +110,28 @@ class AlignSpec:
     batch_lanes: int = 64
     bucket_floor: int = 32
     max_inflight: int = 2
+    executor: str = "sync"
+    adaptive_lanes: bool = False
+    occupancy_window: int = 8
     mesh: object = None
 
     def __post_init__(self):
         assert self.rescue_mode in ("bucket", "device"), self.rescue_mode
+        assert self.executor in ("sync", "thread"), self.executor
         assert self.rescue_rounds >= 0
         assert self.batch_lanes >= 1
         assert self.bucket_floor >= 1
         assert self.max_inflight >= 1
+        assert self.occupancy_window >= 1
 
     def key(self):
-        """Hashable identity of everything that shapes an executable
-        (mesh excluded — it is a separate component of the cache key)."""
-        return (self.cfg, self.rescue_rounds, self.rescue_mode)
+        """Hashable identity of everything that shapes an executable —
+        the spec-hash component of the shared CompileCache key.  Content-
+        hashed (cfg.fingerprint), so independently-planned equal specs
+        share executables process-wide.  Executor/batching/inflight knobs
+        are deliberately absent: they schedule work, they don't shape it
+        (mesh is a separate key component)."""
+        return (self.cfg.fingerprint(), self.rescue_rounds, self.rescue_mode)
 
     def read_bucket(self, read_len: int) -> int:
         return pow2_bucket(read_len, self.bucket_floor)
@@ -99,63 +143,177 @@ class AlignSpec:
 def plan(cfg: AlignerConfig | None = None, *, backend: str | None = None,
          rescue_rounds: int = 2, rescue_mode: str = "bucket",
          batch_lanes: int = 64, bucket_floor: int = 32,
-         max_inflight: int = 2, mesh=None, **cfg_overrides) -> "AlignSession":
+         max_inflight: int = 2, executor: str = "sync",
+         adaptive_lanes: bool = False, occupancy_window: int = 8,
+         mesh=None, cache: "CompileCache | str" = "shared",
+         **cfg_overrides) -> "AlignSession":
     """Resolve a cfg-like spec into a planned :class:`AlignSession`.
 
     Accepts an AlignerConfig (or None for defaults) plus any AlignerConfig
     field as a keyword override (``backend=``, ``W=``, ``k=``, ...) and the
     session knobs above.  This is the one validation funnel — nothing
     downstream re-derives or re-checks knobs.
+
+    ``cache`` selects the executable store: ``'shared'`` (default) joins
+    the process-wide CompileCache so same-spec sessions lower each bucket
+    once per process; ``'private'`` isolates this session; an explicit
+    :class:`CompileCache` instance shares exactly with whoever else holds
+    it (tests).
     """
     cfg = resolve_config(cfg, backend=backend, **cfg_overrides)
     spec = AlignSpec(cfg=cfg, rescue_rounds=rescue_rounds,
                      rescue_mode=rescue_mode,
                      batch_lanes=bucket_lanes(batch_lanes, cfg, mesh),
                      bucket_floor=bucket_floor, max_inflight=max_inflight,
-                     mesh=mesh)
-    return AlignSession(spec)
+                     executor=executor, adaptive_lanes=adaptive_lanes,
+                     occupancy_window=occupancy_window, mesh=mesh)
+    return AlignSession(spec, cache=cache)
 
 
 # --------------------------------------------------------------------------
-# compile cache
+# compile cache — process-shared store + per-session counter views
 # --------------------------------------------------------------------------
 
-class CompileCache:
-    """Explicit AOT-executable cache keyed by (spec, bucket, mesh).
+class _Pending:
+    """Placeholder for a key whose build is in progress on another thread;
+    waiters block on the event instead of the store lock."""
 
-    ``get(key, build)`` returns the cached executable or AOT-lowers a new
-    one via ``build()`` (``jax.jit(...).lower(*avals).compile()`` — one
-    trace + one lowering, counted).  The counters ARE the compile-
-    stability contract: a ragged stream must show ``misses == lowerings ==
-    number of distinct buckets`` and hits for everything else.
-    """
+    __slots__ = ("event",)
 
     def __init__(self):
+        self.event = threading.Event()
+
+
+class CompileCache:
+    """Thread-safe AOT-executable store keyed by (spec-hash, bucket,
+    mesh-fingerprint), with process-level counters.
+
+    ``fetch(key, build)`` returns ``(executable, was_built)``; the build
+    (``jax.jit(...).lower(*avals).compile()`` — one trace + one lowering)
+    is serialized PER KEY, not store-wide: the store lock is only held to
+    reserve the key, so tenant B's cold bucket never waits behind tenant
+    A's multi-second lowering of an unrelated key (no head-of-line
+    blocking), while two sessions racing on the SAME key still lower it
+    exactly once.  The module-level instance behind
+    :func:`shared_compile_cache` is what makes serving multi-tenant: N
+    sessions of the same spec lower each bucket exactly once per process.
+    Per-session accounting lives in :class:`_SessionCacheView`."""
+
+    def __init__(self):
+        self._lock = threading.RLock()
         self._exe: dict = {}
         self.hits = 0
         self.misses = 0
         self.lowerings = 0
         self.bucket_hits: dict = {}     # key -> times served from cache
 
+    def fetch(self, key, build):
+        while True:
+            with self._lock:
+                entry = self._exe.get(key)
+                if entry is None:
+                    pending = self._exe[key] = _Pending()
+                    self.misses += 1
+                    self.lowerings += 1
+                    break                       # this thread builds
+                if not isinstance(entry, _Pending):
+                    self.hits += 1
+                    self.bucket_hits[key] = self.bucket_hits.get(key, 0) + 1
+                    return entry, False
+            # someone else is building this key: wait off-lock, then
+            # re-read (on builder failure the key is gone and the loop
+            # retries the build itself, raising its own error)
+            entry.event.wait()
+        try:
+            exe = build()
+        except BaseException:
+            with self._lock:
+                self._exe.pop(key, None)        # builds stay retryable
+            pending.event.set()
+            raise
+        with self._lock:
+            self._exe[key] = exe
+        pending.event.set()
+        return exe, True
+
     def get(self, key, build):
-        exe = self._exe.get(key)
-        if exe is None:
-            self.misses += 1
-            self.lowerings += 1
-            exe = self._exe[key] = build()
-        else:
-            self.hits += 1
-            self.bucket_hits[key] = self.bucket_hits.get(key, 0) + 1
+        return self.fetch(key, build)[0]
+
+    def clear(self):
+        with self._lock:
+            self._exe.clear()
+
+    def __len__(self):
+        with self._lock:
+            return sum(1 for v in self._exe.values()
+                       if not isinstance(v, _Pending))
+
+    def stats(self) -> dict:
+        with self._lock:
+            n = sum(1 for v in self._exe.values()
+                    if not isinstance(v, _Pending))
+            return {"hits": self.hits, "misses": self.misses,
+                    "lowerings": self.lowerings, "executables": n,
+                    "bucket_hits": {str(k): v
+                                    for k, v in self.bucket_hits.items()}}
+
+
+_PROCESS_CACHE = CompileCache()
+
+
+def shared_compile_cache() -> CompileCache:
+    """The process-wide executable store every ``plan(cache='shared')``
+    session joins (multi-tenant serving: one lowering per bucket per
+    process, however many sessions)."""
+    return _PROCESS_CACHE
+
+
+class _SessionCacheView:
+    """One session's window onto a (possibly shared) CompileCache.
+
+    Counters are per-session — ``lowerings`` counts builds performed on
+    behalf of THIS session, ``hits`` fetches served from the store, and
+    ``shared_hits`` the subset of hits whose executable some *other*
+    session lowered (first-touch hits).  They reconcile with the store:
+    summed over sessions, hits+misses equals the store's and lowerings
+    equals the store's (tests/test_executor.py)."""
+
+    def __init__(self, store: CompileCache):
+        self.store = store
+        self._lock = threading.Lock()
+        self._seen: set = set()
+        self.hits = 0
+        self.misses = 0
+        self.lowerings = 0
+        self.shared_hits = 0
+        self.bucket_hits: dict = {}
+
+    def get(self, key, build):
+        exe, built = self.store.fetch(key, build)
+        with self._lock:
+            first = key not in self._seen
+            self._seen.add(key)
+            if built:
+                self.misses += 1
+                self.lowerings += 1
+            else:
+                self.hits += 1
+                self.bucket_hits[key] = self.bucket_hits.get(key, 0) + 1
+                if first:
+                    self.shared_hits += 1
         return exe
 
     def __len__(self):
-        return len(self._exe)
+        return len(self._seen)
 
     def stats(self) -> dict:
-        return {"hits": self.hits, "misses": self.misses,
-                "lowerings": self.lowerings, "executables": len(self),
-                "bucket_hits": {str(k): v
-                                for k, v in self.bucket_hits.items()}}
+        with self._lock:
+            return {"hits": self.hits, "misses": self.misses,
+                    "lowerings": self.lowerings, "executables": len(self._seen),
+                    "shared_hits": self.shared_hits,
+                    "bucket_hits": {str(k): v
+                                    for k, v in self.bucket_hits.items()},
+                    "process": self.store.stats()}
 
 
 # --------------------------------------------------------------------------
@@ -163,29 +321,46 @@ class CompileCache:
 # --------------------------------------------------------------------------
 
 class AlignFuture:
-    """Handle for one submitted pair; fulfilled when its dispatch retires."""
+    """Handle for one submitted pair; fulfilled (or failed) when its
+    dispatch retires — on the dispatch thread (executor='sync') or the
+    session's background retire thread (executor='thread')."""
 
-    __slots__ = ("rid", "_session", "_value")
+    __slots__ = ("rid", "_session", "_value", "_error", "_event")
 
     def __init__(self, session: "AlignSession", rid: int):
         self._session = session
         self.rid = rid
         self._value = None
+        self._error = None
+        self._event = threading.Event()
 
     def done(self) -> bool:
-        return self._value is not None
+        return self._event.is_set()
 
     def result(self) -> dict:
         """Block until this pair's result is available and return it:
         {ok, dist, cigar, k_used, ops, read_consumed, ref_consumed}.
-        Collecting here counts as collecting: the session forgets the rid
-        (it will not appear in results()), keeping long-lived streaming
-        memory bounded by what is in flight."""
-        if self._value is None:
+        Raises the dispatch's exception (or SessionPoisonedError) if its
+        batch failed.  Collecting here counts as collecting: the session
+        forgets the rid (it will not appear in results()), keeping
+        long-lived streaming memory bounded by what is in flight."""
+        if not self._event.is_set():
             self._session._force(self)
-        assert self._value is not None
-        self._session._open.pop(self.rid, None)
+        assert self._event.is_set()
+        self._session._forget(self.rid)
+        if self._error is not None:
+            raise self._error
         return self._value
+
+    # internal — called by the session (either thread)
+    def _fulfill(self, value) -> None:
+        self._value = value
+        self._event.set()
+
+    def _fail(self, err: BaseException) -> None:
+        if not self._event.is_set():
+            self._error = err
+            self._event.set()
 
 
 @dataclasses.dataclass
@@ -197,6 +372,9 @@ class _Dispatch:
     out: dict              # device arrays (async) from the executable
 
 
+_SHUTDOWN = object()       # retire-queue sentinel for close()
+
+
 # --------------------------------------------------------------------------
 # session
 # --------------------------------------------------------------------------
@@ -206,21 +384,74 @@ class AlignSession:
 
     Lifecycle: ``plan(...)`` -> optional ``warmup(...)`` -> ``submit(...)``
     per request (or ``align(reads, refs)`` for a one-shot batch) ->
-    ``flush()`` / ``results()`` / ``future.result()``.
+    ``flush()`` / ``results()`` / ``future.result()`` -> ``close()`` (a
+    context manager does it for you; only required for executor='thread').
     """
 
-    def __init__(self, spec: AlignSpec):
+    def __init__(self, spec: AlignSpec, cache: CompileCache | str = "shared"):
         self.spec = spec
         self.cfg = spec.cfg          # resolved; exposed for shims/stats
         self.mesh = spec.mesh
-        self.cache = CompileCache()
+        if cache == "shared":
+            store = _PROCESS_CACHE
+        elif cache == "private":
+            store = CompileCache()
+        else:
+            assert isinstance(cache, CompileCache), cache
+            store = cache
+        self.cache = _SessionCacheView(store)
+        self._mesh_fp = mesh_fingerprint(spec.mesh)
         self._queues: dict[tuple, list] = {}   # bucket -> [(future, r, f)]
-        self._inflight: deque[_Dispatch] = deque()
+        self._inflight: deque[_Dispatch] = deque()   # sync executor only
         self._open: dict[int, AlignFuture] = {}   # not yet handed out
         self._next_rid = 0
+        self._lock = threading.Lock()          # stats + _open + poisoning
+        self._poisoned: BaseException | None = None
+        self._closed = False
+        # threaded retire executor (started lazily at first dispatch)
+        self._retire_q: queue.Queue | None = None
+        self._retire_thread: threading.Thread | None = None
+        # occupancy-adaptive lane classes
+        self._ladder = lane_classes(spec.batch_lanes, spec.cfg, spec.mesh)
+        self._lane_class: dict[tuple, int] = {}    # bucket -> current class
+        self._fills: dict[tuple, deque] = {}       # bucket -> recent fills
         self.stats = {"dispatches": 0, "lanes": 0, "pad_lanes": 0,
                       "requests": 0, "rescue_dispatches": 0,
-                      "rescue_lanes": 0, "wall_s": 0.0}
+                      "rescue_lanes": 0, "lane_class_steps": 0,
+                      "wall_s": 0.0, "retire_wall_s": 0.0}
+
+    # ---- context management / shutdown --------------------------------
+
+    def __enter__(self) -> "AlignSession":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close(drain=exc_type is None and self._poisoned is None)
+
+    def close(self, drain: bool = True) -> None:
+        """Shut the session down cleanly.  drain=True (default) dispatches
+        partial queues and retires everything in flight first — already-
+        obtained futures stay collectable afterwards.  drain=False
+        abandons queued/in-flight work: its futures fail fast with
+        SessionPoisonedError (both executors).  Always stops the
+        background retire thread (sentinel + join); idempotent.  A closed
+        session refuses further submits."""
+        if drain and self._poisoned is None and not self._closed:
+            self.flush()
+            self._drain()
+        if not drain and self._poisoned is None:
+            # fail-fast every outstanding future (and whatever the retire
+            # queue still holds) so nothing waits on abandoned work
+            self._poison(SessionPoisonedError(
+                "session closed without drain"))
+        self._closed = True
+        t = self._retire_thread
+        if t is not None and t.is_alive():
+            if self._poisoned is not None:
+                self._retire_q.join()     # fail-fast drain so join ends
+            self._retire_q.put(_SHUTDOWN)
+            t.join()
+        self._retire_thread = None
 
     # ---- planning / warm-up -------------------------------------------
 
@@ -242,7 +473,9 @@ class AlignSession:
         failed, which is unknowable ahead of traffic — if that smaller
         class was never warmed (call warmup again with smaller `lanes` /
         lengths to cover expected failure rates), its first occurrence
-        lowers mid-traffic.  rescue_mode='device' has no such stall (the
+        lowers mid-traffic.  The same applies to adaptive_lanes: a class
+        the occupancy controller steps down to is lowered on first use
+        unless warmed here.  rescue_mode='device' has no such stall (the
         whole ladder is one executable).  Returns the cache stats
         snapshot."""
         lanes = self.spec.batch_lanes if lanes is None else lanes
@@ -263,11 +496,13 @@ class AlignSession:
 
     def _executable(self, cfg, lanes, read_bucket, ref_bucket,
                     rescue_rounds):
-        """The (spec, bucket, mesh)-keyed AOT executable for one batch
-        shape.  rescue_rounds=None -> plain align step (one ladder rung);
-        an int -> the whole on-device ladder."""
-        key = (self.spec.key(), cfg, lanes, read_bucket, ref_bucket,
-               rescue_rounds, self.mesh)
+        """The (spec-hash, bucket, mesh-fingerprint)-keyed AOT executable
+        for one batch shape.  rescue_rounds=None -> plain align step (one
+        ladder rung); an int -> the whole on-device ladder.  Content-
+        hashed keys, so equal specs share across sessions; safe to call
+        from the retire thread (rescue rungs lower on demand)."""
+        key = (self.spec.key(), cfg.fingerprint(), lanes, read_bucket,
+               ref_bucket, rescue_rounds, self._mesh_fp)
 
         def build():
             from ..serve.align_step import make_align_step
@@ -281,18 +516,29 @@ class AlignSession:
 
     # ---- streaming -----------------------------------------------------
 
+    def _check_usable(self):
+        if self._poisoned is not None:
+            raise SessionPoisonedError(
+                "session is poisoned; no further dispatches") \
+                from self._poisoned
+        if self._closed:
+            raise RuntimeError("session is closed")
+
     def submit(self, read: np.ndarray, ref: np.ndarray) -> AlignFuture:
         """Queue one encoded (read, ref) pair; dispatches fire whenever a
-        bucket queue reaches batch_lanes (earlier batches keep computing —
-        double buffering)."""
+        bucket queue reaches its current lane class (earlier batches keep
+        computing — the executor overlaps them with padding and, when
+        threaded, with host decode)."""
+        self._check_usable()
         fut = AlignFuture(self, self._next_rid)
         self._next_rid += 1
-        self._open[fut.rid] = fut
-        self.stats["requests"] += 1
+        with self._lock:
+            self._open[fut.rid] = fut
+            self.stats["requests"] += 1
         bucket = self.bucket_for(len(read), len(ref))
         q = self._queues.setdefault(bucket, [])
         q.append((fut, read, ref))
-        if len(q) >= self.spec.batch_lanes:
+        if len(q) >= self._current_lanes(bucket):
             self._dispatch(bucket, self._queues.pop(bucket))
         return fut
 
@@ -305,14 +551,18 @@ class AlignSession:
         """Flush, retire every in-flight dispatch, and return
         {rid: result dict} for every request not yet collected.  Collected
         rids are forgotten, so a long-lived session's memory stays bounded
-        by what is in flight."""
+        by what is in flight.  Raises SessionPoisonedError if the session
+        was poisoned (individual futures carry the underlying errors)."""
         self.flush()
-        while self._inflight:
-            self._retire(self._inflight.popleft())
-        done = {rid: fut._value for rid, fut in self._open.items()
-                if fut.done()}
-        for rid in done:
-            del self._open[rid]
+        self._drain()
+        if self._poisoned is not None:
+            raise SessionPoisonedError(
+                "session poisoned while draining") from self._poisoned
+        with self._lock:
+            done = {rid: fut._value for rid, fut in self._open.items()
+                    if fut.done() and fut._error is None}
+            for rid in done:
+                del self._open[rid]
         return done
 
     def align(self, reads, refs) -> AlignResult:
@@ -323,17 +573,91 @@ class AlignSession:
         futs = [self.submit(r, f) for r, f in zip(reads, refs)]
         self.flush()
         recs = [f.result() for f in futs]   # result() collects each rid
-        B = len(recs)
-        dist = np.array([r["dist"] for r in recs], np.int64)
-        failed = np.array([not r["ok"] for r in recs], bool)
-        k_used = np.array([r["k_used"] for r in recs], np.int32)
-        rcon = np.array([r["read_consumed"] for r in recs], np.int32)
-        fcon = np.array([r["ref_consumed"] for r in recs], np.int32)
-        return AlignResult(dist, [r["cigar"] for r in recs],
-                           [r["ops"] for r in recs], failed, k_used,
-                           rcon, fcon)
+        return AlignResult.from_records(recs)
 
-    # ---- dispatch / retire ---------------------------------------------
+    # ---- adaptive lane classes -----------------------------------------
+
+    def _current_lanes(self, bucket) -> int:
+        return self._lane_class.get(bucket, self.spec.batch_lanes)
+
+    def _adapt(self, bucket, n_real: int) -> None:
+        """Occupancy-driven lane-class negotiation, between batches: track
+        this bucket's fill over a sliding window; once the window is full,
+        step DOWN one ladder rung when every recent dispatch would fit a
+        smaller class (sparse traffic stops padding to the worst case),
+        and back UP one rung when every recent dispatch saturated the
+        current class.  Steps walk distributed.sharding.lane_classes —
+        always quantised, never above spec.batch_lanes.  Purely a shape
+        choice: results are lane-class invariant (pads are repeated real
+        pairs), so adaptation cannot change values, only padding waste."""
+        if not self.spec.adaptive_lanes or len(self._ladder) < 2:
+            return
+        win = self._fills.setdefault(
+            bucket, deque(maxlen=self.spec.occupancy_window))
+        win.append(n_real)
+        if len(win) < win.maxlen:
+            return
+        cur = self._current_lanes(bucket)
+        i = self._ladder.index(cur) if cur in self._ladder \
+            else len(self._ladder) - 1
+        if min(win) >= cur and i + 1 < len(self._ladder):
+            self._lane_class[bucket] = self._ladder[i + 1]
+        elif i > 0 and bucket_lanes(max(max(win), 1), self.cfg,
+                                    self.mesh) < cur:
+            self._lane_class[bucket] = self._ladder[i - 1]
+        else:
+            return
+        win.clear()                      # fresh window for the new class
+        with self._lock:
+            self.stats["lane_class_steps"] += 1
+
+    # ---- dispatch ------------------------------------------------------
+
+    def _dispatch(self, bucket, items):
+        """Pad one bucket batch on host, upload once, launch the executable
+        (async — control returns while the device computes), and hand the
+        dispatch to the executor: the sync path retires the oldest inline
+        once max_inflight is exceeded (double buffering); the threaded
+        path enqueues it for the background retire thread (bounded queue —
+        the put blocks when retire falls max_inflight behind, which is the
+        backpressure).  A raising dispatch poisons the session: its own
+        futures carry the exception, all other outstanding futures fail
+        with SessionPoisonedError, and the exception re-raises here."""
+        self._check_usable()
+        try:
+            self._dispatch_inner(bucket, items)
+        except BaseException as e:
+            self._poison(e, owning=[it[0] for it in items])
+            raise
+
+    def _dispatch_inner(self, bucket, items):
+        threaded = self.spec.executor == "thread"
+        if not threaded:
+            while len(self._inflight) >= self.spec.max_inflight:
+                self._retire_guarded(self._inflight.popleft())
+        t0 = time.time()
+        futs = [it[0] for it in items]
+        reads = [it[1] for it in items]
+        refs = [it[2] for it in items]
+        rb, fb = bucket
+        lanes = bucket_lanes(len(items), self.cfg, self.mesh)
+        device_mode = self.spec.rescue_mode == "device"
+        rounds = self.spec.rescue_rounds if device_mode else None
+        exe = self._executable(self.cfg, lanes, rb, fb, rescue_rounds=rounds)
+        Lr, Lf = pad_geometry(self.cfg, rb, fb, rounds or 0)
+        dev = transfer.to_device(self._pad_batch(reads, refs, lanes, Lr, Lf))
+        out, _ = exe(*dev)
+        d = _Dispatch(futs, reads, refs, out)
+        if threaded:
+            self._enqueue_retire(d)
+        else:
+            self._inflight.append(d)
+        with self._lock:
+            self.stats["dispatches"] += 1
+            self.stats["lanes"] += lanes
+            self.stats["pad_lanes"] += lanes - len(items)
+            self.stats["wall_s"] += time.time() - t0
+        self._adapt(bucket, len(items))
 
     def _pad_batch(self, reads, refs, lanes, Lr, Lf):
         """Pad to `lanes` rows of (Lr, Lf) sentinels; ragged lane tails are
@@ -354,66 +678,87 @@ class AlignSession:
             flen[i] = len(f)
         return rpad, rlen, fpad, flen
 
-    def _dispatch(self, bucket, items):
-        """Pad one bucket batch on host, upload once, launch the executable
-        (async — control returns while the device computes), and queue the
-        dispatch for retirement.  Exceeding max_inflight retires the
-        oldest first, which is what makes this double-buffered."""
-        while len(self._inflight) >= self.spec.max_inflight:
-            self._retire(self._inflight.popleft())
-        t0 = time.time()
-        futs = [it[0] for it in items]
-        reads = [it[1] for it in items]
-        refs = [it[2] for it in items]
-        rb, fb = bucket
-        lanes = bucket_lanes(len(items), self.cfg, self.mesh)
-        device_mode = self.spec.rescue_mode == "device"
-        rounds = self.spec.rescue_rounds if device_mode else None
-        exe = self._executable(self.cfg, lanes, rb, fb, rescue_rounds=rounds)
-        Lr, Lf = pad_geometry(self.cfg, rb, fb, rounds or 0)
-        dev = transfer.to_device(self._pad_batch(reads, refs, lanes, Lr, Lf))
-        out, _ = exe(*dev)
-        self._inflight.append(_Dispatch(futs, reads, refs, out))
-        self.stats["dispatches"] += 1
-        self.stats["lanes"] += lanes
-        self.stats["pad_lanes"] += lanes - len(items)
-        self.stats["wall_s"] += time.time() - t0
+    # ---- the background retire executor --------------------------------
+
+    def _ensure_retire_thread(self):
+        if self._retire_thread is None or not self._retire_thread.is_alive():
+            self._retire_q = queue.Queue(maxsize=self.spec.max_inflight)
+            self._retire_thread = threading.Thread(
+                target=self._retire_loop, name="align-retire", daemon=True)
+            self._retire_thread.start()
+
+    def _enqueue_retire(self, d: _Dispatch):
+        self._ensure_retire_thread()
+        while True:
+            try:
+                self._retire_q.put(d, timeout=0.1)
+                return
+            except queue.Full:
+                if not self._retire_thread.is_alive():
+                    raise SessionPoisonedError(
+                        "retire thread died with its queue full")
+
+    def _retire_loop(self):
+        """The background executor: drain ready device results and run the
+        host-side decode (core.cigar.decode_batch — pure numpy) plus any
+        compacted rescue rounds concurrently with the dispatch thread.
+        Exceptions never die silently: the failing dispatch's futures get
+        the exception, the session is poisoned, and the loop keeps
+        consuming (fail-fast) so the bounded queue can always drain."""
+        while True:
+            d = self._retire_q.get()
+            try:
+                if d is _SHUTDOWN:
+                    return
+                if self._poisoned is not None:
+                    for fut in d.futures:
+                        fut._fail(SessionPoisonedError(
+                            "dispatch abandoned: session poisoned"))
+                else:
+                    self._retire(d)
+            except BaseException as e:      # noqa: BLE001 — must not be lost
+                self._poison(e, owning=d.futures)
+            finally:
+                self._retire_q.task_done()
+
+    def _drain(self):
+        """Block until every launched dispatch has retired (both
+        executors); errors surface on the futures / via poisoning."""
+        if self._retire_thread is not None:
+            self._retire_q.join()
+        while self._inflight:
+            self._retire_guarded(self._inflight.popleft())
+
+    def _retire_guarded(self, d: _Dispatch):
+        """Sync-path retire: a raising retire poisons the session (its
+        futures carry the exception) and re-raises to the caller."""
+        try:
+            self._retire(d)
+        except BaseException as e:
+            self._poison(e, owning=d.futures)
+            raise
+
+    # ---- retire / rescue (either thread) -------------------------------
 
     def _retire(self, d: _Dispatch):
-        """Force one dispatch: download once, run compacted bucket-rescue
-        rounds if needed, decode CIGARs, fulfill futures."""
+        """Force one dispatch: download once, decode via the off-thread
+        entrypoint (core.cigar), run compacted bucket-rescue rounds if
+        needed, fulfill futures."""
         t0 = time.time()
         n = len(d.futures)
         keys = ("ops", "n_ops", "dist", "failed", "read_consumed",
                 "ref_consumed") + (("k_used",) if "k_used" in d.out else ())
         host = transfer.to_host({k: d.out[k] for k in keys})
-        failed = np.array(host["failed"][:n], bool)   # writable (rescue merge)
-        dist = np.asarray(host["dist"])[:n].astype(np.int64)
-        n_ops = np.asarray(host["n_ops"])[:n]
-        ops_buf = np.asarray(host["ops"])[:n]
-        rcon = np.asarray(host["read_consumed"])[:n].astype(np.int32)
-        fcon = np.asarray(host["ref_consumed"])[:n].astype(np.int32)
-        if "k_used" in host:
-            k_used = np.asarray(host["k_used"])[:n].astype(np.int32)
-        else:
-            k_used = np.where(failed, 0, self.cfg.k).astype(np.int32)
-        all_ops = [ops_buf[i, :n_ops[i]].copy() if not failed[i] else None
-                   for i in range(n)]
+        failed, dist, k_used, rcon, fcon, all_ops = \
+            decode_batch(host, n, self.cfg.k)
         if self.spec.rescue_mode == "bucket" and failed.any():
             self._rescue_compacted(d, failed, dist, k_used, rcon, fcon,
                                    all_ops)
-        dist = np.where(failed, 0, dist)
-        for i, fut in enumerate(d.futures):
-            ops = all_ops[i] if all_ops[i] is not None \
-                else np.zeros(0, np.uint8)
-            fut._value = {
-                "ok": not failed[i], "dist": int(dist[i]),
-                "cigar": ops_to_string(ops) if not failed[i] else "",
-                "k_used": int(k_used[i]), "ops": ops,
-                "read_consumed": int(0 if failed[i] else rcon[i]),
-                "ref_consumed": int(0 if failed[i] else fcon[i]),
-            }
-        self.stats["wall_s"] += time.time() - t0
+        recs = records_from_state(failed, dist, k_used, rcon, fcon, all_ops)
+        for fut, rec in zip(d.futures, recs):
+            fut._fulfill(rec)
+        with self._lock:
+            self.stats["retire_wall_s"] += time.time() - t0
 
     def _rescue_compacted(self, d, failed, dist, k_used, rcon, fcon,
                           all_ops):
@@ -423,7 +768,8 @@ class AlignSession:
         lanes and compact them into the next-smaller length/lane bucket —
         solved lanes never recompute, shapes stay bucket-stable, and the
         rung executables live in the same CompileCache.  Bit-identical to
-        rescue_mode='host' per lane (tests/test_rescue.py)."""
+        rescue_mode='host' per lane (tests/test_rescue.py).  Runs on
+        whichever thread retires the dispatch."""
         todo = [i for i in range(len(d.futures)) if failed[i]]
         for cfg_r in rescue_schedule(self.cfg, self.spec.rescue_rounds)[1:]:
             if not todo:
@@ -441,8 +787,9 @@ class AlignSession:
             host = transfer.to_host(
                 {k: out[k] for k in ("ops", "n_ops", "dist", "failed",
                                      "read_consumed", "ref_consumed")})
-            self.stats["rescue_dispatches"] += 1
-            self.stats["rescue_lanes"] += lanes
+            with self._lock:
+                self.stats["rescue_dispatches"] += 1
+                self.stats["rescue_lanes"] += lanes
             ok = ~np.asarray(host["failed"])
             for loc, glob in enumerate(todo):
                 if ok[loc]:
@@ -456,18 +803,60 @@ class AlignSession:
                     failed[glob] = False
             todo = [g for g in todo if failed[g]]
 
-    # ---- forcing -------------------------------------------------------
+    # ---- poisoning / forcing -------------------------------------------
+
+    def _poison(self, exc: BaseException, owning=()):
+        """Unrecoverable error: remember the first cause, fail the owning
+        dispatch's futures with the original exception and every other
+        outstanding future with SessionPoisonedError — nothing is left to
+        block forever, and further submits refuse."""
+        with self._lock:
+            if self._poisoned is None:
+                self._poisoned = exc
+        for fut in owning:
+            fut._fail(exc)
+        perr = SessionPoisonedError(
+            f"session poisoned by {type(exc).__name__}: {exc}")
+        perr.__cause__ = exc
+        with self._lock:
+            open_futs = list(self._open.values())
+        for fut in open_futs:
+            fut._fail(perr)
+        self._queues.clear()
+        self._inflight.clear()
+
+    def _forget(self, rid: int) -> None:
+        with self._lock:
+            self._open.pop(rid, None)
 
     def _force(self, fut: AlignFuture):
-        """Resolve one future: retire in-flight dispatches oldest-first
-        (they were launched first), dispatching its queue if still held."""
+        """Resolve one future: dispatch its queue if still held, then
+        retire until it is done — inline (sync) or by waiting on the
+        background executor (threaded), with a liveness check so a dead
+        retire thread can never hang the caller."""
         for bucket, q in list(self._queues.items()):
             if any(it[0] is fut for it in q):
                 self._dispatch(bucket, self._queues.pop(bucket))
                 break
+        if self._retire_thread is not None:
+            while not fut._event.wait(0.05):
+                if not self._retire_thread.is_alive():
+                    fut._fail(SessionPoisonedError(
+                        "retire thread died before this future resolved"))
+                    return
         while self._inflight and not fut.done():
-            self._retire(self._inflight.popleft())
+            self._retire_guarded(self._inflight.popleft())
 
     def session_stats(self) -> dict:
-        """Serving + compile-cache counters in one dict (benchmarks/CI)."""
-        return dict(self.stats, compile_cache=self.cache.stats())
+        """Serving + compile-cache counters in one dict (benchmarks/CI).
+        With adaptive_lanes, `occupancy` reports each bucket's negotiated
+        lane class and recent fills."""
+        with self._lock:
+            out = dict(self.stats)
+        out["compile_cache"] = self.cache.stats()
+        if self.spec.adaptive_lanes:
+            out["occupancy"] = {
+                str(b): {"lane_class": self._current_lanes(b),
+                         "recent_fills": list(self._fills.get(b, ()))}
+                for b in set(self._lane_class) | set(self._fills)}
+        return out

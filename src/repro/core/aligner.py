@@ -20,7 +20,7 @@ import numpy as np
 
 from . import transfer
 from .config import AlignerConfig, resolve_config
-from .cigar import ops_to_string
+from .cigar import decode_batch, ops_to_string, records_from_state
 from .windowing import (SENTINEL_READ, SENTINEL_REF, align_pairs,
                         align_pairs_rescued, pad_geometry)
 
@@ -92,6 +92,20 @@ class AlignResult:
             out["ref_bp"] = int(np.asarray(self.ref_consumed[:n])[ok].sum())
         return out
 
+    @classmethod
+    def from_records(cls, recs: list) -> "AlignResult":
+        """Assemble a batch AlignResult from per-lane result records (the
+        shape produced by core.cigar.records_from_state and returned by
+        session futures) — the one assembly both doors share."""
+        return cls(
+            np.array([r["dist"] for r in recs], np.int64),
+            [r["cigar"] for r in recs],
+            [r["ops"] for r in recs],
+            np.array([not r["ok"] for r in recs], bool),
+            np.array([r["k_used"] for r in recs], np.int32),
+            np.array([r["read_consumed"] for r in recs], np.int32),
+            np.array([r["ref_consumed"] for r in recs], np.int32))
+
 
 class GenASMAligner:
     """Batch long-read aligner implementing the paper's improved GenASM.
@@ -160,20 +174,10 @@ class GenASMAligner:
         host = transfer.to_host({key: out[key] for key in
                                  ("ops", "n_ops", "dist", "failed", "k_used",
                                   "read_consumed", "ref_consumed")})
-        failed = np.asarray(host["failed"])
-        n_ops = np.asarray(host["n_ops"])
-        ops_buf = np.asarray(host["ops"])
-        dist = np.where(failed, 0, np.asarray(host["dist"])).astype(np.int64)
-        k_used = np.where(failed, 0, np.asarray(host["k_used"])).astype(np.int32)
-        rcon = np.where(failed, 0, np.asarray(host["read_consumed"]))
-        fcon = np.where(failed, 0, np.asarray(host["ref_consumed"]))
-        all_ops = [ops_buf[i, :n_ops[i]] if not failed[i] else None
-                   for i in range(len(reads))]
-        cigars = [ops_to_string(o) if o is not None else "" for o in all_ops]
-        ops_out = [o if o is not None else np.zeros(0, np.uint8)
-                   for o in all_ops]
-        return AlignResult(dist, cigars, ops_out, failed, k_used,
-                           rcon.astype(np.int32), fcon.astype(np.int32))
+        # the same decode entrypoint the session's retire executor runs
+        # off-thread (failed lanes report zeros either way)
+        return AlignResult.from_records(
+            records_from_state(*decode_batch(host, len(reads), cfg.k)))
 
     def _align_host_loop(self, reads, refs) -> AlignResult:
         """Legacy rescue: re-pad and re-upload the failed subset per round."""

@@ -42,3 +42,57 @@ def ops_to_string(ops: np.ndarray) -> str:
         f"{bounds[i+1]-bounds[i]}{OP_CHARS[ops[bounds[i]]]}"
         for i in range(len(bounds) - 1)
     )
+
+
+# --------------------------------------------------------------------------
+# batch decode — THE host-side decode entrypoint for retired dispatches.
+#
+# Pure numpy over already-downloaded buffers: no jax calls, no global
+# state, copies out of device_get's read-only views.  That is what lets
+# repro.api's background retire executor run this concurrently with the
+# dispatch thread (and what GenASMAligner reuses synchronously).
+# --------------------------------------------------------------------------
+
+def decode_batch(host: dict, n: int, default_k: int):
+    """Decode the first `n` lanes of one downloaded align-step output dict
+    into mutable per-lane state arrays.
+
+    Returns (failed, dist, k_used, rcon, fcon, all_ops): writable arrays
+    (rescue merges mutate them in place) plus per-lane op arrays (None for
+    failed lanes).  `default_k` fills k_used for executables that do not
+    report it (the plain per-rung step used by bucket rescue)."""
+    failed = np.array(host["failed"][:n], bool)
+    dist = np.asarray(host["dist"])[:n].astype(np.int64)
+    n_ops = np.asarray(host["n_ops"])[:n]
+    ops_buf = np.asarray(host["ops"])[:n]
+    rcon = np.asarray(host["read_consumed"])[:n].astype(np.int32)
+    fcon = np.asarray(host["ref_consumed"])[:n].astype(np.int32)
+    if "k_used" in host:
+        k_used = np.asarray(host["k_used"])[:n].astype(np.int32)
+    else:
+        k_used = np.where(failed, 0, default_k).astype(np.int32)
+    all_ops = [ops_buf[i, :n_ops[i]].copy() if not failed[i] else None
+               for i in range(n)]
+    return failed, dist, k_used, rcon, fcon, all_ops
+
+
+def records_from_state(failed, dist, k_used, rcon, fcon, all_ops) -> list:
+    """Finalize decoded (possibly rescue-merged) state into per-lane result
+    records {ok, dist, cigar, k_used, ops, read_consumed, ref_consumed} —
+    the one record shape the session futures, the serving engine and
+    AlignResult.from_records share.  Failed lanes report zeros and an
+    empty CIGAR."""
+    recs = []
+    for i in range(len(all_ops)):
+        bad = bool(failed[i])
+        ops = all_ops[i] if all_ops[i] is not None else np.zeros(0, np.uint8)
+        recs.append({
+            "ok": not bad,
+            "dist": 0 if bad else int(dist[i]),
+            "cigar": "" if bad else ops_to_string(ops),
+            "k_used": 0 if bad else int(k_used[i]),
+            "ops": ops,
+            "read_consumed": 0 if bad else int(rcon[i]),
+            "ref_consumed": 0 if bad else int(fcon[i]),
+        })
+    return recs

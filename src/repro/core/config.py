@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 
 from .bitops import WORD_BITS, n_words
 
@@ -88,6 +89,19 @@ class AlignerConfig:
     def replace(self, **overrides) -> "AlignerConfig":
         """A copy with `overrides` applied (re-validated by __post_init__)."""
         return dataclasses.replace(self, **overrides)
+
+    def fingerprint(self) -> str:
+        """Stable content hash of every knob that shapes an executable.
+
+        The process-wide shared CompileCache (repro.api) keys executables
+        by (spec-hash, bucket, mesh-fingerprint) so that N sessions of the
+        same spec — constructed independently, possibly from different
+        AlignerConfig *objects* — resolve to the same cache entry.  Field
+        values, not object identity, are what's hashed; two equal configs
+        always fingerprint equal."""
+        blob = ";".join(f"{f.name}={getattr(self, f.name)!r}"
+                        for f in dataclasses.fields(self))
+        return hashlib.sha1(blob.encode()).hexdigest()[:16]
 
     def band_base(self, j, m_pad: int | None = None):
         """Lowest stored bit of column j's band window (static per column

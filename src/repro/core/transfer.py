@@ -11,6 +11,7 @@ report transfer *bytes* per round.  Pure bookkeeping — no behavior change.
 from __future__ import annotations
 
 import dataclasses
+import threading
 
 import jax
 import jax.numpy as jnp
@@ -26,16 +27,22 @@ class TransferStats:
 
 
 _STATS = TransferStats()
+# the session's background retire executor downloads concurrently with the
+# dispatch thread's uploads; counter increments must stay exact for the
+# 1-upload/1-download assertions (read-modify-write races otherwise)
+_LOCK = threading.Lock()
 
 
 def reset() -> None:
     global _STATS
-    _STATS = TransferStats()
+    with _LOCK:
+        _STATS = TransferStats()
 
 
 def stats() -> TransferStats:
     """Snapshot of the counters since the last reset()."""
-    return dataclasses.replace(_STATS)
+    with _LOCK:
+        return dataclasses.replace(_STATS)
 
 
 def _nbytes(tree) -> int:
@@ -45,14 +52,18 @@ def _nbytes(tree) -> int:
 
 def to_device(x):
     """Upload a host array (or pytree of arrays); counts as ONE transfer."""
-    _STATS.h2d_calls += 1
-    _STATS.h2d_bytes += _nbytes(x)
+    nb = _nbytes(x)
+    with _LOCK:
+        _STATS.h2d_calls += 1
+        _STATS.h2d_bytes += nb
     return jax.tree_util.tree_map(jnp.asarray, x)
 
 
 def to_host(x):
     """Download a device array (or pytree); counts as ONE transfer."""
     out = jax.device_get(x)
-    _STATS.d2h_calls += 1
-    _STATS.d2h_bytes += _nbytes(out)
+    nb = _nbytes(out)
+    with _LOCK:
+        _STATS.d2h_calls += 1
+        _STATS.d2h_bytes += nb
     return out

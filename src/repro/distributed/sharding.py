@@ -94,6 +94,38 @@ def bucket_lanes(n: int, cfg, mesh) -> int:
     return quantise_lanes(p2, cfg, mesh)
 
 
+def lane_classes(ceiling: int, cfg, mesh) -> tuple:
+    """The negotiated lane-class ladder up to (and including)
+    ``bucket_lanes(ceiling)``, ascending.  This is the single source of
+    truth for which batch shapes adaptive batching (repro.api) may step
+    between: every rung is a quantised class (equal, tile-aligned shards
+    on a mesh), so shrinking a sparsely-filled bucket can never produce a
+    shape the quantisation rules would reject."""
+    top = bucket_lanes(max(ceiling, 1), cfg, mesh)
+    out = []
+    p2 = 1
+    while True:
+        c = quantise_lanes(p2, cfg, mesh)
+        if not out or c > out[-1]:
+            out.append(c)
+        if c >= top:
+            return tuple(out)
+        p2 *= 2
+
+
+def mesh_fingerprint(mesh) -> tuple:
+    """Stable identity of a mesh for process-wide compile-cache keys: axis
+    names, axis sizes and the flat device ids.  Two mesh objects spanning
+    the same devices with the same axes fingerprint equal, so independent
+    sessions over equal meshes share executables (repro.api)."""
+    if mesh is None:
+        return ("nomesh",)
+    names = tuple(mesh.axis_names)
+    sizes = tuple(int(mesh.shape[a]) for a in names)
+    ids = tuple(int(d.id) for d in mesh.devices.flat)
+    return (names, sizes, ids)
+
+
 def _mesh():
     try:
         m = jax.sharding.get_abstract_mesh()

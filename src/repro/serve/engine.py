@@ -53,12 +53,19 @@ class AlignmentEngine:
     def __init__(self, cfg: AlignerConfig = AlignerConfig(),
                  batch_size: int = 64, max_wait_s: float = 0.05,
                  backend: str | None = None, rescue_rounds: int = 2,
-                 pad_to_batch: bool = True, mesh=None):
+                 pad_to_batch: bool = True, mesh=None,
+                 executor: str = "sync", adaptive_lanes: bool = False,
+                 cache="shared"):
         # the engine's aligner IS a planned session: one spec resolution,
-        # bucketed AOT executables, compacted bucket rescue
+        # bucketed AOT executables, compacted bucket rescue.  executor /
+        # adaptive_lanes / cache pass straight through to the session
+        # (background retire thread, occupancy-adaptive lane classes,
+        # process-shared compile cache — see docs/api.md)
         self.aligner = plan(cfg, backend=backend,
                             rescue_rounds=rescue_rounds,
-                            batch_lanes=batch_size, mesh=mesh)
+                            batch_lanes=batch_size, mesh=mesh,
+                            executor=executor,
+                            adaptive_lanes=adaptive_lanes, cache=cache)
         self.pad_multiple = pair_pad_multiple(self.aligner.cfg, mesh)
         self.batch_size = quantise_lanes(batch_size, self.aligner.cfg, mesh)
         self.max_wait_s = max_wait_s
@@ -110,3 +117,8 @@ class AlignmentEngine:
     def serve_until_empty(self):
         self.flush()
         return self.stats
+
+    def close(self):
+        """Shut down the underlying session (stops its background retire
+        thread when executor='thread'; a no-op for the sync executor)."""
+        self.aligner.close()

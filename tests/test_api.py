@@ -49,8 +49,12 @@ def _ragged_stream(rng, n_batches=20, lanes=4):
 @pytest.fixture(scope="module")
 def stream_session():
     """One planned session shared by the streaming tests (its CompileCache
-    persists, so later tests assert counter DELTAS)."""
-    return plan(CFG, rescue_rounds=0, batch_lanes=4, max_inflight=2)
+    persists, so later tests assert counter DELTAS).  cache='private':
+    these tests count exact lowerings, so they must not see executables
+    other suites put in the process-shared store (sharing itself is
+    proven in tests/test_executor.py)."""
+    return plan(CFG, rescue_rounds=0, batch_lanes=4, max_inflight=2,
+                cache="private")
 
 
 @pytest.fixture(scope="module")
@@ -114,7 +118,7 @@ def test_warmup_is_a_method_not_a_side_effect(stream):
     """One band only: warm its bucket explicitly, then traffic is pure
     cache hits (the full 3-band warm+stream version is the serve example,
     a CI smoke job)."""
-    s = plan(CFG, rescue_rounds=0, batch_lanes=4)
+    s = plan(CFG, rescue_rounds=0, batch_lanes=4, cache="private")
     assert s.cache.lowerings == 0                # planning compiles nothing
     band = [b for b in stream
             if s.bucket_for(len(b[0][0]), len(b[1][0]))
@@ -186,6 +190,12 @@ def test_lane_and_bucket_quantisation_math(monkeypatch):
     assert bucket_lanes(0, cfg, None) == 1
     assert bucket_lanes(bucket_lanes(50, cfg, None), cfg, None) \
         == bucket_lanes(50, cfg, None) == 64        # idempotent unsharded
+    # the negotiated ladder adaptive batching walks: quantised classes up
+    # to (and including) the ceiling's class, ascending
+    from repro.distributed.sharding import lane_classes, mesh_fingerprint
+    assert lane_classes(64, cfg, None) == (1, 2, 4, 8, 16, 32, 64)
+    assert lane_classes(5, cfg, None) == (1, 2, 4, 8)
+    assert mesh_fingerprint(None) == ("nomesh",)
     # a mesh-like quantum (lane_tile * n_devices) — patched, no devices
     from repro.distributed import sharding
     monkeypatch.setattr(sharding, "pair_pad_multiple",
@@ -199,6 +209,8 @@ def test_lane_and_bucket_quantisation_math(monkeypatch):
     # idempotent: a planned batch_lanes never inflates at dispatch time
     for n in (6, 12, 18, 36):
         assert sharding.bucket_lanes(n, cfg, "fake-mesh") == n
+    # the ladder under a non-pow2 quantum: every rung is a quantised class
+    assert sharding.lane_classes(13, cfg, "fake-mesh") == (6, 12, 18)
 
 
 @pytest.mark.slow

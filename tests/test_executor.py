@@ -1,0 +1,349 @@
+"""The serving executor (repro.api): retire thread, shared cache, adaptive
+batching, poisoning.
+
+Claims enforced:
+  * the background retire executor (executor='thread') is bit-identical to
+    the synchronous executor on the differential corpus — jnp + compacted
+    bucket rescue here, pallas_fused (incl. rescue rungs retired on the
+    thread) below, and the forced-8-device mesh leg rides the subprocess
+    suite in tests/test_multidevice.py.  The executor reorders work in
+    time, never in value;
+  * the retire queue is bounded at spec.max_inflight (backpressure) and
+    shutdown is clean: close() drains, joins the thread, is idempotent,
+    and a closed session refuses submits;
+  * exceptions are never lost: a raising retire/dispatch poisons the
+    session — the owning dispatch's futures carry the original exception,
+    every other outstanding future fails with SessionPoisonedError instead
+    of waiting forever (the PR-5 bugfix for mid-stream dispatch failures),
+    and later submits refuse;
+  * the process-shared CompileCache: same-spec sessions lower each bucket
+    exactly once total, different specs never cross-contaminate, and
+    per-session counters reconcile with the process store's;
+  * occupancy-adaptive lane classes shrink on sparse traffic, dispatch
+    without waiting for the static ceiling, grow back under pressure —
+    and change padding only (results bit-identical to the static twin).
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import (CompileCache, SessionPoisonedError, plan,
+                       shared_compile_cache)
+from repro.core.aligner import AlignResult
+from tests.test_differential import CFG as DCFG, ROUNDS
+
+
+def _assert_results_equal(a: AlignResult, b: AlignResult):
+    np.testing.assert_array_equal(a.failed, b.failed)
+    np.testing.assert_array_equal(a.dist, b.dist)
+    np.testing.assert_array_equal(a.k_used, b.k_used)
+    np.testing.assert_array_equal(a.read_consumed, b.read_consumed)
+    np.testing.assert_array_equal(a.ref_consumed, b.ref_consumed)
+    assert a.cigars == b.cigars
+    for x, y in zip(a.ops, b.ops):
+        np.testing.assert_array_equal(x, y)
+
+
+def _exact_pairs(rng, n, length):
+    reads = [rng.integers(0, 4, length).astype(np.uint8) for _ in range(n)]
+    return reads, [r.copy() for r in reads]
+
+
+# --------------------------------------------------------------------------
+# bit-identity: threaded retire vs synchronous executor
+# --------------------------------------------------------------------------
+
+def test_threaded_retire_bit_identical_to_sync_differential(corpus,
+                                                            diff_aligned):
+    """THE executor parity claim, on the differential corpus with small
+    dispatches (batch_lanes=8 splits the 30 pairs into several concurrent
+    dispatches) and compacted bucket rescue running ON the retire thread.
+    Same submission order => same dispatch grouping, so the threaded
+    session must also be a pure cache hit on the sync session's
+    executables (cross-session sharing under concurrency)."""
+    reads, refs, _ = corpus
+    base = diff_aligned("jnp")
+    kw = dict(rescue_rounds=ROUNDS, rescue_mode="bucket", batch_lanes=8)
+    sync = plan(DCFG, **kw)
+    res_sync = sync.align(reads, refs)
+    with plan(DCFG, executor="thread", **kw) as thr:
+        futs = [thr.submit(r, f) for r, f in zip(reads, refs)]
+        thr.flush()
+        # collect out of order: late futures first
+        recs = [f.result() for f in reversed(futs)][::-1]
+        st = thr.session_stats()
+    res_thr = AlignResult.from_records(recs)
+    _assert_results_equal(res_sync, base)    # sync session == legacy door
+    _assert_results_equal(res_thr, res_sync)  # threaded == sync, bit for bit
+    assert st["dispatches"] >= 3             # genuinely streamed
+    assert st["retire_wall_s"] > 0           # decode really ran off-thread
+    # the threaded session lowered NOTHING: every executable (incl. the
+    # rescue-rung lane classes) came from the process-shared store
+    cs = thr.cache.stats()
+    assert cs["lowerings"] == 0 and cs["shared_hits"] > 0
+    assert thr._retire_thread is None        # context manager closed it
+
+
+def test_threaded_retire_bit_identical_pallas_fused_rescue():
+    """Same parity for the fused Pallas backend, with a decoy pair that
+    keeps the k-doubling ladder alive so compacted rescue rounds
+    (dispatch + download + merge) execute on the retire thread."""
+    from tests.test_rescue import CFG as RCFG, _mk_corpus
+    reads, refs = _mk_corpus(seed=5, n=4)    # err gradient + decoy
+    store = CompileCache()                   # hermetic sharing for the test
+    kw = dict(backend="pallas_fused", rescue_rounds=1, rescue_mode="bucket",
+              batch_lanes=4, cache=store)
+    sync = plan(RCFG, **kw)
+    res_sync = sync.align(reads, refs)
+    with plan(RCFG, executor="thread", **kw) as thr:
+        futs = [thr.submit(r, f) for r, f in zip(reads, refs)]
+        thr.flush()
+        recs = [f.result() for f in futs]
+    res_thr = AlignResult.from_records(recs)
+    _assert_results_equal(res_thr, res_sync)
+    assert res_sync.failed[-1]               # the decoy kept rescue running
+    assert thr.stats["rescue_dispatches"] >= 1   # ... on the retire thread
+    assert thr.cache.lowerings == 0          # all rungs shared from sync
+    assert store.lowerings == sync.cache.lowerings
+
+
+# --------------------------------------------------------------------------
+# bounded queue, clean shutdown
+# --------------------------------------------------------------------------
+
+def test_retire_queue_bounded_and_clean_shutdown(rng):
+    reads, refs = _exact_pairs(rng, 8, 24)
+    s = plan(DCFG, rescue_rounds=0, batch_lanes=2, max_inflight=2,
+             executor="thread")
+    futs = [s.submit(r, f) for r, f in zip(reads, refs)]
+    # the retire queue IS the backpressure: bounded at max_inflight
+    assert s._retire_q is not None and s._retire_q.maxsize == 2
+    t = s._retire_thread
+    assert t is not None and t.is_alive() and t.daemon
+    s.close()                                # drains, then joins the thread
+    assert not t.is_alive() and s._retire_thread is None
+    assert all(f.done() for f in futs)
+    assert all(f.result()["dist"] == 0 for f in futs)   # exact matches
+    with pytest.raises(RuntimeError):
+        s.submit(reads[0], refs[0])          # closed sessions refuse
+    s.close()                                # idempotent
+    assert threading.active_count() >= 1     # no leaked retire threads wait
+
+
+def test_retire_thread_exception_propagates_and_poisons(rng):
+    """Exceptions from the retire thread land in the owning futures (the
+    original exception), fail every other outstanding future with
+    SessionPoisonedError, and refuse later submits — never lost, never a
+    hang."""
+    (r24a, r24b), (f24a, f24b) = _exact_pairs(rng, 2, 24)
+    (r100,), (f100,) = _exact_pairs(rng, 1, 100)
+    s = plan(DCFG, rescue_rounds=0, batch_lanes=2, executor="thread")
+    boom = RuntimeError("decode exploded")
+
+    def _boom(d):
+        raise boom
+
+    s._retire = _boom
+    fa = s.submit(r24a, f24a)
+    fq = s.submit(r100, f100)          # different bucket: stays queued
+    fb = s.submit(r24b, f24b)          # fills the 24-bucket -> dispatch
+    with pytest.raises(RuntimeError, match="decode exploded"):
+        fa.result()                    # owning future: the original error
+    with pytest.raises(RuntimeError, match="decode exploded"):
+        fb.result()
+    with pytest.raises(SessionPoisonedError):
+        fq.result()                    # innocent bystander: poisoned, not hung
+    with pytest.raises(SessionPoisonedError):
+        s.submit(r24a, f24a)
+    with pytest.raises(SessionPoisonedError):
+        s.results()
+    s.close(drain=False)               # clean shutdown even when poisoned
+    assert s._retire_thread is None
+
+
+def test_close_without_drain_fails_queued_futures_sync(rng):
+    """close(drain=False) abandons queued work on BOTH executors: the
+    futures fail fast instead of waiting (or erroring obscurely) forever."""
+    (r,), (f,) = _exact_pairs(rng, 1, 24)
+    s = plan(DCFG, rescue_rounds=0, batch_lanes=4, cache="private")
+    fut = s.submit(r, f)               # queued, never dispatched
+    s.close(drain=False)
+    assert fut.done()
+    with pytest.raises(SessionPoisonedError):
+        fut.result()
+    assert s.cache.lowerings == 0      # nothing was built for abandoned work
+
+
+def test_sync_dispatch_failure_poisons_outstanding_futures(rng):
+    """The PR-5 bugfix: a dispatch raising mid-stream used to leave futures
+    of OTHER buckets waiting forever; now they fail fast with
+    SessionPoisonedError while the failing batch carries the original
+    exception."""
+    (r24,), (f24,) = _exact_pairs(rng, 1, 24)
+    (r100a, r100b), (f100a, f100b) = _exact_pairs(rng, 2, 100)
+    s = plan(DCFG, rescue_rounds=0, batch_lanes=2, cache="private")
+    f_other = s.submit(r24, f24)       # 24-bucket: queued, never dispatched
+
+    def _boom(*a, **k):
+        raise ValueError("lowering failed")
+
+    s._executable = _boom
+    g1 = s.submit(r100a, f100a)
+    with pytest.raises(ValueError, match="lowering failed"):
+        s.submit(r100b, f100b)         # fills the 100-bucket -> dispatch
+    with pytest.raises(ValueError):
+        g1.result()                    # owning batch: original exception
+    with pytest.raises(SessionPoisonedError):
+        f_other.result()               # used to wait forever; now fails fast
+    with pytest.raises(SessionPoisonedError):
+        s.submit(r24, f24)
+    assert s.cache.lowerings == 0      # nothing was ever built
+
+
+# --------------------------------------------------------------------------
+# process-shared CompileCache
+# --------------------------------------------------------------------------
+
+def test_same_spec_sessions_lower_each_bucket_once_total(rng):
+    """Multi-tenant serving: N sessions of one spec lower each (bucket,
+    lane class) exactly once per store; different specs never
+    cross-contaminate; per-session counters reconcile with the store."""
+    reads24, refs24 = _exact_pairs(rng, 2, 24)     # bucket (32, 32)
+    reads40, refs40 = _exact_pairs(rng, 2, 40)     # bucket (64, 64)
+    reads = reads24 + reads40
+    refs = refs24 + refs40
+    store = CompileCache()
+    kw = dict(rescue_rounds=0, batch_lanes=2, cache=store)
+    a = plan(DCFG, **kw)
+    assert not a.align(reads, refs).failed.any()
+    sa = a.cache.stats()
+    assert sa["misses"] == sa["lowerings"] == sa["executables"] == 2
+    assert sa["hits"] == sa["shared_hits"] == 0
+    b = plan(DCFG, **kw)                           # same spec, same store
+    assert not b.align(reads, refs).failed.any()
+    sb = b.cache.stats()
+    # the tenancy claim: B lowered NOTHING — both buckets were shared
+    assert sb["lowerings"] == sb["misses"] == 0
+    assert sb["hits"] == sb["shared_hits"] == sb["executables"] == 2
+    ss = store.stats()
+    assert ss["lowerings"] == ss["executables"] == 2
+    # counters reconcile: per-session sums == process store
+    assert sa["hits"] + sb["hits"] == ss["hits"]
+    assert sa["misses"] + sb["misses"] == ss["misses"]
+    assert sa["lowerings"] + sb["lowerings"] == ss["lowerings"]
+    # a DIFFERENT spec on the same store: new keys, no contamination
+    c = plan(DCFG, k=6, **kw)
+    assert not c.align(reads24, refs24).failed.any()
+    assert c.cache.stats()["lowerings"] == 1       # its own executable
+    assert not (c.cache._seen & a.cache._seen)     # disjoint key spaces
+    assert store.stats()["executables"] == 3
+    # steady state: a second pass anywhere lowers nothing more
+    a.align(reads, refs)
+    assert store.stats()["lowerings"] == 3
+
+
+def test_compile_cache_builds_per_key_without_head_of_line_blocking():
+    """The store lock only reserves keys: a slow lowering on one key must
+    not stall fetches of unrelated keys (multi-tenant cold starts), while
+    a racer on the SAME key waits and then hits — one build total.  Failed
+    builds release the key for retry."""
+    store = CompileCache()
+    started, release = threading.Event(), threading.Event()
+    out = {}
+
+    def slow_build():
+        started.set()
+        assert release.wait(10)
+        return "slow-exe"
+
+    t1 = threading.Thread(
+        target=lambda: out.setdefault("slow", store.fetch("k1", slow_build)))
+    t1.start()
+    assert started.wait(10)
+    # k1 is mid-build: an unrelated key fetches immediately (no global lock)
+    assert store.fetch("k2", lambda: "fast-exe") == ("fast-exe", True)
+    # a same-key racer parks until the build lands, then shares it
+    t2 = threading.Thread(
+        target=lambda: out.setdefault("race", store.fetch("k1",
+                                                          lambda: "never")))
+    t2.start()
+    time.sleep(0.05)
+    assert "race" not in out           # really waiting on k1
+    release.set()
+    t1.join(10), t2.join(10)
+    assert out["slow"] == ("slow-exe", True)
+    assert out["race"] == ("slow-exe", False)   # shared, not rebuilt
+    assert store.lowerings == 2 and len(store) == 2
+
+    def bad():
+        raise RuntimeError("lowering exploded")
+
+    with pytest.raises(RuntimeError):
+        store.fetch("k3", bad)
+    assert store.fetch("k3", lambda: "ok-now") == ("ok-now", True)
+
+
+def test_default_cache_is_process_shared():
+    s1 = plan(DCFG, rescue_rounds=0, batch_lanes=2)
+    s2 = plan(DCFG, rescue_rounds=0, batch_lanes=2)
+    assert s1.cache.store is s2.cache.store is shared_compile_cache()
+    assert plan(DCFG, cache="private").cache.store \
+        is not shared_compile_cache()
+    # equal specs key equal (content-hashed), unequal specs don't
+    assert s1.spec.key() == s2.spec.key()
+    assert plan(DCFG, k=6).spec.key() != s1.spec.key()
+
+
+# --------------------------------------------------------------------------
+# occupancy-adaptive lane classes
+# --------------------------------------------------------------------------
+
+def test_adaptive_lanes_shrink_regrow_and_stay_bit_identical(rng):
+    """Sparse traffic steps the lane class down the quantised ladder (so a
+    half-empty bucket stops padding to batch_lanes), a saturated bucket
+    steps back up to the ceiling — and none of it changes values, only
+    padding (results == the static twin's on the same stream)."""
+    from tests.conftest import mutate_seq
+    refs = [rng.integers(0, 4, 26).astype(np.uint8) for _ in range(26)]
+    reads = [mutate_seq(f, 2, rng) for f in refs]   # nontrivial CIGARs
+    kw = dict(rescue_rounds=1, batch_lanes=8)
+    ada = plan(DCFG, adaptive_lanes=True, occupancy_window=2, **kw)
+    sta = plan(DCFG, **kw)
+    bucket = ada.bucket_for(26, 26)
+    assert ada._current_lanes(bucket) == 8
+    futs = []
+    # phase 1 — sparse: 4 flushed pairs; the window shows fill 2 twice per
+    # class, stepping 8 -> 4 -> 2
+    for j in range(4):
+        futs += [ada.submit(reads[2 * j + i], refs[2 * j + i])
+                 for i in range(2)]
+        ada.flush()
+    assert ada._current_lanes(bucket) == 2
+    assert ada.stats["lane_class_steps"] == 2
+    # phase 2 — at the shrunk class, a pair dispatches WITHOUT flush()
+    d0 = ada.stats["dispatches"]
+    futs += [ada.submit(reads[8 + i], refs[8 + i]) for i in range(2)]
+    assert ada.stats["dispatches"] == d0 + 1       # fired at class 2
+    # phase 3 — sustained pressure saturates each class and grows back
+    futs += [ada.submit(reads[10 + i], refs[10 + i]) for i in range(16)]
+    ada.flush()
+    assert ada._current_lanes(bucket) == 8         # back at the ceiling
+    assert ada.stats["lane_class_steps"] >= 4
+    recs = [f.result() for f in futs]
+    occ = ada.session_stats()["occupancy"]
+    assert occ[str(bucket)]["lane_class"] == 8
+    # the static twin sees the same stream (flushes at the same points)
+    sfuts = []
+    for j in range(4):
+        sfuts += [sta.submit(reads[2 * j + i], refs[2 * j + i])
+                  for i in range(2)]
+        sta.flush()
+    sfuts += [sta.submit(reads[8 + i], refs[8 + i]) for i in range(2)]
+    sfuts += [sta.submit(reads[10 + i], refs[10 + i]) for i in range(16)]
+    sta.flush()
+    srecs = [f.result() for f in sfuts]
+    _assert_results_equal(AlignResult.from_records(recs),
+                          AlignResult.from_records(srecs))
+    assert sta.stats["lane_class_steps"] == 0      # static stayed static

@@ -18,7 +18,11 @@ What tier-1 proves (one subprocess, the differential corpus profiles):
     over all 8 devices;
   * serve.AlignmentEngine(mesh=...): ragged request streams are padded to
     pair_pad_multiple = lane_tile * n_devices (equal, tile-aligned shards)
-    and padding lanes never reach results or summary stats.
+    and padding lanes never reach results or summary stats;
+  * repro.api session with executor='thread' on the mesh: the background
+    retire executor (host decode + compacted bucket-rescue rungs running
+    on the retire thread against mesh-sharded executables) stays
+    bit-identical to the single-device baseline, and shuts down cleanly.
 
 The nightly (@slow) sweep extends the same parity to the jnp and split
 pallas backends, the host rescue mode, a 2-D ('data','model') mesh and
@@ -116,6 +120,29 @@ def test_sharded_fused_rescue_bit_identical_and_engine_padding():
             assert eng.results[i]['cigar'] == base.cigars[i]
     print('ENGINE OK', stats['aligned'], stats['failed'])
 
+    # ---- session front door: background retire executor on the mesh ----
+    # the threaded executor must stay bit-identical with every mesh-
+    # sharded executable AND with compacted bucket rescue retiring on the
+    # background thread (lane classes quantise to lane_tile * 8 = 32)
+    from repro.api import plan
+    with plan(cfg, backend='pallas_fused', rescue_rounds=1,
+              rescue_mode='bucket', batch_lanes=16, executor='thread',
+              mesh=mesh) as ses:
+        assert ses.spec.batch_lanes == 32          # mesh lane quantum
+        futs = [ses.submit(r, f) for r, f in zip(reads, refs)]
+        ses.flush()
+        recs = [f.result() for f in futs]
+    for i in range(B):
+        assert recs[i]['ok'] == (not base.failed[i]), i
+        if recs[i]['ok']:
+            assert recs[i]['dist'] == int(base.dist[i]), i
+            assert recs[i]['cigar'] == base.cigars[i], i
+            assert recs[i]['k_used'] == int(base.k_used[i]), i
+    assert ses.stats['rescue_dispatches'] >= 1     # rungs ran on the thread
+    assert ses._retire_thread is None              # clean shutdown
+    print('SESSION-THREAD OK', ses.stats['dispatches'],
+          ses.stats['rescue_dispatches'])
+
     # ---- collapsed factory: sharded summaries == single-device ----
     from repro.core.windowing import (SENTINEL_READ, SENTINEL_REF,
                                       rescue_schedule, self_tail_width)
@@ -152,6 +179,7 @@ def test_sharded_fused_rescue_bit_identical_and_engine_padding():
     print('FACTORY OK', int(summ['n_failed']), int(summ['total_edits']))
     """)
     assert "PARITY OK" in out and "ENGINE OK" in out and "FACTORY OK" in out
+    assert "SESSION-THREAD OK" in out
 
 
 @pytest.mark.slow

@@ -163,8 +163,10 @@ def test_session_bucket_rescue_bit_identical_to_host_loop(corpus, host_res):
     bit-identical per lane to rescue_mode='host'."""
     from repro.api import plan
     reads, refs = corpus
+    # cache='private': the lowerings count below must not see executables
+    # other suites put in the process-shared store
     s = plan(CFG, rescue_rounds=ROUNDS, rescue_mode="bucket",
-             batch_lanes=len(reads))
+             batch_lanes=len(reads), cache="private")
     res = s.align(reads, refs)
     np.testing.assert_array_equal(res.failed, host_res.failed)
     np.testing.assert_array_equal(res.dist, host_res.dist)

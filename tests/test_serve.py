@@ -19,8 +19,10 @@ def test_alignment_engine_end_to_end():
     # batches land in ONE (length bucket, lane class) -> exactly one AOT
     # compile; rounds=0 keeps the ladder out (rescue is tested separately)
     from repro.core.config import AlignerConfig
+    # cache='private': this test counts exact lowerings, so it must not
+    # see executables other suites put in the process-shared store
     eng = AlignmentEngine(AlignerConfig(W=32, O=12, k=8), batch_size=4,
-                          rescue_rounds=0)
+                          rescue_rounds=0, cache="private")
     assert eng.aligner.cache.stats()["lowerings"] == 0
     for i, (r, s) in enumerate(zip(rs.reads, rs.ref_segments)):
         eng.submit(AlignRequest(rid=i, read=r, ref=s))
