@@ -65,6 +65,47 @@ def table(B=4096, W=64, k=12):
     t_rows, t_derived = tail_fused_vs_split(B=min(B, 128))
     rows += t_rows
     derived.update(t_derived)
+
+    m_rows, m_derived = footprint_rows()
+    rows += m_rows
+    derived.update(m_derived)
+    return rows, derived
+
+
+def footprint_rows(W=64, O=24, k=12, tile=256):
+    """Declared-scratch footprint of the tail kernel, banded (Scrooge-style
+    store elimination; the default wherever the band is a strict win) vs
+    the full-store fallback, at the headline geometry — plus the lane-tile
+    ceiling the bucket planner buys back from the savings.  Pure shape
+    math (no compiles); the scratch-accounting suite proves these equal
+    the kernels' declared ``pltpu.VMEM`` shapes.  The ``vmem_bytes_*``
+    derived keys are gated by benchmarks.compare: they may only shrink."""
+    from repro.core.windowing import plan_lane_tile
+    cfg = AlignerConfig(W=W, O=O, k=k)             # tail_store='auto' → band
+    cfg_full = AlignerConfig(W=W, O=O, k=k, tail_store="full")
+    banded = vmem_bytes_tail(cfg, tile)
+    full = vmem_bytes_tail(cfg_full, tile)
+    square = vmem_bytes(cfg, tile)
+    lt_band, lt_full = plan_lane_tile(cfg), plan_lane_tile(cfg_full)
+    gname = f"w{W}k{k}_tile{tile}"
+    rows = [
+        (f"kernel/tail_scratch_banded_{gname}", 0.0,
+         f"{banded}B_of_16MiB={banded/(16*2**20):.2%}"),
+        (f"kernel/tail_scratch_full_{gname}", 0.0,
+         f"{full}B_of_16MiB={full/(16*2**20):.2%}"),
+        (f"kernel/tail_store_reduction_{gname}", 0.0,
+         f"{full/banded:.2f}x_full_over_banded"),
+        (f"kernel/planned_lane_tile_{gname}", 0.0,
+         f"banded={lt_band}_full={lt_full}_at_16MiB_budget"),
+    ]
+    derived = {
+        f"vmem_bytes_tail_{gname}_banded": banded,
+        f"vmem_bytes_tail_{gname}_full": full,
+        f"tail_store_reduction_{gname}": full / banded,
+        f"vmem_bytes_square_{gname}": square,
+        f"planned_lane_tile_{gname}_banded": lt_band,
+        f"planned_lane_tile_{gname}_full": lt_full,
+    }
     return rows, derived
 
 
@@ -157,7 +198,7 @@ def tail_fused_vs_split(B=128, W=32, k=7, tile=64):
     # the full SENE store the split path round-trips per problem per tail
     store_bytes = 2 * (k + 1) * (wt + 1) * cfg.nw * 4
     out_bytes = (max_ops_t + 8) * 4
-    vmem = vmem_bytes_tail(cfg, 256, max_ops=max_ops_t)
+    vmem = vmem_bytes_tail(cfg, 256, n_text=wt)
     rows = [
         (f"kernel/tail_split_and_store_B{B}_W{W}", t_split * 1e6,
          f"us_per_tail={t_split/B*1e6:.2f}_interpret"),

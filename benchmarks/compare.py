@@ -1,21 +1,31 @@
 """Nightly perf-trajectory gate: diff a fresh bench_report.json against the
-latest committed BENCH_*.json baseline and FAIL on large pairs/s
-regressions, so the serving path's throughput can only ratchet forward.
+latest committed BENCH_*.json baseline and FAIL on regressions of metrics
+both reports share, so the serving path's throughput — and now its VMEM
+footprint — can only ratchet forward.
 
     PYTHONPATH=src python -m benchmarks.compare bench_report.json
         [--baseline BENCH_PR5.json] [--threshold 0.30]
 
-Compared metrics are every numeric ``derived`` entry whose name contains
-``pairs_per_s`` (one per backend/executor row — the numbers the PR-over-PR
-trajectory tracks).  A metric regresses when
-``current < baseline * (1 - threshold)``; the default 30% tolerance
-absorbs runner-to-runner noise (the committed baselines come from a
-different container than the CI runners) while still catching a serving
-path that quietly fell off a cliff.  New metrics (no baseline) and
-retired metrics (no current value) are reported but never fail.
+Compared metrics are every numeric leaf anywhere under ``derived`` whose
+dotted path contains ``pairs_per_s`` (throughput rows, one per
+backend/executor) or ``vmem_bytes`` (declared-scratch footprint rows —
+the numbers the scratch-accounting suite proves are real).  The gate is
+direction-aware:
 
-A markdown trajectory table is printed, and appended to
-``$GITHUB_STEP_SUMMARY`` when set (the CI job summary).
+  * ``pairs_per_s`` regresses when ``current < baseline * (1 - threshold)``
+    — throughput must not fall;
+  * ``vmem_bytes`` regresses when ``current > baseline * (1 + threshold)``
+    — footprint must not grow (these are deterministic shape math, so the
+    tolerance only shields genuine accounting redefinitions, not noise).
+
+Only metrics present in BOTH reports can fail the gate.  Added metrics
+(no baseline) and removed metrics (no current value) are listed
+explicitly after the table — loudly, so a silently-renamed key can't
+dodge the gate unnoticed — but exit 0.
+
+A markdown trajectory table (throughput and footprint columns side by
+side) is printed, and appended to ``$GITHUB_STEP_SUMMARY`` when set (the
+CI job summary).
 """
 from __future__ import annotations
 
@@ -26,17 +36,34 @@ import os
 import re
 import sys
 
+#: substrings of a dotted metric path that make it gated, with the sign of
+#: a regression: +1 = lower is worse (throughput), -1 = higher is worse
+#: (footprint).  First match wins.
+GATED = (("pairs_per_s", +1), ("vmem_bytes", -1))
 
-def _flatten_pairs_metrics(report: dict) -> dict[str, float]:
-    """{section.key: value} for every numeric derived metric that names a
-    pairs/s throughput."""
+
+def _metric_sign(path: str) -> int | None:
+    for sub, sign in GATED:
+        if sub in path:
+            return sign
+    return None
+
+
+def _flatten_metrics(report: dict) -> dict[str, float]:
+    """{dotted.path: value} for every numeric leaf under ``derived`` whose
+    path names a gated metric (recursive — nested groups like
+    ``memory.<profile>.vmem_bytes_per_problem`` count too)."""
     out = {}
-    for section, d in (report.get("derived") or {}).items():
-        if not isinstance(d, dict):
-            continue
-        for k, v in d.items():
-            if "pairs_per_s" in k and isinstance(v, (int, float)):
-                out[f"{section}.{k}"] = float(v)
+
+    def walk(prefix: str, node):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                walk(f"{prefix}.{k}" if prefix else str(k), v)
+        elif isinstance(node, (int, float)) and not isinstance(node, bool):
+            if _metric_sign(prefix) is not None:
+                out[prefix] = float(node)
+
+    walk("", report.get("derived") or {})
     return out
 
 
@@ -55,41 +82,61 @@ def latest_baseline(root: str) -> str | None:
 
 
 def compare(current: dict, baseline: dict, threshold: float):
-    """Returns (table_rows, regressions): one row per metric as
-    (name, base, cur, delta_frac|None, status)."""
-    cur = _flatten_pairs_metrics(current)
-    base = _flatten_pairs_metrics(baseline)
+    """Returns (table_rows, regressions, added, removed): one row per
+    shared metric as (name, base, cur, delta_frac, status); added/removed
+    are the names only in one report (reported, never gating)."""
+    cur = _flatten_metrics(current)
+    base = _flatten_metrics(baseline)
     rows, regressions = [], []
-    for name in sorted(set(cur) | set(base)):
-        c, b = cur.get(name), base.get(name)
-        if b is None:
-            rows.append((name, None, c, None, "new"))
-        elif c is None:
-            rows.append((name, b, None, None, "gone"))
-        else:
-            delta = (c - b) / b if b else 0.0
-            status = "ok" if c >= b * (1.0 - threshold) else "REGRESSION"
-            rows.append((name, b, c, delta, status))
-            if status == "REGRESSION":
-                regressions.append(name)
-    return rows, regressions
+    added = sorted(set(cur) - set(base))
+    removed = sorted(set(base) - set(cur))
+    for name in sorted(set(cur) & set(base)):
+        c, b = cur[name], base[name]
+        delta = (c - b) / b if b else 0.0
+        if _metric_sign(name) > 0:                 # throughput: floor
+            ok = c >= b * (1.0 - threshold)
+        else:                                      # footprint: ceiling
+            ok = c <= b * (1.0 + threshold)
+        status = "ok" if ok else "REGRESSION"
+        rows.append((name, b, c, delta, status))
+        if not ok:
+            regressions.append(name)
+    for name in added:
+        rows.append((name, None, cur[name], None, "added"))
+    for name in removed:
+        rows.append((name, base[name], None, None, "removed"))
+    return rows, regressions, added, removed
 
 
-def render(rows, threshold: float, baseline_path: str) -> str:
+def _fmt(name: str, v: float | None) -> str:
+    if v is None:
+        return "—"
+    return f"{v:,.0f}" if "vmem_bytes" in name else f"{v:.1f}"
+
+
+def render(rows, regressions, added, removed, threshold: float,
+           baseline_path: str) -> str:
     lines = [
         f"### Bench trajectory vs `{os.path.basename(baseline_path)}` "
-        f"(gate: -{threshold:.0%} pairs/s)",
+        f"(gate: -{threshold:.0%} pairs/s, +{threshold:.0%} vmem_bytes)",
         "",
         "| metric | baseline | current | delta | status |",
         "|---|---:|---:|---:|---|",
     ]
     for name, b, c, delta, status in rows:
-        bs = f"{b:.1f}" if b is not None else "—"
-        cs = f"{c:.1f}" if c is not None else "—"
         ds = f"{delta:+.1%}" if delta is not None else "—"
-        mark = "❌" if status == "REGRESSION" else "✅" \
-            if status == "ok" else "·"
-        lines.append(f"| {name} | {bs} | {cs} | {ds} | {mark} {status} |")
+        mark = {"REGRESSION": "❌", "ok": "✅"}.get(status, "·")
+        lines.append(f"| {name} | {_fmt(name, b)} | {_fmt(name, c)} | {ds} "
+                     f"| {mark} {status} |")
+    lines.append("")
+    if added:
+        lines.append(f"Added metrics (no baseline, not gated): "
+                     f"{', '.join(f'`{n}`' for n in added)}")
+    if removed:
+        lines.append(f"Removed metrics (no current value, not gated): "
+                     f"{', '.join(f'`{n}`' for n in removed)}")
+    if not added and not removed:
+        lines.append("Metric key set unchanged from baseline.")
     return "\n".join(lines) + "\n"
 
 
@@ -101,7 +148,8 @@ def main() -> int:
                     help="committed BENCH_*.json to diff against "
                          "(default: the latest by PR number)")
     ap.add_argument("--threshold", type=float, default=0.30,
-                    help="allowed fractional pairs/s drop (default 0.30)")
+                    help="allowed fractional pairs/s drop / vmem_bytes "
+                         "growth (default 0.30)")
     args = ap.parse_args()
 
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -114,20 +162,23 @@ def main() -> int:
     with open(baseline_path) as fh:
         baseline = json.load(fh)
 
-    rows, regressions = compare(current, baseline, args.threshold)
-    table = render(rows, args.threshold, baseline_path)
+    rows, regressions, added, removed = compare(current, baseline,
+                                                args.threshold)
+    table = render(rows, regressions, added, removed, args.threshold,
+                   baseline_path)
     print(table)
     summary = os.environ.get("GITHUB_STEP_SUMMARY")
     if summary:
         with open(summary, "a") as fh:
             fh.write(table)
     if regressions:
-        print(f"FAIL: {len(regressions)} pairs/s regression(s) beyond "
+        print(f"FAIL: {len(regressions)} regression(s) beyond "
               f"{args.threshold:.0%}: {', '.join(regressions)}",
               file=sys.stderr)
         return 1
-    print(f"ok: {sum(1 for r in rows if r[4] == 'ok')} metric(s) within "
-          f"{args.threshold:.0%} of baseline")
+    print(f"ok: {sum(1 for r in rows if r[4] == 'ok')} shared metric(s) "
+          f"within {args.threshold:.0%} of baseline; "
+          f"{len(added)} added, {len(removed)} removed")
     return 0
 
 

@@ -93,7 +93,8 @@ class AlignSpec:
     max_inflight  — dispatches in flight before backpressure: the sync
                     executor retires the oldest inline (2 = double
                     buffering); the threaded executor bounds its retire
-                    queue at this depth.
+                    queue at this depth.  With adaptive_inflight this is
+                    the *starting* depth, not a constant.
     executor      — 'sync' (retire inline on the dispatch thread) or
                     'thread' (background retire thread overlaps host
                     decode with dispatch — see docs/api.md).
@@ -101,6 +102,16 @@ class AlignSpec:
                     track per-bucket fill over the last `occupancy_window`
                     dispatches and step the lane class down/up the
                     quantised ladder (never above batch_lanes).
+    adaptive_inflight / inflight_ceiling — occupancy-driven in-flight
+                    window: the same sliding fill signal, session-wide,
+                    widens max_inflight by one (up to inflight_ceiling)
+                    when every windowed dispatch saturated its lane class,
+                    and narrows it by one (down to 1) when every windowed
+                    dispatch was partial/flush-driven.  Backpressure stays
+                    bounded (the threaded retire queue is allocated at the
+                    ceiling; the *current* bound is what the dispatch
+                    thread enforces) and poison-on-exception semantics are
+                    unchanged.
     mesh          — optional device mesh; every executable is lowered
                     against it (shard_map'd Pallas / GSPMD jnp paths).
     """
@@ -113,6 +124,8 @@ class AlignSpec:
     executor: str = "sync"
     adaptive_lanes: bool = False
     occupancy_window: int = 8
+    adaptive_inflight: bool = False
+    inflight_ceiling: int = 8
     mesh: object = None
 
     def __post_init__(self):
@@ -123,6 +136,10 @@ class AlignSpec:
         assert self.bucket_floor >= 1
         assert self.max_inflight >= 1
         assert self.occupancy_window >= 1
+        assert self.inflight_ceiling >= 1
+        if self.adaptive_inflight:
+            assert self.inflight_ceiling >= self.max_inflight, \
+                (self.inflight_ceiling, self.max_inflight)
 
     def key(self):
         """Hashable identity of everything that shapes an executable —
@@ -145,6 +162,7 @@ def plan(cfg: AlignerConfig | None = None, *, backend: str | None = None,
          batch_lanes: int = 64, bucket_floor: int = 32,
          max_inflight: int = 2, executor: str = "sync",
          adaptive_lanes: bool = False, occupancy_window: int = 8,
+         adaptive_inflight: bool = False, inflight_ceiling: int = 8,
          mesh=None, cache: "CompileCache | str" = "shared",
          **cfg_overrides) -> "AlignSession":
     """Resolve a cfg-like spec into a planned :class:`AlignSession`.
@@ -166,7 +184,9 @@ def plan(cfg: AlignerConfig | None = None, *, backend: str | None = None,
                      batch_lanes=bucket_lanes(batch_lanes, cfg, mesh),
                      bucket_floor=bucket_floor, max_inflight=max_inflight,
                      executor=executor, adaptive_lanes=adaptive_lanes,
-                     occupancy_window=occupancy_window, mesh=mesh)
+                     occupancy_window=occupancy_window,
+                     adaptive_inflight=adaptive_inflight,
+                     inflight_ceiling=inflight_ceiling, mesh=mesh)
     return AlignSession(spec, cache=cache)
 
 
@@ -415,9 +435,14 @@ class AlignSession:
         self._ladder = lane_classes(spec.batch_lanes, spec.cfg, spec.mesh)
         self._lane_class: dict[tuple, int] = {}    # bucket -> current class
         self._fills: dict[tuple, deque] = {}       # bucket -> recent fills
+        # occupancy-adaptive in-flight window (session-wide, not per bucket
+        # — in-flight depth is a property of the pipeline, not of a shape)
+        self._max_inflight = spec.max_inflight
+        self._inflight_win: deque = deque(maxlen=spec.occupancy_window)
         self.stats = {"dispatches": 0, "lanes": 0, "pad_lanes": 0,
                       "requests": 0, "rescue_dispatches": 0,
                       "rescue_lanes": 0, "lane_class_steps": 0,
+                      "inflight_steps": 0,
                       "wall_s": 0.0, "retire_wall_s": 0.0}
 
     # ---- context management / shutdown --------------------------------
@@ -611,6 +636,38 @@ class AlignSession:
         with self._lock:
             self.stats["lane_class_steps"] += 1
 
+    # ---- adaptive in-flight window -------------------------------------
+
+    def _adapt_inflight(self, saturated: bool) -> None:
+        """Occupancy-driven in-flight depth, from the same sliding signal
+        as _adapt but session-wide: `saturated` records whether this
+        dispatch filled its (pre-step) lane class.  Once the window is
+        full, widen the in-flight bound by one (denser pipelining pays
+        when traffic keeps every batch full) up to spec.inflight_ceiling;
+        narrow by one toward 1 when every windowed dispatch was partial
+        (flush-driven traffic gains nothing from a deep pipeline and the
+        shallower bound retires results sooner).  Purely a scheduling
+        choice: like lane classes, it cannot change values — the sync
+        backpressure loop and the threaded queue guard just read the
+        current bound.  Only the dispatch thread writes _max_inflight,
+        so readers need no lock (the retire thread never reads it)."""
+        if not self.spec.adaptive_inflight:
+            return
+        win = self._inflight_win
+        win.append(bool(saturated))
+        if len(win) < win.maxlen:
+            return
+        cur = self._max_inflight
+        if all(win) and cur < self.spec.inflight_ceiling:
+            self._max_inflight = cur + 1
+        elif not any(win) and cur > 1:
+            self._max_inflight = cur - 1
+        else:
+            return
+        win.clear()                      # fresh window for the new bound
+        with self._lock:
+            self.stats["inflight_steps"] += 1
+
     # ---- dispatch ------------------------------------------------------
 
     def _dispatch(self, bucket, items):
@@ -632,8 +689,9 @@ class AlignSession:
 
     def _dispatch_inner(self, bucket, items):
         threaded = self.spec.executor == "thread"
+        cls = self._current_lanes(bucket)   # pre-step class, for saturation
         if not threaded:
-            while len(self._inflight) >= self.spec.max_inflight:
+            while len(self._inflight) >= self._max_inflight:
                 self._retire_guarded(self._inflight.popleft())
         t0 = time.time()
         futs = [it[0] for it in items]
@@ -658,6 +716,7 @@ class AlignSession:
             self.stats["pad_lanes"] += lanes - len(items)
             self.stats["wall_s"] += time.time() - t0
         self._adapt(bucket, len(items))
+        self._adapt_inflight(len(items) >= cls)
 
     def _pad_batch(self, reads, refs, lanes, Lr, Lf):
         """Pad to `lanes` rows of (Lr, Lf) sentinels; ragged lane tails are
@@ -682,21 +741,36 @@ class AlignSession:
 
     def _ensure_retire_thread(self):
         if self._retire_thread is None or not self._retire_thread.is_alive():
-            self._retire_q = queue.Queue(maxsize=self.spec.max_inflight)
+            # allocate at the ceiling so a widened bound never needs a new
+            # queue; the *current* bound is enforced in _enqueue_retire
+            depth = (self.spec.inflight_ceiling
+                     if self.spec.adaptive_inflight
+                     else self.spec.max_inflight)
+            self._retire_q = queue.Queue(maxsize=depth)
             self._retire_thread = threading.Thread(
                 target=self._retire_loop, name="align-retire", daemon=True)
             self._retire_thread.start()
 
     def _enqueue_retire(self, d: _Dispatch):
+        """Bounded-queue backpressure at the *current* in-flight bound:
+        block while retire is >= _max_inflight behind.  The qsize check is
+        race-free here because this (dispatch) thread is the only producer
+        — the retire thread only ever shrinks the queue.  The 0.1s tick
+        doubles as the liveness check: a dead retire thread with a backed-
+        up queue poisons the submit instead of hanging it."""
         self._ensure_retire_thread()
         while True:
-            try:
-                self._retire_q.put(d, timeout=0.1)
-                return
-            except queue.Full:
-                if not self._retire_thread.is_alive():
-                    raise SessionPoisonedError(
-                        "retire thread died with its queue full")
+            if self._retire_q.qsize() < self._max_inflight:
+                try:
+                    self._retire_q.put(d, timeout=0.1)
+                    return
+                except queue.Full:
+                    pass
+            else:
+                time.sleep(0.005)
+            if not self._retire_thread.is_alive():
+                raise SessionPoisonedError(
+                    "retire thread died with its queue full")
 
     def _retire_loop(self):
         """The background executor: drain ready device results and run the
@@ -859,4 +933,8 @@ class AlignSession:
                 str(b): {"lane_class": self._current_lanes(b),
                          "recent_fills": list(self._fills.get(b, ()))}
                 for b in set(self._lane_class) | set(self._fills)}
+        if self.spec.adaptive_inflight:
+            out["inflight"] = {"max_inflight": self._max_inflight,
+                               "ceiling": self.spec.inflight_ceiling,
+                               "recent_saturated": list(self._inflight_win)}
         return out

@@ -39,12 +39,18 @@ class AlignerConfig:
     n_symbols: int = 4
     lane_tile: int = 128        # problems per Pallas grid step (one VPU-lane
                                 # tile); also the per-shard batch pad unit
+    tail_store: str = "auto"    # rectangular-tail SENE store: 'band' keeps
+                                # only the provably-reachable diagonal window
+                                # (Scrooge-style store elimination), 'full'
+                                # the whole (k+1, n_text+1, NW) table;
+                                # 'auto' = band whenever it is a strict win
 
     def __post_init__(self):
         assert 0 < self.O < self.W
         assert 0 < self.k < self.W
         assert self.lane_tile > 0
         assert self.store in ("edges4", "and", "band")
+        assert self.tail_store in ("auto", "band", "full")
         assert self.backend in ("jnp", "pallas", "pallas_fused")
         # the Pallas kernels implement the fully-improved (banded) DP only
         assert self.backend == "jnp" or self.store == "band", \
@@ -86,6 +92,25 @@ class AlignerConfig:
         commits <= W-O read chars, hence visits <= W-O+k text columns."""
         return min(self.W + 1, self.stride + self.k + self.tb_margin)
 
+    @property
+    def tail_band_supported(self) -> bool:
+        """True when the tail's DENT-style band proof buys a strictly
+        narrower store: the traceback-reachable window around the per-lane
+        diagonal spans 2k+3 bits, so whenever that fits in fewer words than
+        the full pattern vector (nwb < nw) the banded store is a win.  When
+        nwb == nw the band window *is* the full vector (its base clips to
+        word 0) — correct, but no bytes saved."""
+        return self.nwb < self.nw
+
+    @property
+    def tail_banded(self) -> bool:
+        """Resolved tail_store policy: does the tail kernel store the band?"""
+        if self.tail_store == "band":
+            return True
+        if self.tail_store == "full":
+            return False
+        return self.tail_band_supported
+
     def replace(self, **overrides) -> "AlignerConfig":
         """A copy with `overrides` applied (re-validated by __post_init__)."""
         return dataclasses.replace(self, **overrides)
@@ -121,7 +146,13 @@ def resolve_config(cfg: AlignerConfig | None = None,
     optional knobs straight through (e.g. the legacy ``backend=``
     parameter of GenASMAligner / AlignmentEngine).  Validation happens
     once, here, via the dataclass __post_init__ — the single funnel the
-    session front door (repro.api.plan) and the legacy shims share."""
+    session front door (repro.api.plan) and the legacy shims share.
+
+    ``lane_tile='auto'`` resolves to the bucket planner's VMEM-budgeted
+    tile (core.windowing.plan_lane_tile) against the *final* geometry —
+    i.e. after every other override, including ``tail_store``, has been
+    applied — so banded-tail configs automatically get the wider tiles
+    their smaller scratch affords."""
     cfg = cfg if cfg is not None else AlignerConfig()
     # reject typo'd knobs even when their value is None (optional params
     # threaded through with =None defaults must still name real fields)
@@ -130,4 +161,11 @@ def resolve_config(cfg: AlignerConfig | None = None,
     if unknown:
         raise TypeError(f"unknown AlignerConfig knobs: {sorted(unknown)}")
     real = {k: v for k, v in overrides.items() if v is not None}
-    return dataclasses.replace(cfg, **real) if real else cfg
+    auto_tile = real.get("lane_tile") == "auto"
+    if auto_tile:
+        del real["lane_tile"]
+    cfg = dataclasses.replace(cfg, **real) if real else cfg
+    if auto_tile:
+        from .windowing import plan_lane_tile   # runtime: avoids the cycle
+        cfg = dataclasses.replace(cfg, lane_tile=plan_lane_tile(cfg))
+    return cfg

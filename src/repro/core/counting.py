@@ -10,6 +10,13 @@ counters mirror that accounting for each variant, in 32-bit words:
   +DENT     (band words of reachable columns only)       — paper idea 3
 
 Validated against instrumented empirical counts in tests/test_counting.py.
+
+This module is also the single source of truth for the Pallas kernels'
+declared VMEM scratch (`kernel_scratch_words` / `tail_scratch_words`):
+`kernels.genasm_dc.vmem_bytes*` delegate here, and the scratch-accounting
+suite (tests/test_scratch_accounting.py) asserts the declared
+`pltpu.VMEM` shapes, the `vmem_bytes*` numbers and this model agree word
+for word — so the paper's 24x claim is computed from real scratch bytes.
 """
 from __future__ import annotations
 
@@ -51,6 +58,38 @@ def sene_only_counts(cfg: AlignerConfig, tb_steps: float) -> WindowCounts:
                         int(tb_steps * 3 * cfg.nw))
 
 
+def kernel_scratch_words(cfg: AlignerConfig, tile: int) -> int:
+    """Declared VMEM scratch of the square fused/split kernels, in words,
+    per problem tile: exactly the DENT band store — (k+1) levels x
+    ncols_band reachable columns x nwb band words per lane.
+
+    After the Scrooge-style store elimination the DC fill carries its two
+    live columns in the loop state ("registers", the paper's framing
+    above), so the band is the *only* materialised table.  This equals
+    ``improved_counts(...).footprint_words * tile``: the analytic claim
+    and the kernel's declared scratch are the same number."""
+    return (cfg.k + 1) * cfg.ncols_band * cfg.nwb * tile
+
+
+def tail_scratch_words(cfg: AlignerConfig, tile: int,
+                       n_text: int | None = None,
+                       banded: bool | None = None) -> int:
+    """Declared VMEM scratch of the rectangular-tail fused kernel, in
+    words, per problem tile.
+
+    banded (default: cfg.tail_banded) — the DENT-style tail band keeps
+    nwb words per (level, text column) around the per-lane diagonal,
+    with column 0 analytic (ones_below needs no store); the full-store
+    fallback keeps the whole (k+1, n_text+1, NW) SENE table."""
+    if n_text is None:
+        n_text = cfg.W + 4 * cfg.k
+    if banded is None:
+        banded = cfg.tail_banded
+    if banded:
+        return (cfg.k + 1) * n_text * cfg.nwb * tile
+    return (cfg.k + 1) * (n_text + 1) * cfg.nw * tile
+
+
 def reduction_report(cfg: AlignerConfig, avg_levels: float,
                      tb_steps: float | None = None) -> dict:
     """Footprint / access reduction factors for a steady-state main window.
@@ -75,5 +114,8 @@ def reduction_report(cfg: AlignerConfig, avg_levels: float,
         "improved_accesses": impr.dc_writes + impr.tb_reads,
         "access_reduction": (base.dc_writes + base.tb_reads)
                             / max(1, impr.dc_writes + impr.tb_reads),
+        # == kernel_scratch_words(cfg, tile) * 4 / tile: the fused kernel's
+        # declared band scratch, not an independent estimate (satellite
+        # reconciliation, asserted in tests/test_scratch_accounting.py)
         "vmem_bytes_per_problem": impr.footprint_words * 4,
     }

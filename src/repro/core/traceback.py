@@ -48,7 +48,14 @@ def _zbit_full(r_bt, b_idx, d, j, i, k):
 
 def _zbit_band(rb_bt, bases, col0, b_idx, d, j, i, k):
     """bit i of the stored band window of column j, level d == 0.
-    rb_bt: (B, K1, CB, NWB) batch-leading (see _zbit_full note)."""
+    rb_bt: (B, K1, CB, NWB) batch-leading (see _zbit_full note).
+
+    This is the parity reference for every banded in-kernel walk: the
+    fused square kernel's zbit mirrors it with the same static bases, and
+    the banded *tail* kernel (kernels.genasm_dc._kernel_tail_banded)
+    generalises the base to the per-lane diagonal — same in-band mask,
+    same i < 0 first-row analytics, plus an analytic j <= 0 column
+    (R_0[d] = ones_below(d), never stored there)."""
     B, K1, CB, NWB = rb_bt.shape
     s = jnp.clip(j - col0, 0, CB - 1)
     dd = jnp.clip(d, 0, K1 - 1)

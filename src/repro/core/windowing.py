@@ -77,6 +77,27 @@ def bucket_avals(cfg: AlignerConfig, lanes: int, read_bucket: int,
             sds((lanes, Lf), jnp.uint8), sds((lanes,), jnp.int32))
 
 
+def plan_lane_tile(cfg: AlignerConfig, vmem_budget_bytes: int = 16 * 2**20,
+                   quantum: int = 128, ceiling: int = 4096) -> int:
+    """Largest lane tile (multiple of `quantum`, the VPU lane width) whose
+    square fused kernel AND tail kernel DP stores both fit the per-core
+    VMEM budget.
+
+    This is where the tentpole's reclaimed bytes get *spent*: the tail
+    kernel's store was the binding constraint, and the Scrooge-style band
+    (cfg.tail_banded) roughly halves it at the default geometry, so the
+    planner's ceiling doubles — more lanes per kernel launch, fewer grid
+    steps per batch.  Sessions opt in with plan(..., lane_tile='auto')
+    (repro.api); the bucket pad unit (lane_tile * n_shards) follows
+    automatically through kernels.ops._pad_unit."""
+    from .counting import kernel_scratch_words, tail_scratch_words
+    assert quantum > 0 and ceiling >= quantum
+    per_lane = 4 * max(kernel_scratch_words(cfg, 1),
+                       tail_scratch_words(cfg, 1))
+    tile = (vmem_budget_bytes // (per_lane * quantum)) * quantum
+    return int(min(max(tile, quantum), ceiling))
+
+
 def _slice_rev(seq, pos, width, length):
     """Per-problem: take seq[pos:pos+width], reversed, with the `length` real
     chars packed at the front (sentinel padding after).  seq must be padded

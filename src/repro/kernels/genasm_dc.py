@@ -7,13 +7,17 @@ Bitvector words live in small leading axes and are unrolled; all DP state
 is VMEM scratch, which is the paper's point: after the three improvements
 the entire traceback table fits on-chip (`vmem_bytes` below).
 
-Grid: one program per problem tile.  Per tile:
-  * level-0 row filled with a fori_loop over the W text columns,
-  * levels 1..k under a while_loop with whole-tile early termination,
-  * per column, the DENT band window (funnel-shift extracted, sub-word) is
-    stored for the traceback-reachable columns only.
+Grid: one program per problem tile.  Per tile, the DC fill runs
+*column-major*: a fori_loop over the W text columns carries the two live
+DP columns — all k+1 levels of R_{j-1} ride in the loop state
+("registers"), never in scratch — and per column the DENT band window
+(funnel-shift extracted, sub-word) is stored for the traceback-reachable
+columns only.  That is Scrooge's store-elimination idiom (arxiv
+2208.09985): anything the shared traceback walk can re-derive from its two
+live columns is never materialised, so the declared VMEM scratch *is* the
+counting model's footprint (core.counting.kernel_scratch_words).
 
-Two kernels share that DC phase (`_dc_phase`):
+Three kernels share helpers:
 
   * `genasm_dc_pallas` (split) — writes the DENT band to an HBM output so
     the host-side jnp traceback (core.traceback, mode='band') can walk it.
@@ -26,6 +30,11 @@ Two kernels share that DC phase (`_dc_phase`):
     Only the per-problem op array (<= max_ops int32) and a meta row leave
     the chip — the band never round-trips through HBM, which is the
     bandwidth win the paper's 24x working-set compression pays for.
+  * `genasm_tail_fused_pallas` — the ragged rectangular tail.  Stores a
+    per-lane *dynamic* DENT band (`_kernel_tail_banded`, the tentpole of
+    the Scrooge port: ~2x less tail scratch at W=64 k=12) whenever
+    `cfg.tail_banded`, falling back to the full SENE store
+    (`_kernel_tail_fused`) when the band is not a strict win.
 
 The traceback walk is bit-identical to core.traceback mode='band' (same
 =,X,D,I preference, same commit-limit semantics); tests assert ops/dist
@@ -44,6 +53,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from ..core.config import AlignerConfig
+from ..core.counting import kernel_scratch_words, tail_scratch_words
 from ..core.oracle import OP_DEL, OP_INS, OP_MATCH, OP_SUBST
 from ..core.traceback import OP_NONE
 
@@ -69,25 +79,44 @@ def default_max_steps(cfg: AlignerConfig) -> int:
     return cfg.tb_max_steps
 
 
-def vmem_bytes(cfg: AlignerConfig, tile: int, fused: bool = False,
-               max_ops: int | None = None) -> int:
-    """On-chip working set per problem tile (the paper's 'fits in on-chip
-    memory' claim, checked against ~16MB VMEM in tests).
+def fused_scratch_shapes(cfg: AlignerConfig, tile: int):
+    """The declared VMEM scratch of the square fused kernel: the DENT band,
+    nothing else — the DC fill's live columns are loop-carried values.
+    Single source for `genasm_tb_fused_pallas` and the accounting tests."""
+    return [pltpu.VMEM((cfg.k + 1, cfg.ncols_band, cfg.nwb, tile),
+                       jnp.uint32)]
 
-    The split kernel's band is an output block, but it still occupies VMEM
-    while the tile is in flight, so it is counted either way.  The fused
-    kernel adds the traceback state: the op output block (max_ops words)
-    plus ~16 per-lane state vectors; its band is pure scratch and never
-    becomes HBM traffic.
-    """
-    rows = 2 * (cfg.W + 1) * cfg.nw * tile * 4
-    band = (cfg.k + 1) * cfg.ncols_band * cfg.nwb * tile * 4
-    io = (5 * cfg.nw + cfg.W + 2) * tile * 4
-    total = rows + band + io
-    if fused:
-        mo = default_max_ops(cfg) if max_ops is None else max_ops
-        total += (mo + META_ROWS + 16) * tile * 4
-    return total
+
+def tail_scratch_shapes(cfg: AlignerConfig, tile: int, n_text: int,
+                        banded: bool | None = None):
+    """Declared VMEM scratch of the rectangular-tail kernel: the per-lane
+    dynamic band (columns 1..n_text x nwb words; column 0 is analytic), or
+    the full SENE table on the no-band-win fallback."""
+    banded = cfg.tail_banded if banded is None else banded
+    if banded:
+        return [pltpu.VMEM((cfg.k + 1, n_text, cfg.nwb, tile), jnp.uint32)]
+    return [pltpu.VMEM((cfg.k + 1, n_text + 1, cfg.nw, tile), jnp.uint32)]
+
+
+def vmem_bytes(cfg: AlignerConfig, tile: int) -> int:
+    """On-chip DP-store bytes per problem tile (the paper's 'fits in
+    on-chip memory' claim, checked against ~16MB VMEM in tests).
+
+    Exactly the declared scratch of the fused kernel — which, post
+    store-elimination, is the band and only the band, so this equals
+    `core.counting.kernel_scratch_words * 4` (one source of truth; the
+    equality is asserted per grid point in tests/test_scratch_accounting).
+    For the split kernel the identical band is an output block instead of
+    scratch: same bytes resident while the tile is in flight."""
+    return kernel_scratch_words(cfg, tile) * 4
+
+
+def vmem_bytes_tail(cfg: AlignerConfig, tile: int, n_text: int | None = None,
+                    banded: bool | None = None) -> int:
+    """On-chip DP-store bytes of the rectangular-tail fused kernel per
+    problem tile: the declared scratch of `tail_scratch_shapes`, via the
+    counting model (banded defaults to cfg.tail_banded)."""
+    return tail_scratch_words(cfg, tile, n_text, banded) * 4
 
 
 def _pm_lookup(pm_ref, cj, nw, n_sym=4):
@@ -130,20 +159,59 @@ def _word_select(words, w0):
     return word
 
 
-def _dc_phase(pm_ref, text_ref, rows_ref, band_ref, *, cfg: AlignerConfig):
-    """Fill the improved GenASM-DC levels, storing DENT band windows into
-    band_ref (output block or VMEM scratch).  Returns (dist, d_end)."""
+def _next_column(prev, cur_below, pm_j, t, d, nw):
+    """One SENE cell: R_j[d] from the three stored neighbours + PM mask.
+    prev = [R_{j-1}[d], R_{j-1}[d-1]] (or [R_{j-1}[0]] at level 0),
+    cur_below = R_j[d-1] (already frozen/final for this column)."""
+    if d == 0:
+        bM = (t > 0).astype(jnp.uint32)
+        return [a | b for a, b in zip(_shift1_words(prev[0], bM, nw), pm_j)]
+    r_prev, p_jm1 = prev
+    bM = (t > d).astype(jnp.uint32)
+    bS = (t >= d).astype(jnp.uint32)
+    bI = (t >= d - 1).astype(jnp.uint32)
+    M = [a | b for a, b in zip(_shift1_words(r_prev, bM, nw), pm_j)]
+    S = _shift1_words(p_jm1, bS, nw)
+    I = _shift1_words(cur_below, bI, nw)
+    return [M[w] & S[w] & p_jm1[w] & I[w] for w in range(nw)]
+
+
+def _ids_dist_dend(last_cols, bit_w, bit_o, guard, cfg):
+    """dist = min level whose final column clears the target bit (monotone
+    in d, so the fold below and the level-major first-hit agree), and the
+    analytic d_end that reproduces the retired whole-tile-ET while loop's
+    exit level exactly: with ET the loop ran levels 1..max(dist) (capped at
+    k) and exited at the next level; without ET it always reached k+1."""
+    k = cfg.k
+    u1 = jnp.uint32(1)
+    dist = None
+    for d in range(k, -1, -1):
+        bit = (_word_select(list(last_cols[d]), bit_w) >> bit_o) & u1
+        hit = (bit == 0) & guard
+        full = jnp.full(hit.shape, k + 1, jnp.int32)
+        dist = jnp.where(hit, d, full if dist is None else dist)
+    if cfg.early_term:
+        d_end = jnp.minimum(jnp.max(dist), k) + 1
+    else:
+        d_end = jnp.int32(k + 1)
+    return dist, d_end
+
+
+def _dc_phase(pm_ref, text_ref, band_ref, *, cfg: AlignerConfig):
+    """Column-major improved GenASM-DC fill: all k+1 levels of the two live
+    DP columns ride in the fori_loop carry; only the DENT band windows are
+    materialised (into band_ref — output block or VMEM scratch).  Returns
+    (dist, d_end).
+
+    Level values stored at levels above a lane's dist can differ from the
+    retired level-major ET fill (which left them zero) — but no consumer
+    reads them: the traceback starts at d = dist and only descends, and the
+    band parity tests compare levels [:d_end] only."""
     W, k, nw, nwb = cfg.W, cfg.k, cfg.nw, cfg.nwb
     m_pad = cfg.m_pad
     ncb = cfg.ncols_band
     col0 = W + 1 - ncb
     tgt_w, tgt_o = (W - 1) // WORD, jnp.uint32((W - 1) % WORD)
-
-    def shift1_words(words, carry_in):
-        return _shift1_words(words, carry_in, nw)
-
-    def ones_below(d):
-        return _ones_below_words(d, nw, text_ref.shape[1:])
 
     def store_band(d, j, words):
         """Funnel-shift extract the band window of column j and store it."""
@@ -163,84 +231,35 @@ def _dc_phase(pm_ref, text_ref, rows_ref, band_ref, *, cfg: AlignerConfig):
             def _():
                 band_ref[d, j - col0, b, :] = win
 
-    def row_get(parity, j):
-        return [rows_ref[parity, j, w, :] for w in range(nw)]
+    lane_shape = text_ref.shape[1:]
+    cols0 = [_ones_below_words(jnp.int32(d), nw, lane_shape)
+             for d in range(k + 1)]
+    if col0 == 0:                         # column 0 only stored if in band
+        for d in range(k + 1):
+            store_band(d, jnp.int32(0), cols0[d])
 
-    def row_set(parity, j, words):
-        for w in range(nw):
-            rows_ref[parity, j, w, :] = words[w]
-
-    # ---------------- level 0 ----------------
-    r0 = ones_below(jnp.int32(0))
-    row_set(0, 0, r0)
-    store_band(0, 0, r0)
-
-    def col_body0(j, _):
-        prev = row_get(0, j - 1)
+    def col_body(j, carry):
+        prev = [list(c) for c in carry]
         cj = text_ref[j - 1, :].astype(jnp.int32)
         pm_j = _pm_lookup(pm_ref, cj, nw)
-        bM = ((j - 1) > 0).astype(jnp.uint32)
-        r = [a | b for a, b in zip(shift1_words(prev, bM), pm_j)]
-        row_set(0, j, r)
-        store_band(0, j, r)
-        return 0
+        t = j - 1
+        cur = [_next_column([prev[0]], None, pm_j, t, 0, nw)]
+        for d in range(1, k + 1):
+            cur.append(_next_column([prev[d], prev[d - 1]], cur[d - 1],
+                                    pm_j, t, d, nw))
+        for d in range(k + 1):
+            store_band(d, j, cur[d])
+        return tuple(tuple(c) for c in cur)
 
-    jax.lax.fori_loop(1, W + 1, col_body0, 0)
-    last0 = row_get(0, W)
-    hit0 = ((last0[tgt_w] >> tgt_o) & jnp.uint32(1)) == 0
-    dist0 = jnp.where(hit0, 0, k + 1).astype(jnp.int32)
-
-    # ---------------- levels 1..k with early termination ----------------
-    def fill_level(d):
-        parity, prev_par = d % 2, (d - 1) % 2
-        rinit = ones_below(d)
-        row_set(parity, 0, rinit)
-        store_band(d, 0, rinit)
-
-        def col_body(j, _):
-            r_prev = row_get(parity, j - 1)        # R_{j-1}[d]
-            p_jm1 = row_get(prev_par, j - 1)       # R_{j-1}[d-1]
-            p_j = row_get(prev_par, j)             # R_j[d-1]
-            cj = text_ref[j - 1, :].astype(jnp.int32)
-            pm_j = _pm_lookup(pm_ref, cj, nw)
-            t = j - 1
-            bM = (t > d).astype(jnp.uint32)
-            bS = (t >= d).astype(jnp.uint32)
-            bI = (t >= d - 1).astype(jnp.uint32)
-            M = [a | b for a, b in zip(shift1_words(r_prev, bM), pm_j)]
-            S = shift1_words(p_jm1, bS)
-            I = shift1_words(p_j, bI)
-            r = [M[w] & S[w] & p_jm1[w] & I[w] for w in range(nw)]
-            row_set(parity, j, r)
-            store_band(d, j, r)
-            return 0
-
-        jax.lax.fori_loop(1, W + 1, col_body, 0)
-        last = row_get(parity, W)
-        return ((last[tgt_w] >> tgt_o) & jnp.uint32(1)) == 0
-
-    # NOTE: `dist` rides in the while carry (a cond reading a mutated VMEM
-    # ref would observe it one iteration late).
-    def lvl_cond(state):
-        d, dist = state
-        go = d <= k
-        if cfg.early_term:
-            go &= jnp.any(dist > k)
-        return go
-
-    def lvl_body(state):
-        d, dist = state
-        hit = fill_level(d)
-        dist = jnp.where((dist > k) & hit, d, dist).astype(jnp.int32)
-        return d + 1, dist
-
-    d_end, dist = jax.lax.while_loop(lvl_cond, lvl_body, (jnp.int32(1), dist0))
-    return dist, d_end
+    last = jax.lax.fori_loop(1, W + 1, col_body,
+                             tuple(tuple(c) for c in cols0))
+    guard = jnp.ones(lane_shape, bool)
+    return _ids_dist_dend(last, tgt_w, tgt_o, guard, cfg)
 
 
-def _kernel(pm_ref, text_ref, band_ref, dist_ref, lvl_ref, rows_ref, *,
+def _kernel(pm_ref, text_ref, band_ref, dist_ref, lvl_ref, *,
             cfg: AlignerConfig):
-    dist, d_end = _dc_phase(pm_ref, text_ref, rows_ref, band_ref, cfg=cfg)
+    dist, d_end = _dc_phase(pm_ref, text_ref, band_ref, cfg=cfg)
     dist_ref[0, :] = dist
     lvl_ref[0, :] = jnp.broadcast_to(d_end, lvl_ref.shape[1:]).astype(jnp.int32)
 
@@ -328,7 +347,7 @@ def _tb_walk(*, TB, dist, k, init_i, init_j, commit_limit, max_ops, max_steps,
     return jax.lax.fori_loop(0, max_steps, walk_body, init)
 
 
-def _kernel_fused(pm_ref, text_ref, ops_ref, meta_ref, rows_ref, band_ref, *,
+def _kernel_fused(pm_ref, text_ref, ops_ref, meta_ref, band_ref, *,
                   cfg: AlignerConfig, commit_limit: int, max_ops: int,
                   max_steps: int):
     """DC phase into VMEM scratch, then GenASM-TB walked in-kernel.
@@ -338,7 +357,9 @@ def _kernel_fused(pm_ref, text_ref, ops_ref, meta_ref, rows_ref, band_ref, *,
     PM masks, with the =,X,D,I preference order, a per-lane tail drain, and
     the commit-limit stop.  Per-lane dynamic (d, j) band reads use one-hot
     sums over the small static (k+1, ncols_band) axes — the inverted form
-    of store_band's funnel-shift stores.
+    of store_band's funnel-shift stores.  The column-major fill writes
+    every band entry, so no zero-init pass is needed (and the walk never
+    visits levels above its lane's dist anyway).
     """
     W, k, nw, nwb = cfg.W, cfg.k, cfg.nw, cfg.nwb
     m_pad = cfg.m_pad
@@ -347,11 +368,7 @@ def _kernel_fused(pm_ref, text_ref, ops_ref, meta_ref, rows_ref, band_ref, *,
     TB = text_ref.shape[1]
     u1 = jnp.uint32(1)
 
-    # uncomputed (early-terminated) levels must read as zero, like the jnp
-    # path's zeros-initialized band buffer
-    band_ref[:, :, :, :] = jnp.zeros((k + 1, ncb, nwb, TB), jnp.uint32)
-
-    dist, d_end = _dc_phase(pm_ref, text_ref, rows_ref, band_ref, cfg=cfg)
+    dist, d_end = _dc_phase(pm_ref, text_ref, band_ref, cfg=cfg)
 
     # ---------------- traceback phase ----------------
     d_ids = jax.lax.broadcasted_iota(jnp.int32, (k + 1, ncb, TB), 0)
@@ -411,7 +428,9 @@ def _kernel_fused(pm_ref, text_ref, ops_ref, meta_ref, rows_ref, band_ref, *,
 def genasm_dc_pallas(pm, text, *, cfg: AlignerConfig, tile: int = 128,
                      interpret: bool = True):
     """pm: (5, NW, B) uint32; text: (W, B) int32 (kernel layout, problems
-    innermost).  Returns (dist (B,), band (k+1, ncb, nwb, B), levels (B,))."""
+    innermost).  Returns (dist (B,), band (k+1, ncb, nwb, B), levels (B,)).
+    No VMEM scratch at all: the DC state is loop-carried, the band is the
+    output block."""
     _, nw, B = pm.shape
     W = text.shape[0]
     assert W == cfg.W and nw == cfg.nw and B % tile == 0
@@ -435,9 +454,6 @@ def genasm_dc_pallas(pm, text, *, cfg: AlignerConfig, tile: int = 128,
             jax.ShapeDtypeStruct((1, B), jnp.int32),
             jax.ShapeDtypeStruct((1, B), jnp.int32),
         ],
-        scratch_shapes=[
-            pltpu.VMEM((2, W + 1, nw, tile), jnp.uint32),
-        ],
         interpret=interpret,
     )(pm, text)
     band, dist, lvl = out
@@ -451,7 +467,8 @@ def genasm_tb_fused_pallas(pm, text, *, cfg: AlignerConfig, commit_limit: int,
     """Fused DC+TB.  pm: (5, NW, B) uint32; text: (W, B) int32 (kernel
     layout).  Returns (ops (max_ops, B) int32 front-first with OP_NONE
     padding, meta (META_ROWS, B) int32 — see META_* row constants).  The
-    DENT band lives and dies in VMEM scratch."""
+    DENT band lives and dies in VMEM scratch — the only scratch there is
+    (`fused_scratch_shapes`)."""
     _, nw, B = pm.shape
     W = text.shape[0]
     assert W == cfg.W and nw == cfg.nw and B % tile == 0
@@ -459,7 +476,6 @@ def genasm_tb_fused_pallas(pm, text, *, cfg: AlignerConfig, commit_limit: int,
         max_ops = default_max_ops(cfg)
     if max_steps is None:
         max_steps = default_max_steps(cfg)
-    ncb, nwb, k = cfg.ncols_band, cfg.nwb, cfg.k
     grid = (B // tile,)
     kern = functools.partial(_kernel_fused, cfg=cfg, commit_limit=commit_limit,
                              max_ops=max_ops, max_steps=max_steps)
@@ -478,39 +494,25 @@ def genasm_tb_fused_pallas(pm, text, *, cfg: AlignerConfig, commit_limit: int,
             jax.ShapeDtypeStruct((max_ops, B), jnp.int32),
             jax.ShapeDtypeStruct((META_ROWS, B), jnp.int32),
         ],
-        scratch_shapes=[
-            pltpu.VMEM((2, W + 1, nw, tile), jnp.uint32),
-            pltpu.VMEM((k + 1, ncb, nwb, tile), jnp.uint32),
-        ],
+        scratch_shapes=fused_scratch_shapes(cfg, tile),
         interpret=interpret,
     )(pm, text)
     return ops, meta
 
 
-def vmem_bytes_tail(cfg: AlignerConfig, tile: int,
-                    max_ops: int | None = None) -> int:
-    """On-chip working set of the rectangular-tail fused kernel per problem
-    tile: the full (k+1, wt+1, NW) SENE store (no provable DENT band exists
-    for per-lane rectangular geometry) plus IO blocks and traceback state."""
-    wt = cfg.W + 4 * cfg.k
-    store = (cfg.k + 1) * (wt + 1) * cfg.nw * tile * 4
-    io = (5 * cfg.nw + wt + 4) * tile * 4
-    mo = (cfg.W + wt) if max_ops is None else max_ops
-    return store + io + (mo + META_ROWS + 16) * tile * 4
-
-
 def _kernel_tail_fused(pm_ref, text_ref, mlen_ref, nlen_ref, ops_ref, meta_ref,
                        rfull_ref, *, cfg: AlignerConfig, n_text: int,
                        commit_limit: int, max_ops: int, max_steps: int):
-    """Rectangular-tail fused DC+TB (the whole-read tail window on-chip).
+    """Rectangular-tail fused DC+TB, full-store fallback.
 
     Unlike the square main-window kernel the tail is rectangular and ragged:
     per-lane m_len <= W pattern chars against n_len <= n_text text chars.
-    No provable DENT band exists for that geometry, so the DP stores the
-    full SENE ('and') vectors for every (level, column) in VMEM scratch and
-    the traceback walks them in-kernel — the exact analogue of
-    core.windowing's jnp 'and'-store tail path, bit for bit, with neither
-    the store nor the walk ever leaving the chip.
+    This variant stores the full SENE ('and') vectors for every (level,
+    column) in VMEM scratch and the traceback walks them in-kernel — the
+    exact analogue of core.windowing's jnp 'and'-store tail path, bit for
+    bit, with neither the store nor the walk ever leaving the chip.  It is
+    dispatched only when the banded store (`_kernel_tail_banded`) is not a
+    strict win (cfg.tail_banded False, i.e. nwb == nw or forced 'full').
 
     Mirrors dc_jmajor semantics: columns beyond a lane's n_len are frozen
     copies of their left neighbour (hence of column n_len), dist reads the
@@ -644,6 +646,142 @@ def _kernel_tail_fused(pm_ref, text_ref, mlen_ref, nlen_ref, ops_ref, meta_ref,
     meta_ref[META_ROWS - 1, :] = jnp.zeros((TB,), jnp.int32)
 
 
+def _kernel_tail_banded(pm_ref, text_ref, mlen_ref, nlen_ref, ops_ref,
+                        meta_ref, band_ref, *, cfg: AlignerConfig, n_text: int,
+                        commit_limit: int, max_ops: int, max_steps: int):
+    """Rectangular-tail fused DC+TB with the Scrooge-style banded store.
+
+    The band proof (the tentpole): the traceback walk starts at the
+    per-lane cell (i = m_len-1, j = n_len) and every step moves i and/or j
+    down by one, spending at most dist <= k unit costs on indels — so at
+    any visited cell, i - j differs from the starting diagonal
+    (m_len - 1 - n_len) by at most k, and the walk's bit reads (at offsets
+    -1..+1 around the cursor) stay within [c(j)-k-1, c(j)+k+1] of the
+    per-lane column center c(j) = j + m_len - 1 - n_len.  That window is
+    2k+3 bits = nwb words: the kernel stores only those words per (level,
+    column), funnel-shifted from the live column exactly like the square
+    kernel's store_band — but with a per-lane *dynamic* base, since every
+    lane sits on its own diagonal.  Column 0 (R_0[d] = ones_below(d)) and
+    the i < 0 drain are analytic in zbit, so they need no store at all.
+
+    The fill is column-major (two live columns in the loop carry, all k+1
+    levels unrolled — no full-table scratch), with dc_jmajor's ragged
+    semantics preserved: columns beyond a lane's n_len freeze their left
+    neighbour, and dist reads the per-lane bit (m_len - 1) of the final
+    carried column.  d_end reproduces the whole-tile-ET level count
+    analytically (see _ids_dist_dend); the walk never visits a level above
+    its lane's dist, so the extra computed levels cannot change results.
+    """
+    W, k, nw, nwb = cfg.W, cfg.k, cfg.nw, cfg.nwb
+    m_pad = cfg.m_pad
+    TB = text_ref.shape[1]
+    u1 = jnp.uint32(1)
+    m_len = mlen_ref[0, :]
+    n_len = nlen_ref[0, :]
+    diag = m_len - 1 - n_len              # per-lane starting diagonal
+
+    def tail_base(jj):
+        """Lowest stored bit of column jj's window: k+1 below the per-lane
+        center, clipped into the padded pattern like _band_base."""
+        return jnp.clip(jj + diag - (k + 1), 0, m_pad - WORD * nwb)
+
+    def store_band(d, j, words):
+        base = tail_base(j)
+        w0 = base // WORD
+        s = (base % WORD).astype(jnp.uint32)
+        for b in range(nwb):
+            lo = words[0]
+            hi = words[0]
+            for w in range(nw):          # per-lane dynamic select, unrolled
+                lo = jnp.where(w0 + b == w, words[w], lo)
+                hi = jnp.where(w0 + b + 1 == w, words[w],
+                               jnp.where(w0 + b + 1 >= nw, jnp.uint32(0xFFFFFFFF),
+                                         hi))
+            win = jnp.where(s == 0, lo, (lo >> s) | (hi << (jnp.uint32(WORD) - s)))
+            band_ref[d, j - 1, b, :] = win
+
+    # ------- column-major fill: live columns in the carry, band stored -----
+    cols0 = [_ones_below_words(jnp.int32(d), nw, (TB,)) for d in range(k + 1)]
+
+    def col_body(j, carry):
+        prev = [list(c) for c in carry]
+        pm_j = _pm_lookup(pm_ref, text_ref[j - 1, :].astype(jnp.int32), nw)
+        live = j <= n_len
+        t = j - 1
+        cur = []
+        for d in range(k + 1):
+            below = cur[d - 1] if d else None
+            r = _next_column([prev[d]] if d == 0 else [prev[d], prev[d - 1]],
+                             below, pm_j, t, d, nw)
+            cur.append([jnp.where(live, rw, pw)
+                        for rw, pw in zip(r, prev[d])])
+        for d in range(k + 1):
+            store_band(d, j, cur[d])
+        return tuple(tuple(c) for c in cur)
+
+    last = jax.lax.fori_loop(1, n_text + 1, col_body,
+                             tuple(tuple(c) for c in cols0))
+
+    # dist from the final carried column (== frozen column n_len), exactly
+    # level_hit of the full-store variant; empty lanes (m_len == 0) never hit
+    tm = jnp.clip(m_len - 1, 0, m_pad - 1)
+    dist, d_end = _ids_dist_dend(last, tm // WORD,
+                                 (tm % WORD).astype(jnp.uint32),
+                                 m_len >= 1, cfg)
+
+    # ---------------- traceback phase: banded zbit ----------------
+    d_ids = jax.lax.broadcasted_iota(jnp.int32, (k + 1, n_text, TB), 0)
+    c_ids = jax.lax.broadcasted_iota(jnp.int32, (k + 1, n_text, TB), 1)
+    t_ids = jax.lax.broadcasted_iota(jnp.int32, (n_text, TB), 0)
+
+    def band_words(dd, jj):
+        """Per-lane gather of the window of (level dd, col jj); column 0 has
+        no store (analytic in zbit), so jj clips into 1..n_text."""
+        onehot = ((d_ids == jnp.clip(dd, 0, k)[None, None, :]) &
+                  (c_ids == (jnp.clip(jj, 1, n_text) - 1)[None, None, :]))
+        return [jnp.sum(jnp.where(onehot, band_ref[:, :, b, :], jnp.uint32(0)),
+                        axis=(0, 1), dtype=jnp.uint32) for b in range(nwb)]
+
+    def zbit(words, dd, jj, ii):
+        """bit ii of R_jj[dd] == 0 from the banded store; analytic for the
+        unstored boundaries: ii < 0 is the DP's first row (ED(0, jj) = jj),
+        jj <= 0 the first column (R_0[d] = ones_below(d): ED(ii+1, 0))."""
+        base = tail_base(jj)
+        off = ii - base
+        inband = (off >= 0) & (off < nwb * WORD)
+        offc = jnp.clip(off, 0, nwb * WORD - 1)
+        o = (offc % WORD).astype(jnp.uint32)
+        bit = (_word_select(words, offc // WORD) >> o) & u1
+        z = jnp.where(jj <= 0, ii < dd, (bit == 0) & inband)
+        return jnp.where(ii < 0, jj <= dd, z)
+
+    def text_at(jj):
+        onehot = t_ids == jnp.clip(jj - 1, 0, n_text - 1)[None, :]
+        return jnp.sum(jnp.where(onehot, text_ref[:, :], 0),
+                       axis=0).astype(jnp.int32)
+
+    def peq_at(cj, ii):
+        words = _pm_lookup(pm_ref, cj, nw)
+        iic = jnp.clip(ii, 0, m_pad - 1)
+        o = (iic % WORD).astype(jnp.uint32)
+        return ((_word_select(words, iic // WORD) >> o) & u1) == 0
+
+    i, j, d, nops, ops, rd, rf, done, ok = _tb_walk(
+        TB=TB, dist=dist, k=k, init_i=m_len - 1, init_j=n_len,
+        commit_limit=commit_limit, max_ops=max_ops, max_steps=max_steps,
+        avail_words=band_words, zbit=zbit, peq_at=peq_at, text_at=text_at)
+
+    ops_ref[:, :] = ops
+    meta_ref[META_DIST, :] = dist
+    meta_ref[META_LVL, :] = jnp.broadcast_to(d_end, (TB,)).astype(jnp.int32)
+    meta_ref[META_NOPS, :] = nops
+    meta_ref[META_RD, :] = rd
+    meta_ref[META_RF, :] = rf
+    meta_ref[META_DFIN, :] = d
+    meta_ref[META_OK, :] = ok.astype(jnp.int32)
+    meta_ref[META_ROWS - 1, :] = jnp.zeros((TB,), jnp.int32)
+
+
 def genasm_tail_fused_pallas(pm, text, m_len, n_len, *, cfg: AlignerConfig,
                              n_text: int, commit_limit: int, max_ops: int,
                              max_steps: int, tile: int = 128,
@@ -651,13 +789,16 @@ def genasm_tail_fused_pallas(pm, text, m_len, n_len, *, cfg: AlignerConfig,
     """Fused rectangular-tail DC+TB.  pm: (5, NW, B) uint32; text:
     (n_text, B) int32; m_len/n_len: (1, B) int32 (kernel layout, problems
     innermost).  Returns (ops (max_ops, B) int32, meta (META_ROWS, B) int32)
-    like genasm_tb_fused_pallas; the full SENE store lives and dies in VMEM
-    scratch — the tail window never touches HBM either."""
+    like genasm_tb_fused_pallas; the SENE store lives and dies in VMEM
+    scratch — banded (`cfg.tail_banded`, ~2x less scratch at the default
+    geometry) or full on the fallback — and the tail window never touches
+    HBM either.  Both variants are bit-identical on every output
+    (tests/test_kernel_fused.py, tests/test_differential.py)."""
     _, nw, B = pm.shape
     assert text.shape[0] == n_text and nw == cfg.nw and B % tile == 0
-    k = cfg.k
     grid = (B // tile,)
-    kern = functools.partial(_kernel_tail_fused, cfg=cfg, n_text=n_text,
+    body = _kernel_tail_banded if cfg.tail_banded else _kernel_tail_fused
+    kern = functools.partial(body, cfg=cfg, n_text=n_text,
                              commit_limit=commit_limit, max_ops=max_ops,
                              max_steps=max_steps)
     ops, meta = pl.pallas_call(
@@ -677,9 +818,7 @@ def genasm_tail_fused_pallas(pm, text, m_len, n_len, *, cfg: AlignerConfig,
             jax.ShapeDtypeStruct((max_ops, B), jnp.int32),
             jax.ShapeDtypeStruct((META_ROWS, B), jnp.int32),
         ],
-        scratch_shapes=[
-            pltpu.VMEM((k + 1, n_text + 1, nw, tile), jnp.uint32),
-        ],
+        scratch_shapes=tail_scratch_shapes(cfg, tile, n_text),
         interpret=interpret,
     )(pm, text, m_len, n_len)
     return ops, meta

@@ -10,10 +10,15 @@ pallas_call is wrapped in ``shard_map`` over the mesh's pair axes
 its local slice of the problem axis — the batch is padded to
 ``tile * n_pair_shards`` first so every shard holds whole kernel tiles.
 Per-lane kernel results are independent of tile composition (padding
-lanes solve at level 0 and only whole-tile early termination sees them),
+lanes solve at level 0, so only the per-tile ``levels`` statistic — the
+analytic whole-tile-ET level count — sees them, and never as the max),
 and the cross-lane ``levels`` reduction is taken OUTSIDE the shard_map on
 the global array, so sharded dispatch is bit-identical to single-device
 dispatch (asserted by tests/test_multidevice.py).
+
+``cfg`` is a static jit argument, so knobs that pick a kernel body —
+notably ``cfg.tail_store``, which selects the banded vs full-store tail
+kernel — resolve at trace time and key separate executables.
 """
 from __future__ import annotations
 
@@ -162,7 +167,12 @@ def genasm_tail_fused_op(pat_codes, text_codes, m_len, n_len, *,
     m_len); text_codes: (B, n_text) reversed tail texts (sentinel-padded
     past n_len).  Batch-padding lanes are trivial 'A' vs 'A' one-char
     problems (m_len = n_len = 1): they solve at level 0, so they never
-    stall the kernel's whole-tile early termination, and are trimmed."""
+    stall the kernel's (analytic or looped) whole-tile early termination,
+    and are trimmed.
+
+    The SENE store stays in VMEM scratch either way; cfg.tail_banded picks
+    the Scrooge-style banded store vs the full-table fallback at trace
+    time — bit-identical outputs, ~2x less scratch when banded."""
     B = pat_codes.shape[0]
     tile, unit = _pad_unit(cfg, tile, mesh)
     pat_codes, text_codes = _pad_to_tile(pat_codes, text_codes, unit)

@@ -149,6 +149,21 @@ def test_fused_backend_bit_identical(corpus, diff_aligned):
                           "pallas_fused")
 
 
+def test_fused_banded_tail_bit_identical(corpus, diff_aligned):
+    """The Scrooge-style banded tail store, FORCED on (this geometry has
+    nwb == nw, so 'auto' falls back to the full store — this leg pins the
+    fallback-boundary case where the band covers whole words), must still
+    be bit-identical to jnp across the mixed-profile corpus, rescue
+    included."""
+    import dataclasses
+    reads, refs, _ = corpus
+    cfg = dataclasses.replace(CFG, tail_store="band")
+    assert not CFG.tail_band_supported          # boundary: no strict win
+    res = GenASMAligner(cfg, rescue_rounds=ROUNDS,
+                        backend="pallas_fused").align(reads, refs)
+    _assert_bit_identical(res, diff_aligned("jnp"), "banded tail")
+
+
 @pytest.mark.slow
 def test_split_pallas_backend_bit_identical(corpus, diff_aligned):
     """The split kernel (DC on-chip, band to HBM, jnp traceback) too; its

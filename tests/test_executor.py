@@ -347,3 +347,101 @@ def test_adaptive_lanes_shrink_regrow_and_stay_bit_identical(rng):
     _assert_results_equal(AlignResult.from_records(recs),
                           AlignResult.from_records(srecs))
     assert sta.stats["lane_class_steps"] == 0      # static stayed static
+
+
+# --------------------------------------------------------------------------
+# occupancy-adaptive in-flight window
+# --------------------------------------------------------------------------
+
+def test_adaptive_inflight_widens_narrows_and_stays_bit_identical(rng):
+    """The in-flight window follows the same sliding occupancy signal as
+    lane classes, session-wide: saturated dispatches widen max_inflight by
+    one per full window up to inflight_ceiling; all-partial (flush-driven)
+    windows narrow it toward 1 — and like lane classes it is purely a
+    scheduling choice (results == the static twin's on the same stream)."""
+    from tests.conftest import mutate_seq
+    refs = [rng.integers(0, 4, 26).astype(np.uint8) for _ in range(22)]
+    reads = [mutate_seq(f, 2, rng) for f in refs]
+    kw = dict(rescue_rounds=1, batch_lanes=2)
+    ada = plan(DCFG, adaptive_inflight=True, inflight_ceiling=3,
+               max_inflight=1, occupancy_window=2, **kw)
+    sta = plan(DCFG, max_inflight=1, **kw)
+    assert ada._max_inflight == 1
+    futs = []
+    # phase 1 — saturation: 8 pairs = 4 full dispatches at batch_lanes=2;
+    # each full window of 2 widens by one: 1 -> 2 -> 3 (the ceiling)
+    futs += [ada.submit(reads[i], refs[i]) for i in range(8)]
+    assert ada._max_inflight == 3
+    assert ada.stats["inflight_steps"] == 2
+    # phase 2 — more pressure cannot exceed the ceiling
+    futs += [ada.submit(reads[8 + i], refs[8 + i]) for i in range(4)]
+    assert ada._max_inflight == 3
+    # phase 3 — sparse: flush-driven singles narrow back toward 1
+    for j in range(4):
+        futs.append(ada.submit(reads[12 + j], refs[12 + j]))
+        ada.flush()
+    assert ada._max_inflight == 1
+    assert ada.stats["inflight_steps"] == 4
+    st = ada.session_stats()
+    assert st["inflight"]["max_inflight"] == 1
+    assert st["inflight"]["ceiling"] == 3
+    recs = [f.result() for f in futs]
+    # the static twin sees the same stream (flushes at the same points)
+    sfuts = [sta.submit(reads[i], refs[i]) for i in range(12)]
+    for j in range(4):
+        sfuts.append(sta.submit(reads[12 + j], refs[12 + j]))
+        sta.flush()
+    sta.flush()
+    srecs = [f.result() for f in sfuts]
+    _assert_results_equal(AlignResult.from_records(recs),
+                          AlignResult.from_records(srecs))
+    assert sta.stats["inflight_steps"] == 0        # static stayed static
+    assert "inflight" not in sta.session_stats()
+
+
+def test_adaptive_inflight_threaded_queue_at_ceiling_and_clean(rng):
+    """Threaded executor under an adaptive in-flight window: the retire
+    queue is allocated at the CEILING (widening never reallocates), the
+    current bound governs backpressure, results match the sync twin, and
+    shutdown stays clean."""
+    reads, refs = _exact_pairs(rng, 8, 24)
+    kw = dict(rescue_rounds=0, batch_lanes=2, max_inflight=1,
+              adaptive_inflight=True, inflight_ceiling=4,
+              occupancy_window=2)
+    with plan(DCFG, executor="thread", **kw) as s:
+        futs = [s.submit(r, f) for r, f in zip(reads, refs)]
+        s.flush()
+        assert s._retire_q.maxsize == 4            # ceiling, not max_inflight
+        recs = [f.result() for f in futs]
+        assert s._max_inflight > 1                 # saturation widened it
+    assert s._retire_thread is None                # close joined the thread
+    assert all(r["dist"] == 0 for r in recs)       # exact matches
+
+
+def test_adaptive_inflight_preserves_poison_semantics(rng):
+    """Poison-on-exception is unchanged under adaptive sizing: a raising
+    retire fails its own futures with the original exception, bystanders
+    with SessionPoisonedError, and later submits refuse."""
+    (r24a, r24b), (f24a, f24b) = _exact_pairs(rng, 2, 24)
+    (r100,), (f100,) = _exact_pairs(rng, 1, 100)
+    s = plan(DCFG, rescue_rounds=0, batch_lanes=2, executor="thread",
+             adaptive_inflight=True, inflight_ceiling=4)
+    boom = RuntimeError("decode exploded")
+
+    def _boom(d):
+        raise boom
+
+    s._retire = _boom
+    fa = s.submit(r24a, f24a)
+    fq = s.submit(r100, f100)          # different bucket: stays queued
+    fb = s.submit(r24b, f24b)          # fills the 24-bucket -> dispatch
+    with pytest.raises(RuntimeError, match="decode exploded"):
+        fa.result()
+    with pytest.raises(RuntimeError, match="decode exploded"):
+        fb.result()
+    with pytest.raises(SessionPoisonedError):
+        fq.result()
+    with pytest.raises(SessionPoisonedError):
+        s.submit(r24a, f24a)
+    s.close(drain=False)
+    assert s._retire_thread is None

@@ -157,6 +157,69 @@ def test_fused_tile_grouping_invariance(rng):
                                       err_msg=key)
 
 
+def _tail_batch(rng, cfg, B, wt):
+    """Ragged reversed tails (sentinel-padded), incl. the edge lanes the
+    band proof's clips must survive: empty pattern, empty text, both."""
+    from repro.core.bitops import SENTINEL_PAT, SENTINEL_TEXT
+    W, k = cfg.W, cfg.k
+    pat = np.full((B, W), SENTINEL_PAT, np.uint8)
+    txt = np.full((B, wt), SENTINEL_TEXT, np.uint8)
+    ml = np.zeros(B, np.int32)
+    nl = np.zeros(B, np.int32)
+    edge = [(0, 3), (3, 0), (0, 0)]
+    for b in range(B):
+        if b < len(edge):
+            m, n = edge[b]
+        else:
+            m = int(rng.integers(1, W + 1))
+            n = int(np.clip(m + rng.integers(-k, k + 1), 1, wt))
+        if m:
+            p = rng.integers(0, 4, m).astype(np.uint8)
+            pat[b, :m] = p[::-1]
+        if n:
+            t = mutate_seq(pat[b, :m][::-1].copy() if m else
+                           rng.integers(0, 4, n).astype(np.uint8),
+                           int(rng.integers(0, k + 1)), rng)[:n]
+            if len(t) < n:
+                t = np.concatenate(
+                    [t, rng.integers(0, 4, n - len(t)).astype(np.uint8)])
+            txt[b, :n] = t[::-1]
+        ml[b], nl[b] = m, n
+    return pat, txt, ml, nl
+
+
+@pytest.mark.parametrize("W,O,k", [
+    (64, 24, 12),   # headline geometry: band is a strict win (nwb < nw)
+    (32, 10, 15),   # nwb = 2: two-word band windows
+    (16, 6, 4),     # boundary: nwb == nw — band forced, no strict win
+])
+def test_tail_banded_bit_identical_to_full_store(W, O, k, rng):
+    """The tentpole's bit-exactness bar at kernel level: the Scrooge-style
+    banded tail store (per-lane diagonal DENT window, analytic column 0)
+    produces the same traceback dict as the full-SENE-table fallback on
+    ragged differential tails — every key, every lane, including empty
+    pattern/text edge lanes and a ragged last tile."""
+    import dataclasses
+    from repro.kernels.ops import genasm_tail_fused_op
+    full = AlignerConfig(W=W, O=O, k=k, tail_store="full")
+    band = dataclasses.replace(full, tail_store="band")
+    assert band.tail_banded and not full.tail_banded
+    wt = W + 4 * k
+    pat, txt, ml, nl = _tail_batch(rng, full, 6, wt)   # 6 lanes, tile=4
+    args = (jnp.asarray(pat), jnp.asarray(txt), jnp.asarray(ml),
+            jnp.asarray(nl))
+    kw = dict(n_text=wt, commit_limit=2 * (W + wt), max_ops=W + wt,
+              max_steps=W + wt + 4, tile=4)
+    a = genasm_tail_fused_op(*args, cfg=full, **kw)
+    b = genasm_tail_fused_op(*args, cfg=band, **kw)
+    assert set(a) == set(b)
+    for key in a:
+        np.testing.assert_array_equal(np.array(a[key]), np.array(b[key]),
+                                      err_msg=key)
+    assert bool(np.array(a["ok"]).all())
+    assert bool(np.array(a["solved"]).any())           # corpus nontrivial
+
+
 from jax.experimental.pallas import tpu as pltpu  # noqa: E402
 
 _TPU_INTERPRET = getattr(pltpu, "force_tpu_interpret_mode", None)

@@ -13,6 +13,8 @@ What tier-1 proves (one subprocess, the differential corpus profiles):
     dispatch pads globally and shards evenly) and a rescue ladder where
     only SOME shards hold failed lanes (the round gate is a global any);
   * the sharded ladder still costs exactly 1 upload + 1 download;
+  * the Scrooge-style banded tail store (tail_store='band', forced at
+    the no-strict-win fallback boundary) is bit-identical on the mesh;
   * the collapsed make_align_step factory: sharded summaries == eager
     single-device summaries, and per-lane outputs actually land sharded
     over all 8 devices;
@@ -97,6 +99,18 @@ def test_sharded_fused_rescue_bit_identical_and_engine_padding():
     print('PARITY OK', int(base.failed.sum()),
           int((base.k_used > cfg.k).sum()))
 
+    # ---- banded tail store on the mesh: same contract ----
+    # at this geometry the band is no strict win (nwb == nw), so 'auto'
+    # picks the full store — force 'band' so the Scrooge-style tail body
+    # itself runs under the 8-device shard_map, at the fallback boundary
+    import dataclasses
+    cfg_band = dataclasses.replace(cfg, tail_store='band')
+    assert not cfg.tail_band_supported and cfg_band.tail_banded
+    band = GenASMAligner(cfg_band, rescue_rounds=1, backend='pallas_fused',
+                         mesh=mesh).align(reads, refs)
+    assert_bit_identical(band, base, 'sharded banded tail')
+    print('BAND OK')
+
     # ---- engine: ragged 13-request stream on the mesh ----
     from repro.serve.engine import AlignmentEngine, AlignRequest
     eng = AlignmentEngine(cfg, batch_size=13, rescue_rounds=1,
@@ -179,7 +193,7 @@ def test_sharded_fused_rescue_bit_identical_and_engine_padding():
     print('FACTORY OK', int(summ['n_failed']), int(summ['total_edits']))
     """)
     assert "PARITY OK" in out and "ENGINE OK" in out and "FACTORY OK" in out
-    assert "SESSION-THREAD OK" in out
+    assert "SESSION-THREAD OK" in out and "BAND OK" in out
 
 
 @pytest.mark.slow

@@ -1,0 +1,162 @@
+"""Scratch accounting: the footprint numbers are real, not estimates.
+
+Three layers must agree word for word, per fused kernel, per (W, k, tile)
+grid point:
+
+  1. the ``pltpu.VMEM`` scratch shapes the kernels actually declare
+     (kernels.genasm_dc.fused_scratch_shapes / tail_scratch_shapes),
+  2. the ``vmem_bytes`` / ``vmem_bytes_tail`` numbers the benchmarks and
+     the bucket planner consume,
+  3. the analytic counting model (core.counting.kernel_scratch_words /
+     tail_scratch_words) the paper-claim report is computed from.
+
+Plus the dispatch policy around them: ``tail_store='auto'`` picks the
+Scrooge-style banded store exactly when it is a strict win (nwb < nw),
+forcing works both ways, and the planner's ``lane_tile='auto'`` ceilings
+follow the bytes.  Pure shape math — no Pallas compiles, tier-1 fast.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.config import AlignerConfig, resolve_config
+from repro.core.counting import (kernel_scratch_words, reduction_report,
+                                 tail_scratch_words)
+from repro.core.windowing import plan_lane_tile
+from repro.kernels.genasm_dc import (fused_scratch_shapes, tail_scratch_shapes,
+                                     vmem_bytes, vmem_bytes_tail)
+
+# (W, k) grid: headline geometry, a wide-k square, a band-not-a-win
+# boundary case (nwb == nw at W=16/k=4 and W=32/k=15), and a multi-word one
+GRID = [(64, 12), (64, 16), (32, 15), (32, 7), (16, 4), (128, 15)]
+TILES = [8, 256]
+
+
+def _cfg(W, k, **kw):
+    return AlignerConfig(W=W, O=max(1, W // 3), k=k, **kw)
+
+
+def _declared_bytes(specs) -> int:
+    return sum(int(np.prod(s.shape)) * np.dtype(s.dtype).itemsize
+               for s in specs)
+
+
+@pytest.mark.parametrize("W,k", GRID)
+@pytest.mark.parametrize("tile", TILES)
+def test_square_fused_declared_equals_reported_equals_model(W, k, tile):
+    """After the store elimination the square kernels' only materialised
+    table is the DENT band: declared VMEM == vmem_bytes == counting."""
+    cfg = _cfg(W, k)
+    declared = _declared_bytes(fused_scratch_shapes(cfg, tile))
+    assert declared == vmem_bytes(cfg, tile)
+    assert declared == 4 * kernel_scratch_words(cfg, tile)
+
+
+@pytest.mark.parametrize("W,k", GRID)
+@pytest.mark.parametrize("tile", TILES)
+@pytest.mark.parametrize("store", ["auto", "band", "full"])
+def test_tail_declared_equals_reported_equals_model(W, k, tile, store):
+    """Same tri-equality for the rectangular-tail kernel in every store
+    mode, including the no-band-proof fallback boundary (auto == full
+    when nwb == nw)."""
+    cfg = _cfg(W, k, tail_store=store)
+    n_text = cfg.W + 4 * cfg.k
+    declared = _declared_bytes(tail_scratch_shapes(cfg, tile, n_text))
+    assert declared == vmem_bytes_tail(cfg, tile, n_text)
+    assert declared == 4 * tail_scratch_words(cfg, tile, n_text)
+    # the shapes follow the mode: banded keeps nwb band words per column
+    # with column 0 analytic, full keeps the whole (n_text+1, nw) table
+    (spec,) = tail_scratch_shapes(cfg, tile, n_text)
+    if cfg.tail_banded:
+        assert spec.shape == (cfg.k + 1, n_text, cfg.nwb, tile)
+    else:
+        assert spec.shape == (cfg.k + 1, n_text + 1, cfg.nw, tile)
+
+
+@pytest.mark.parametrize("W,k", GRID)
+def test_auto_mode_bands_exactly_when_strict_win(W, k):
+    """'auto' == 'band' iff nwb < nw; at the boundary (nwb == nw) the band
+    would not shrink the store, so auto falls back to the full table —
+    and forcing either mode is always honoured."""
+    auto, band, full = (_cfg(W, k, tail_store=s)
+                        for s in ("auto", "band", "full"))
+    assert band.tail_banded and not full.tail_banded
+    assert auto.tail_banded == auto.tail_band_supported == (auto.nwb < auto.nw)
+    n_text = auto.W + 4 * auto.k
+    if auto.tail_band_supported:
+        assert vmem_bytes_tail(band, 8, n_text) < vmem_bytes_tail(full, 8,
+                                                                  n_text)
+        assert vmem_bytes_tail(auto, 8, n_text) == vmem_bytes_tail(band, 8,
+                                                                   n_text)
+    else:
+        assert vmem_bytes_tail(auto, 8, n_text) == vmem_bytes_tail(full, 8,
+                                                                   n_text)
+
+
+def test_headline_reduction_is_at_least_2x():
+    """The PR claim at the headline geometry (W=64, O=24, k=12, tile=256):
+    banded tail scratch is >= 2x smaller than the full store."""
+    cfg = AlignerConfig(W=64, O=24, k=12)
+    full = dataclasses.replace(cfg, tail_store="full")
+    assert cfg.tail_banded                      # auto picks the band here
+    b, f = vmem_bytes_tail(cfg, 256), vmem_bytes_tail(full, 256)
+    assert b == 1_490_944 and f == 3_008_512    # the committed bench rows
+    assert f / b >= 2.0
+
+
+def test_reduction_report_reconciles_with_kernel_scratch():
+    """Satellite claim: counting's vmem_bytes_per_problem IS the fused
+    kernel's declared per-problem band scratch — one source of truth, not
+    two estimates (any avg_levels: footprint is allocation, not fill)."""
+    for W, k in GRID:
+        cfg = _cfg(W, k)
+        rep = reduction_report(cfg, avg_levels=1.7)
+        per_problem = rep["vmem_bytes_per_problem"]
+        assert per_problem == 4 * kernel_scratch_words(cfg, 1)
+        for tile in TILES:
+            assert per_problem * tile == vmem_bytes(cfg, tile)
+
+
+def test_planner_tile_follows_the_bytes():
+    """plan_lane_tile spends exactly the reclaimed scratch: quantised,
+    clamped to [quantum, ceiling], and the planned tile's worst-kernel
+    footprint fits the budget while one more quantum would not (unless
+    clamped)."""
+    budget = 16 * 2**20
+    for W, k in GRID:
+        for store in ("auto", "full"):
+            cfg = _cfg(W, k, tail_store=store)
+            tile = plan_lane_tile(cfg, budget, quantum=128, ceiling=4096)
+            assert tile % 128 == 0 and 128 <= tile <= 4096
+            worst = max(vmem_bytes(cfg, tile),
+                        vmem_bytes_tail(cfg, tile))
+            if tile < 4096:
+                assert worst <= budget
+                bigger = max(vmem_bytes(cfg, tile + 128),
+                             vmem_bytes_tail(cfg, tile + 128))
+                assert bigger > budget or tile == 128
+    # the headline geometry: the banded tail buys exactly a 2x wider tile
+    banded = plan_lane_tile(AlignerConfig(W=64, O=24, k=12))
+    full = plan_lane_tile(AlignerConfig(W=64, O=24, k=12, tail_store="full"))
+    assert (banded, full) == (2816, 1408)
+
+
+def test_lane_tile_auto_resolves_through_the_planner():
+    """resolve_config/plan accept lane_tile='auto' and bake in the planned
+    ceiling against the final geometry (tail_store included)."""
+    c = resolve_config(None, W=64, O=24, k=12, lane_tile="auto")
+    assert c.lane_tile == plan_lane_tile(c) == 2816
+    c2 = resolve_config(None, W=64, O=24, k=12, lane_tile="auto",
+                        tail_store="full")
+    assert c2.lane_tile == 1408
+    # explicit tiles pass through untouched
+    assert resolve_config(None, W=64, O=24, k=12, lane_tile=64).lane_tile == 64
+
+
+def test_fingerprint_covers_tail_store():
+    """tail_store shapes an executable (it picks the kernel body), so it
+    must key the compile cache: different store modes, different specs."""
+    a = _cfg(64, 12, tail_store="auto")
+    b = _cfg(64, 12, tail_store="full")
+    assert a.fingerprint() != b.fingerprint()
