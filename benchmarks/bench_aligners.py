@@ -264,6 +264,50 @@ def session_concurrent(n_reads=24, max_len=320, seed=11, backend="jnp",
     return rows, derived
 
 
+def mapper_stream(n_reads=24, read_len=400, genome_len=200_000, decoys=4,
+                  seed=13, backend="jnp"):
+    """The end-to-end mapping funnel in numbers: seed -> chain -> X-drop
+    pre-filter -> AlignSession on a decoy-rich simulated read batch.
+    Reports steady-state mapped-reads/s (the gated throughput), the
+    candidate-kill rate the pre-filter earns its place with, and index
+    build time / density for context."""
+    from repro.data.genome import plant_decoys
+    from repro.mapper import MapperConfig, ReadMapper
+
+    g = synth_genome(genome_len, seed=seed)
+    rs = simulate_reads(g, n_reads, ReadSimConfig(read_len=read_len,
+                                                  error_rate=0.10,
+                                                  seed=seed + 1))
+    g, decoy_pos = plant_decoys(g, rs, decoys_per_read=decoys,
+                                chunk=max(160, read_len // 4),
+                                seed=seed + 2)
+
+    t0 = time.time()
+    mapper = ReadMapper(g, MapperConfig(), backend=backend,
+                        W=32, O=12, k=8, rescue_rounds=2, batch_lanes=32)
+    t_index = time.time() - t0
+
+    rows, derived = [], {}
+    with mapper:
+        t = _median_time(lambda: mapper.map_batch(rs.reads))
+        out = mapper.map_batch(rs.reads)
+    st = out.stats
+    reads_s = n_reads / t
+    hits = sum(1 for mr, tp in zip(out.mapped, rs.true_pos)
+               if mr.ok and abs(mr.ref_start - tp) <= 20)
+    rows.append((f"mapper/map_stream_{backend}", t * 1e6 / n_reads,
+                 f"mapped_reads_per_s={reads_s:.1f}_kill_rate="
+                 f"{st['kill_rate']:.2f}_true_locus={hits}/{n_reads}"))
+    derived["mapper_mapped_reads_per_s"] = reads_s
+    derived["mapper_kill_rate"] = st["kill_rate"]
+    derived["mapper_candidates_per_read"] = st["n_candidates"] / n_reads
+    derived["mapper_true_locus_frac"] = hits / n_reads
+    derived["mapper_index_build_s"] = t_index
+    derived["mapper_index_density"] = mapper.index.stats()["density"]
+    assert hits / n_reads >= 0.9, "mapper bench lost the true loci"
+    return rows, derived
+
+
 def multidevice(n_devices=8, n_reads=32, read_len=240, seed=5,
                 backend="jnp"):
     """Sharded-vs-single throughput on `n_devices` forced host devices.

@@ -39,7 +39,8 @@ import sys
 #: substrings of a dotted metric path that make it gated, with the sign of
 #: a regression: +1 = lower is worse (throughput), -1 = higher is worse
 #: (footprint).  First match wins.
-GATED = (("pairs_per_s", +1), ("vmem_bytes", -1))
+GATED = (("pairs_per_s", +1), ("mapped_reads_per_s", +1),
+         ("vmem_bytes", -1))
 
 
 def _metric_sign(path: str) -> int | None:
@@ -92,7 +93,13 @@ def compare(current: dict, baseline: dict, threshold: float):
     removed = sorted(set(base) - set(cur))
     for name in sorted(set(cur) & set(base)):
         c, b = cur[name], base[name]
-        delta = (c - b) / b if b else 0.0
+        if b == 0:
+            # a zero baseline gates nothing: the floor c >= 0 (or ceiling
+            # c <= 0) is trivially true for any throughput and the delta
+            # is undefined — surface it instead of a misleading "ok +0.0%"
+            rows.append((name, b, c, None, "zero-baseline (not gated)"))
+            continue
+        delta = (c - b) / b
         if _metric_sign(name) > 0:                 # throughput: floor
             ok = c >= b * (1.0 - threshold)
         else:                                      # footprint: ceiling

@@ -70,6 +70,15 @@ def main() -> None:
           f"{derived['concurrent_overlap_gain_jnp']:.2f}x_thread_vs_sync")
     all_derived["session_concurrent"] = derived
 
+    # the mapping front half: seed/chain/pre-filter funnel feeding the
+    # session — mapped-reads/s is gated by compare.py like pairs/s
+    rows, derived = bench_aligners.mapper_stream(
+        n_reads=12 if args.fast else 24,
+        read_len=300 if args.fast else 400,
+        genome_len=100_000 if args.fast else 200_000)
+    emit(rows)
+    all_derived["mapper"] = derived
+
     from benchmarks import bench_memory
     rows, derived = bench_memory.table()
     emit(rows)

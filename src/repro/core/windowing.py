@@ -95,7 +95,16 @@ def plan_lane_tile(cfg: AlignerConfig, vmem_budget_bytes: int = 16 * 2**20,
     per_lane = 4 * max(kernel_scratch_words(cfg, 1),
                        tail_scratch_words(cfg, 1))
     tile = (vmem_budget_bytes // (per_lane * quantum)) * quantum
-    return int(min(max(tile, quantum), ceiling))
+    if tile == 0:
+        # flooring to one quantum here would SILENTLY over-commit VMEM:
+        # the caller asked for a budget the geometry cannot meet, and the
+        # kernel would launch with more scratch than the budget allows
+        raise ValueError(
+            f"one lane quantum of scratch does not fit the VMEM budget: "
+            f"geometry W={cfg.W} k={cfg.k} needs {per_lane * quantum:,} "
+            f"bytes for {quantum} lanes but vmem_budget_bytes="
+            f"{vmem_budget_bytes:,}")
+    return int(min(tile, ceiling))
 
 
 def _slice_rev(seq, pos, width, length):

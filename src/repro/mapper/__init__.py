@@ -1,0 +1,22 @@
+"""repro.mapper — the mapping front half: minimizer index, colinear
+chaining, X-drop pre-filter, and the ReadMapper pipeline that feeds
+surviving candidates through the AlignSession front door.
+
+    from repro.mapper import ReadMapper, MapperConfig
+    with ReadMapper(genome, backend="auto") as m:
+        out = m.map_batch(reads)        # strings or encoded codes
+        out.mapped[0].cigar, out.stats["kill_rate"]
+
+docs/mapper.md walks the stages and tuning.
+"""
+from .chain import Candidate, chain_anchors
+from .index import MinimizerIndex, minimizers
+from .pipeline import (CandidateOutcome, MapBatchResult, MappedRead,
+                       MapperConfig, ReadMapper)
+from .prefilter import pack_pairs, xdrop_extend
+
+__all__ = [
+    "Candidate", "chain_anchors", "MinimizerIndex", "minimizers",
+    "CandidateOutcome", "MapBatchResult", "MappedRead", "MapperConfig",
+    "ReadMapper", "pack_pairs", "xdrop_extend",
+]

@@ -1,0 +1,114 @@
+"""Banded X-drop pre-filter: kill hopeless candidates before alignment.
+
+LOGAN (arXiv:2002.05200) showed X-drop is the GPU-friendly pruning
+idiom: a fixed-shape banded score wavefront, no data-dependent control
+flow, terminated by masking instead of branching.  This is that filter
+as vectorized jnp — one jitted call scores EVERY (read, candidate)
+prefix pair of a batch on-device, and the mapper drops candidates whose
+best extension score never clears a fraction of the scored prefix.
+
+The DP is the classic antidiagonal wavefront over a diagonal band:
+cell (i, j) lives at wave d = i + j, offset c = i - j in [-band, band],
+and depends only on waves d-1 (gap moves, offset +-1) and d-2 (the
+match/mismatch diagonal, same offset) — so every wave updates all 2b+1
+offsets of all N lanes in one vector op and a lane's whole score table
+is two live waves, nothing is ever stored.  Per lane we track the best
+score seen; a lane whose current wave drops more than ``x_drop`` below
+its best is frozen (the X-drop termination), exactly LOGAN's semantics
+at fixed shapes.
+
+Scoring is +1 match, -2 mismatch, -2 gap.  The penalties MUST outweigh
+the match reward: with unit penalties the optimal banded alignment of
+two *random* DNA strings drifts upward (~+0.3/base — the expected LCS
+of random 4-letter text covers ~65% of it), so decoys would outrun the
+X-drop.  At 1:2 the random-path drift is firmly negative, a decoy lane
+freezes within a few dozen waves with a best near 0, while a true
+candidate at error rate e still gains ~(1 - 3e) per base — ~0.7/base at
+the default 10% profile.  The keep threshold (``min_score_frac`` in the
+pipeline) sits in the wide gap between the two populations —
+docs/mapper.md tabulates the tuning.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.windowing import SENTINEL_READ, SENTINEL_REF
+
+#: "minus infinity" for int32 score cells: deep enough that a dead cell
+#: can never win, shallow enough that D gap penalties can't underflow.
+_NEG = -(1 << 20)
+
+
+@partial(jax.jit, static_argnames=("band", "x_drop", "match", "mismatch",
+                                   "gap"))
+def xdrop_extend(reads, refs, *, band: int = 16, x_drop: int = 24,
+                 match: int = 1, mismatch: int = 2, gap: int = 2):
+    """Best banded X-drop extension score per lane.
+
+    reads: (N, S)        uint8 codes, SENTINEL_READ-padded past each read.
+    refs:  (N, S + band) uint8 codes, SENTINEL_REF-padded past each slice
+           (the two sentinels never compare equal, so padding is
+           automatically mismatch — no length arrays needed).
+    Returns (N,) int32 best scores, anchored at cell (0, 0): extension
+    starts where the chain said the alignment starts.
+    """
+    N, S = reads.shape
+    Sr = refs.shape[1]
+    C = 2 * band + 1
+    offs = jnp.arange(-band, band + 1)
+    neg = jnp.full((N, C), _NEG, jnp.int32)
+    wave0 = jnp.where(offs == 0, 0, _NEG).astype(jnp.int32)
+    wave0 = jnp.broadcast_to(wave0, (N, C))
+
+    def step(carry, d):
+        prev1, prev2, best, alive = carry
+        i = (d + offs) // 2
+        j = (d - offs) // 2
+        # off-parity offsets are never populated (wave0 seeds only c=0 and
+        # every move flips d and c parity together), but the geometric
+        # bounds must be explicit so clipped gathers can't alias real chars
+        ok_cell = (((d + offs) % 2) == 0) & (i >= 0) & (j >= 0) & \
+                  (i <= S) & (j <= Sr)
+        ok_char = ok_cell & (i >= 1) & (j >= 1)
+        rc = reads[:, jnp.clip(i - 1, 0, S - 1)]
+        fc = refs[:, jnp.clip(j - 1, 0, Sr - 1)]
+        s = jnp.where((rc == fc) & ok_char[None, :],
+                      jnp.int32(match), jnp.int32(-mismatch))
+        diag = prev2 + s
+        up = jnp.concatenate([neg[:, :1], prev1[:, :-1]], axis=1) - gap
+        left = jnp.concatenate([prev1[:, 1:], neg[:, :1]], axis=1) - gap
+        cur = jnp.maximum(diag, jnp.maximum(up, left))
+        cur = jnp.where(ok_cell[None, :], cur, _NEG)
+        wave_best = cur.max(axis=1)
+        best = jnp.where(alive, jnp.maximum(best, wave_best), best)
+        alive = alive & (wave_best >= best - x_drop)
+        cur = jnp.where(alive[:, None], cur, _NEG)   # freeze: X-drop stop
+        return (cur, prev1, best, alive), None
+
+    carry = (wave0, neg, jnp.zeros((N,), jnp.int32), jnp.ones((N,), bool))
+    carry, _ = jax.lax.scan(step, carry, jnp.arange(1, S + Sr + 1))
+    return carry[2]
+
+
+def pack_pairs(read_prefixes, ref_slices, seg_len: int, band: int,
+               lanes: int | None = None):
+    """Pad a ragged batch of (read prefix, ref slice) code arrays into the
+    sentinel-padded (N, seg_len) / (N, seg_len + band) arrays
+    ``xdrop_extend`` consumes.  ``lanes`` pads the lane count too (the
+    pipeline buckets N to a power of two so the jitted wavefront compiles
+    per bucket, not per batch size); pad lanes are all-sentinel and score
+    0 — callers slice them off."""
+    n = len(read_prefixes)
+    lanes = n if lanes is None else lanes
+    reads = np.full((lanes, seg_len), SENTINEL_READ, np.uint8)
+    refs = np.full((lanes, seg_len + band), SENTINEL_REF, np.uint8)
+    for i, (r, f) in enumerate(zip(read_prefixes, ref_slices)):
+        r = np.asarray(r, np.uint8)[:seg_len]
+        f = np.asarray(f, np.uint8)[:seg_len + band]
+        reads[i, :len(r)] = r
+        refs[i, :len(f)] = f
+    return reads, refs

@@ -1,0 +1,70 @@
+"""benchmarks/compare.py gate semantics: what gates, what only reports.
+
+The perf-trajectory gate is CI policy, so its edge cases are tested like
+code: a zero baseline must not silently pass (regression), new metrics
+report-but-don't-gate, and the direction signs gate floors vs ceilings
+correctly.
+"""
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.compare import compare, render  # noqa: E402
+
+
+def _report(**derived):
+    return {"derived": derived}
+
+
+def test_zero_baseline_reports_but_never_gates():
+    """Regression: baseline 0 made `delta = 0.0` and the throughput floor
+    `c >= 0 * (1 - t)` trivially true — any current value rendered as
+    `ok +0.0%`.  It must surface as its own ungated status instead."""
+    base = _report(session={"pairs_per_s": 0.0})
+    cur = _report(session={"pairs_per_s": 123.0})
+    rows, regressions, added, removed = compare(cur, base, 0.30)
+    assert regressions == [] and added == [] and removed == []
+    (name, b, c, delta, status), = rows
+    assert name == "session.pairs_per_s" and (b, c) == (0.0, 123.0)
+    assert delta is None
+    assert status == "zero-baseline (not gated)"
+    assert "ok" not in status
+    table = render(rows, regressions, added, removed, 0.30, "BENCH_X.json")
+    assert "zero-baseline (not gated)" in table and "✅" not in table
+    # zero CURRENT against a real baseline is a genuine 100% drop: gated
+    rows2, regs2, _, _ = compare(base, cur, 0.30)
+    assert regs2 == ["session.pairs_per_s"]
+
+
+def test_direction_signs_gate_floor_and_ceiling():
+    base = _report(session={"pairs_per_s": 100.0},
+                   memory={"vmem_bytes": 1000.0})
+    ok_cur = _report(session={"pairs_per_s": 80.0},
+                     memory={"vmem_bytes": 1200.0})
+    bad_cur = _report(session={"pairs_per_s": 60.0},
+                      memory={"vmem_bytes": 1400.0})
+    _, regs, _, _ = compare(ok_cur, base, 0.30)
+    assert regs == []
+    _, regs, _, _ = compare(bad_cur, base, 0.30)
+    assert set(regs) == {"memory.vmem_bytes", "session.pairs_per_s"}
+
+
+def test_mapper_throughput_is_gated():
+    """mapped_reads_per_s joined GATED in this PR: a drop past the
+    threshold must fail the gate like pairs/s does."""
+    base = _report(mapper={"mapper_mapped_reads_per_s": 100.0})
+    cur = _report(mapper={"mapper_mapped_reads_per_s": 50.0})
+    _, regs, _, _ = compare(cur, base, 0.30)
+    assert regs == ["mapper.mapper_mapped_reads_per_s"]
+
+
+def test_added_and_removed_metrics_report_only():
+    base = _report(session={"pairs_per_s": 100.0})
+    cur = _report(session={"pairs_per_s": 100.0},
+                  mapper={"mapper_mapped_reads_per_s": 10.0})
+    rows, regs, added, removed = compare(cur, base, 0.30)
+    assert regs == [] and removed == []
+    assert added == ["mapper.mapper_mapped_reads_per_s"]

@@ -5,7 +5,7 @@ import pytest
 from repro.core.oracle import levenshtein
 from repro.data.dedup import dedup_filter, near_duplicates, tokens_to_dna
 from repro.data.genome import (ReadSimConfig, candidate_chains, mutate,
-                               simulate_reads, synth_genome)
+                               plant_decoys, simulate_reads, synth_genome)
 
 
 def test_simulator_error_rate_matches_config():
@@ -28,6 +28,49 @@ def test_chains_contain_true_locus_and_decoys():
     # true locus segments match the simulator's
     assert all(np.array_equal(chains[3 * i][1], rs.ref_segments[i])
                for i in range(3))
+
+
+def test_mutate_full_length_under_del_heavy_profile():
+    """Regression: the draw provision `L * (1 + p_err) + 64` ignored that
+    deletions consume a draw but emit nothing, so del-heavy/high-error
+    profiles returned reads silently shorter than cfg.read_len.  With
+    enough reference, every read must come back exactly read_len."""
+    cfg = ReadSimConfig(read_len=10_000, error_rate=0.3, sub_frac=0.1,
+                        ins_frac=0.1, del_frac=0.8, seed=5)
+    rng = np.random.default_rng(9)
+    ref = synth_genome(40_000, seed=6)
+    for _ in range(5):
+        read, span = mutate(ref, cfg, rng)
+        assert len(read) == cfg.read_len
+        assert span <= len(ref)
+    # simulate_reads must provision its ref slice by the same mass
+    g = synth_genome(120_000, seed=7)
+    rs = simulate_reads(g, 6, cfg)
+    assert all(len(r) == cfg.read_len for r in rs.reads)
+    # ...and untouched low-deletion profiles keep their exact rng stream
+    # (bit-compatibility contract with committed BENCH baselines)
+    rs0 = simulate_reads(synth_genome(100_000, seed=1), 2,
+                         ReadSimConfig(read_len=1000, seed=2))
+    assert list(rs0.true_pos) == [80043, 20654]
+
+
+def test_plant_decoys_preserves_ground_truth():
+    """Planted decoy chunks must never overwrite a true locus, and each
+    decoy must actually carry the read's interior sequence."""
+    g = synth_genome(80_000, seed=8)
+    rs = simulate_reads(g, 4, ReadSimConfig(read_len=600, seed=9))
+    g2, dpos = plant_decoys(g, rs, decoys_per_read=3, chunk=200,
+                            divergence=0.0)
+    assert dpos.shape == (4, 3)
+    for p, s, seg in zip(rs.true_pos, rs.spans, rs.ref_segments):
+        assert np.array_equal(g2[p:p + s], seg)      # truth untouched
+    for i, seg in enumerate(rs.ref_segments):
+        for d in range(3):
+            piece = g2[dpos[i, d]:dpos[i, d] + 200]
+            # zero divergence: the chunk is a verbatim interior copy
+            hit = [np.array_equal(piece, seg[o:o + 200])
+                   for o in range(len(seg) - 200 + 1)]
+            assert any(hit)
 
 
 def test_tokens_to_dna_alphabet():

@@ -1,0 +1,176 @@
+"""repro.mapper: index/chain/pre-filter units + end-to-end differential.
+
+The load-bearing claims:
+
+* the minimizer index finds true-locus anchors under the simulator's
+  error profile (seeding recall),
+* chaining turns them into candidate windows that cover the true locus
+  within a few bases at each end,
+* the X-drop pre-filter separates true loci from planted partial-repeat
+  decoys (kill specificity/sensitivity),
+* and the pipeline's final CIGARs are BIT-IDENTICAL to a direct
+  AlignSession.align on the same (read, segment) pairs — the mapper adds
+  a front half, it never changes alignment semantics.
+
+Small geometry (W=32 jnp, 400bp reads) keeps this tier-1 fast.
+"""
+import numpy as np
+import pytest
+
+from repro.api import plan
+from repro.data.genome import (ReadSimConfig, plant_decoys, simulate_reads,
+                               synth_genome)
+from repro.mapper import (MapperConfig, MinimizerIndex, ReadMapper,
+                          chain_anchors, minimizers, pack_pairs,
+                          xdrop_extend)
+
+SESSION_KW = dict(backend="jnp", W=32, O=12, k=8, rescue_rounds=2,
+                  batch_lanes=16)
+
+
+@pytest.fixture(scope="module")
+def world():
+    """Genome with planted partial-repeat decoys + simulated reads."""
+    g = synth_genome(120_000, seed=21)
+    cfg = ReadSimConfig(read_len=400, error_rate=0.10, seed=22)
+    rs = simulate_reads(g, 24, cfg)
+    g2, decoy_pos = plant_decoys(g, rs, decoys_per_read=4, chunk=160,
+                                 divergence=0.03, seed=23)
+    return g2, rs, decoy_pos
+
+
+@pytest.fixture(scope="module")
+def mapped(world):
+    g2, rs, _ = world
+    with ReadMapper(g2, **SESSION_KW) as m:
+        out = m.map_batch(rs.reads)
+        cands = [m.candidates(r) for r in rs.reads]
+    return out, cands
+
+
+# -- units -----------------------------------------------------------------
+
+def test_minimizers_shared_on_identical_stretches():
+    """Two sequences sharing an error-free stretch >= w + k - 1 select at
+    least one common minimizer inside it — the anchor-recall invariant."""
+    rng = np.random.default_rng(1)
+    core = rng.integers(0, 4, 60).astype(np.uint8)
+    a = np.concatenate([rng.integers(0, 4, 37).astype(np.uint8), core])
+    b = np.concatenate([rng.integers(0, 4, 11).astype(np.uint8), core])
+    ha, _ = minimizers(a, 13, 8)
+    hb, _ = minimizers(b, 13, 8)
+    assert len(np.intersect1d(ha, hb)) >= 1
+    # sentinel-poisoned k-mers never become minimizers
+    c = a.copy()
+    c[45] = 255
+    _, pc = minimizers(c, 13, 8)
+    assert all(not (p <= 45 < p + 13) for p in pc)
+
+
+def test_index_anchors_lie_on_true_diagonal():
+    g = synth_genome(50_000, seed=2)
+    idx = MinimizerIndex.build(g)
+    read = g[7000:7400].copy()
+    qpos, rpos = idx.anchors(read)
+    assert len(qpos) >= 10
+    assert np.all(rpos - qpos == 7000)      # exact copy: one diagonal
+    st = idx.stats()
+    assert st["n_minimizers"] > 0 and 0.1 < st["density"] < 0.5
+
+
+def test_chain_extrapolates_candidate_window():
+    # anchors on diagonal 5000 with +-2 indel drift, plus a stray cluster
+    q = np.array([40, 120, 200, 290, 360, 50, 60])
+    r = np.array([5040, 5121, 5198, 5292, 5360, 9050, 9061])
+    cands = chain_anchors(q, r, read_len=400, min_anchors=3)
+    assert len(cands) == 1                   # stray pair < min_anchors
+    c = cands[0]
+    assert abs(c.ref_start - 5000) <= 4
+    assert abs(c.ref_end - 5400) <= 4
+    assert c.score == 5
+
+
+def test_xdrop_separates_true_from_decoy():
+    rng = np.random.default_rng(3)
+    seg = rng.integers(0, 4, 160).astype(np.uint8)
+    read = seg[:128].copy()
+    read[::10] = (read[::10] + 1) % 4        # ~10% mismatches
+    decoy = rng.integers(0, 4, 160).astype(np.uint8)
+    reads, refs = pack_pairs([read, read], [seg, decoy], 128, 16, lanes=16)
+    scores = np.asarray(xdrop_extend(reads, refs, band=16, x_drop=24))
+    true_s, decoy_s = int(scores[0]), int(scores[1])
+    assert true_s >= 0.25 * 128              # survives the keep threshold
+    assert decoy_s < 0.25 * 128              # frozen early, killed
+    assert np.all(scores[2:] == 0)           # all-sentinel pad lanes
+
+
+# -- end to end ------------------------------------------------------------
+
+def test_mapper_recall_and_precision_on_decoy_rich_reads(world, mapped):
+    g2, rs, decoy_pos = world
+    out, _ = mapped
+    st = out.stats
+    assert st["n_reads"] == 24
+    # decoys seeded extra candidates, and the pre-filter killed them
+    assert st["n_candidates"] > st["n_reads"]
+    assert st["n_killed"] > 0 and st["kill_rate"] > 0.2
+    hits = sum(1 for mr, tp in zip(out.mapped, rs.true_pos)
+               if mr.ok and abs(mr.ref_start - tp) <= 20)
+    assert hits / st["n_reads"] >= 0.95      # recall floor
+    for mr in out.mapped:                    # precision: never a decoy
+        if mr.ok:
+            i = mr.read_id
+            assert all(abs(mr.ref_start - dp) > 50 for dp in decoy_pos[i])
+    # decoy-locus candidates were specifically the killed ones
+    killed_starts = [c.ref_start for mr in out.mapped
+                     for c in mr.candidates if c.killed]
+    assert any(any(abs(ks - dp) < 200 for dp in decoy_pos.ravel())
+               for ks in killed_starts)
+
+
+def test_mapper_cigars_bit_identical_to_direct_session(world, mapped):
+    """The differential contract: for each mapped read, aligning the SAME
+    (read, genome[c.ref_start:c.ref_end]) pair through a fresh
+    AlignSession yields the same cigar/dist/k_used byte for byte."""
+    g2, rs, _ = world
+    out, cands = mapped
+    pairs = []
+    for mr in out.mapped[:8]:
+        if not mr.ok:
+            continue
+        c = next(c for c in cands[mr.read_id]
+                 if c.ref_start == mr.ref_start)
+        pairs.append((mr, rs.reads[mr.read_id], g2[c.ref_start:c.ref_end]))
+    assert len(pairs) >= 6
+    with plan(**SESSION_KW) as s:
+        res = s.align([p[1] for p in pairs], [p[2] for p in pairs])
+    for (mr, _, _), cig, dist in zip(pairs, res.cigars, res.dist):
+        assert mr.cigar == cig
+        assert mr.dist == int(dist)
+
+
+def test_mapper_prefilter_off_maps_same_loci(world, mapped):
+    """With the pre-filter disabled nothing is killed; decoy candidates
+    just fail to align inside the k ladder, so the chosen loci match the
+    filtered run (slower, same answer)."""
+    g2, rs, _ = world
+    out, _ = mapped
+    cfg = MapperConfig(prefilter=False)
+    with ReadMapper(g2, cfg, **SESSION_KW) as m:
+        out2 = m.map_batch(rs.reads[:5])
+    assert out2.stats["n_killed"] == 0
+    assert out2.stats["n_aligned"] == out2.stats["n_candidates"]
+    for a, b in zip(out.mapped[:5], out2.mapped):
+        assert (a.ok, a.ref_start) == (b.ok, b.ref_start)
+
+
+def test_mapper_handles_unmappable_and_string_reads(world):
+    g2, _, _ = world
+    with ReadMapper(g2, **SESSION_KW) as m:
+        junk = "".join("ACGT"[i % 4] for i in range(200))  # low-complexity
+        mr = m.map_read(junk)
+        assert not mr.ok and mr.ref_start == -1 and mr.cigar == ""
+        # a genuine string read maps
+        real = "".join("ACGT"[c] for c in g2[11000:11300])
+        mr2 = m.map_read(real)
+        assert mr2.ok and abs(mr2.ref_start - 11000) <= 8

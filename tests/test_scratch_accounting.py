@@ -142,6 +142,23 @@ def test_planner_tile_follows_the_bytes():
     assert (banded, full) == (2816, 1408)
 
 
+def test_planner_refuses_vmem_over_commit():
+    """Regression: a budget too small for even ONE quantum of lanes used to
+    fall back to `max(tile, quantum)` — handing the kernel a full quantum
+    of scratch the budget never covered.  It must refuse, naming the
+    geometry and the bytes, and stay exact at the one-quantum boundary."""
+    from repro.core.counting import kernel_scratch_words, tail_scratch_words
+    cfg = _cfg(64, 12)
+    per_quantum = 128 * 4 * max(kernel_scratch_words(cfg, 1),
+                                tail_scratch_words(cfg, 1))
+    with pytest.raises(ValueError, match=r"W=64 k=12"):
+        plan_lane_tile(cfg, per_quantum - 1, quantum=128)
+    with pytest.raises(ValueError):
+        plan_lane_tile(cfg, 1, quantum=128)
+    # exactly one quantum of budget plans exactly one quantum of lanes
+    assert plan_lane_tile(cfg, per_quantum, quantum=128) == 128
+
+
 def test_lane_tile_auto_resolves_through_the_planner():
     """resolve_config/plan accept lane_tile='auto' and bake in the planned
     ceiling against the final geometry (tail_store included)."""
