@@ -70,6 +70,15 @@ def main() -> None:
           f"{derived['concurrent_overlap_gain_jnp']:.2f}x_thread_vs_sync")
     all_derived["session_concurrent"] = derived
 
+    # the multi-tenant gateway: SLO rows from a skewed 2-tenant open-loop
+    # load (latency p50/p99, deadline-hit-rate) plus the deterministic
+    # burst-shed rate.  compare.py gates p99/shed GROWTH and hit-rate
+    # DROPS.  Not shrunk under --fast: the latency percentiles need the
+    # full request count to mean anything.
+    rows, derived = bench_aligners.gateway_multitenant()
+    emit(rows)
+    all_derived["gateway"] = derived
+
     # the mapping front half: seed/chain/pre-filter funnel feeding the
     # session — mapped-reads/s is gated by compare.py like pairs/s
     rows, derived = bench_aligners.mapper_stream(

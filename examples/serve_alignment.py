@@ -26,6 +26,10 @@ ap.add_argument("--executor", choices=("thread", "sync"), default="thread",
                 help="'thread' (default) retires dispatches on the "
                      "background executor so CIGAR decode overlaps "
                      "dispatch; 'sync' is the single-threaded reference")
+ap.add_argument("--gateway", action="store_true",
+                help="additionally demo the multi-tenant gateway: two "
+                     "tenants (latency lane with deadlines vs bulk) on "
+                     "concurrent client threads, with the SLO readout")
 args = ap.parse_args()
 
 cfg = AlignerConfig(W=32, O=12, k=8) if args.fast \
@@ -95,3 +99,59 @@ with plan(cfg, rescue_rounds=1, batch_lanes=8,
     print(f"request 0: dist={r0['dist']} k_used={r0['k_used']} "
           f"cigar[:60]={r0['cigar'][:60]}")
     assert ok > 0
+
+if args.gateway:
+    # ---- the multi-tenant gateway: SLOs on top of the same session ----
+    # two tenants on their own client threads: a latency lane (priority
+    # 0, short reads, per-request deadline) and a bulk lane (priority 1,
+    # long reads) — the gateway preempts bulk at bucket granularity,
+    # sweeps deadlines on the background pump, and sheds reject-fast at
+    # the occupancy-derived capacity (docs/api.md, "The multi-tenant
+    # gateway").
+    import threading
+
+    from repro.api import Gateway, GatewayPolicy, ShedError
+
+    short_rs, long_rs = streams[0], streams[-1]
+    with plan(cfg, rescue_rounds=1, batch_lanes=8,
+              executor=args.executor) as session:
+        session.warmup(buckets)
+        gw = Gateway(session, GatewayPolicy(linger_s=0.002))
+        gw.start_sweeper(0.001)
+        # deadline is a stall canary, not a latency target: interpret-mode
+        # compiles on a 1-core CI runner stall several seconds mid-stream,
+        # and a queued request expiring would trip the expired==0 assert
+        # below (same 30s convention as benchmarks gateway_multitenant)
+        latency = gw.tenant("latency", priority=0, deadline_s=30.0)
+        bulk = gw.tenant("bulk", priority=1)
+        shed = 0
+
+        def client(ten, rs, pace):
+            global shed
+            for read, seg in zip(rs.reads, rs.ref_segments):
+                try:
+                    ten.submit(read, seg)
+                except ShedError:
+                    shed += 1
+                time.sleep(pace)
+
+        threads = [
+            threading.Thread(target=client, args=(latency, short_rs, 0.002)),
+            threading.Thread(target=client, args=(bulk, long_rs, 0.006)),
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        gw.close()                      # drains: every future resolves
+        st = gw.gateway_stats()
+        print(f"gateway: {st['completed']} completed over 2 tenants "
+              f"(capacity {st['capacity']} from the session's inflight "
+              f"signal), {st['deadline_hits']} deadline hits / "
+              f"{st['deadline_misses']} misses, {st['expired']} expired, "
+              f"{st['shed']} shed, {st['partial_dispatches']} partial "
+              f"(linger/deadline-urgent) dispatches")
+        for name, ts in st["tenants"].items():
+            print(f"  tenant {name}: submitted={ts['submitted']} "
+                  f"completed={ts['completed']} hits={ts['deadline_hits']}")
+        assert st["completed"] > 0 and st["expired"] == 0

@@ -9,13 +9,27 @@
     print(fut.result()["cigar"], session.session_stats())
     session.close()                          # or use it as a context manager
 
+For concurrent multi-tenant serving with SLOs (priority lanes, deadlines,
+cancellation, load shedding), put a Gateway in front:
+
+    gw = Gateway(session, GatewayPolicy(capacity=256))
+    latency = gw.tenant("short-reads", priority=0, deadline_s=0.5)
+    fut = latency.submit(read, ref)          # may raise ShedError
+    fut.result(timeout=1.0)
+
 See docs/api.md for the session lifecycle, the background retire
-executor's thread model, bucketing, the process-shared compile cache and
-the deprecation table for the legacy GenASMAligner / AlignmentEngine
-entry points.
+executor's thread model, bucketing, the process-shared compile cache,
+the gateway's concurrency contract and the deprecation table for the
+legacy GenASMAligner / AlignmentEngine entry points.
 """
+from .gateway import (DeadlineExceeded, Gateway, GatewayClosedError,
+                      GatewayFuture, GatewayPolicy, ShedError, Tenant)
 from .session import (AlignFuture, AlignSession, AlignSpec, CompileCache,
-                      SessionPoisonedError, plan, shared_compile_cache)
+                      RequestCancelled, SessionPoisonedError, plan,
+                      shared_compile_cache)
 
 __all__ = ["AlignFuture", "AlignSession", "AlignSpec", "CompileCache",
-           "SessionPoisonedError", "plan", "shared_compile_cache"]
+           "DeadlineExceeded", "Gateway", "GatewayClosedError",
+           "GatewayFuture", "GatewayPolicy", "RequestCancelled",
+           "SessionPoisonedError", "ShedError", "Tenant", "plan",
+           "shared_compile_cache"]

@@ -36,12 +36,18 @@ facade over pre-planned, shape-stable executables:
   rung executables are cached like any other bucket.  Bit-identical to
   the legacy host loop and the on-device ladder (tests/test_rescue.py).
 
-A session's mutating API (submit/flush/results/close) is meant to be
-driven by ONE user thread; the background retire thread is the session's
-own.  Exceptions on either thread poison the session: the owning
-dispatch's futures carry the original exception, every other outstanding
-future fails with :class:`SessionPoisonedError`, and later submits refuse
-immediately — nothing blocks forever on a dead dispatch.
+A session's mutating API (submit/flush/results/close) is safe to drive
+from MANY client threads: an internal submit lock serialises queue
+mutation and dispatch, so concurrent submitters interleave at request
+granularity and per-request results are bit-identical to a serial run
+(per-lane outputs are batch-composition independent — the hammer suite in
+tests/test_gateway.py holds ≥8 client threads to that).  The background
+retire thread is the session's own.  Exceptions on either thread poison
+the session: the owning dispatch's futures carry the original exception,
+every other outstanding future fails with :class:`SessionPoisonedError`,
+and later submits refuse immediately — nothing blocks forever on a dead
+dispatch.  ``repro.api.gateway`` builds the multi-tenant scheduling layer
+(priorities, deadlines, admission control) on top of this surface.
 
 ``GenASMAligner`` (exact shapes) and ``AlignmentEngine`` (now a shim over
 this session) remain as the reference implementations — docs/api.md has
@@ -71,6 +77,14 @@ class SessionPoisonedError(RuntimeError):
     """The session hit an unrecoverable dispatch/retire error: every
     outstanding future fails with this (the owning dispatch's futures
     carry the original exception) and further submits are refused."""
+
+
+class RequestCancelled(RuntimeError):
+    """The request was cancelled (AlignFuture.cancel / gateway deadline
+    sweep) before its dispatch: its queue slot was freed and result()
+    raises this instead of blocking.  Deliberately NOT the stdlib
+    CancelledError (BaseException since 3.8) so a bare ``except
+    Exception`` in serving loops still catches it."""
 
 
 # --------------------------------------------------------------------------
@@ -164,7 +178,7 @@ def plan(cfg: AlignerConfig | None = None, *, backend: str | None = None,
          adaptive_lanes: bool = False, occupancy_window: int = 8,
          adaptive_inflight: bool = False, inflight_ceiling: int = 8,
          mesh=None, cache: "CompileCache | str" = "shared",
-         **cfg_overrides) -> "AlignSession":
+         clock=None, **cfg_overrides) -> "AlignSession":
     """Resolve a cfg-like spec into a planned :class:`AlignSession`.
 
     Accepts an AlignerConfig (or None for defaults) plus any AlignerConfig
@@ -177,6 +191,11 @@ def plan(cfg: AlignerConfig | None = None, *, backend: str | None = None,
     once per process; ``'private'`` isolates this session; an explicit
     :class:`CompileCache` instance shares exactly with whoever else holds
     it (tests).
+
+    ``clock`` injects the time source for the session's wall-clock stats
+    (default ``time.monotonic``) — the gateway's deterministic-clock test
+    layer threads a fake clock through here so zero ``time.sleep`` is
+    needed to test scheduling behaviour.
     """
     cfg = resolve_config(cfg, backend=backend, **cfg_overrides)
     spec = AlignSpec(cfg=cfg, rescue_rounds=rescue_rounds,
@@ -187,7 +206,7 @@ def plan(cfg: AlignerConfig | None = None, *, backend: str | None = None,
                      occupancy_window=occupancy_window,
                      adaptive_inflight=adaptive_inflight,
                      inflight_ceiling=inflight_ceiling, mesh=mesh)
-    return AlignSession(spec, cache=cache)
+    return AlignSession(spec, cache=cache, clock=clock)
 
 
 # --------------------------------------------------------------------------
@@ -345,7 +364,8 @@ class AlignFuture:
     dispatch retires — on the dispatch thread (executor='sync') or the
     session's background retire thread (executor='thread')."""
 
-    __slots__ = ("rid", "_session", "_value", "_error", "_event")
+    __slots__ = ("rid", "_session", "_value", "_error", "_event",
+                 "_cancelled", "_callbacks")
 
     def __init__(self, session: "AlignSession", rid: int):
         self._session = session
@@ -353,34 +373,84 @@ class AlignFuture:
         self._value = None
         self._error = None
         self._event = threading.Event()
+        self._cancelled = False
+        self._callbacks: list = []
 
     def done(self) -> bool:
         return self._event.is_set()
 
-    def result(self) -> dict:
+    def cancelled(self) -> bool:
+        return self._cancelled
+
+    def result(self, timeout: float | None = None) -> dict:
         """Block until this pair's result is available and return it:
         {ok, dist, cigar, k_used, ops, read_consumed, ref_consumed}.
-        Raises the dispatch's exception (or SessionPoisonedError) if its
-        batch failed.  Collecting here counts as collecting: the session
-        forgets the rid (it will not appear in results()), keeping
-        long-lived streaming memory bounded by what is in flight."""
+        Raises the dispatch's exception (or SessionPoisonedError /
+        RequestCancelled) if it will never resolve.  ``timeout`` bounds
+        the WAIT in seconds — on expiry a ``TimeoutError`` is raised and
+        the future stays collectable (a later result() can still return
+        the value; timeout-then-fulfill is tested).  The sync executor
+        retires inline on this thread, so its forcing work is not
+        interruptible mid-retire; the bound applies to waiting on the
+        background executor.  Collecting here counts as collecting: the
+        session forgets the rid (it will not appear in results()),
+        keeping long-lived streaming memory bounded by what is in
+        flight."""
         if not self._event.is_set():
-            self._session._force(self)
-        assert self._event.is_set()
+            self._session._force(self, timeout=timeout)
+        if not self._event.is_set():
+            raise TimeoutError(
+                f"align result rid={self.rid} not ready within {timeout}s")
         self._session._forget(self.rid)
         if self._error is not None:
             raise self._error
         return self._value
 
+    def cancel(self) -> bool:
+        """Cancel this request if it is still QUEUED (not yet dispatched):
+        its bucket-queue slot is freed atomically under the submit lock —
+        the slot cannot also dispatch, so a lane is never freed twice —
+        and result() raises RequestCancelled.  Returns True when cancelled
+        (idempotently, including repeat calls), False when the pair
+        already dispatched or completed: a committed lane cannot be
+        recalled, its result simply arrives."""
+        return self._session._cancel(self)
+
+    def add_done_callback(self, fn) -> None:
+        """Run ``fn(self)`` when the future resolves (fulfil, fail, or
+        cancel) — immediately if already done.  Callbacks fire on
+        whichever thread resolves the future (retire thread under
+        executor='thread'); exceptions from callbacks are swallowed.
+        This is the gateway's completion hook (deadline-hit accounting
+        needs the completion TIME, not the collection time)."""
+        self._callbacks.append(fn)
+        if self._event.is_set():
+            self._run_callbacks()
+
+    def _run_callbacks(self) -> None:
+        # list.pop is atomic under the GIL: when a resolver races an
+        # add_done_callback, each callback still runs exactly once
+        while True:
+            try:
+                fn = self._callbacks.pop()
+            except IndexError:
+                return
+            try:
+                fn(self)
+            except Exception:       # noqa: BLE001 — callbacks never poison
+                pass
+
     # internal — called by the session (either thread)
     def _fulfill(self, value) -> None:
         self._value = value
         self._event.set()
+        self._run_callbacks()
 
     def _fail(self, err: BaseException) -> None:
         if not self._event.is_set():
             self._error = err
             self._event.set()
+        self._run_callbacks()
 
 
 @dataclasses.dataclass
@@ -408,10 +478,12 @@ class AlignSession:
     context manager does it for you; only required for executor='thread').
     """
 
-    def __init__(self, spec: AlignSpec, cache: CompileCache | str = "shared"):
+    def __init__(self, spec: AlignSpec, cache: CompileCache | str = "shared",
+                 clock=None):
         self.spec = spec
         self.cfg = spec.cfg          # resolved; exposed for shims/stats
         self.mesh = spec.mesh
+        self._clock = clock if clock is not None else time.monotonic
         if cache == "shared":
             store = _PROCESS_CACHE
         elif cache == "private":
@@ -426,6 +498,10 @@ class AlignSession:
         self._open: dict[int, AlignFuture] = {}   # not yet handed out
         self._next_rid = 0
         self._lock = threading.Lock()          # stats + _open + poisoning
+        # serialises queue mutation + dispatch across CLIENT threads (the
+        # retire thread never takes it — no deadlock with close/_drain);
+        # re-entrant because flush()/close() nest dispatches under it
+        self._submit_lock = threading.RLock()
         self._poisoned: BaseException | None = None
         self._closed = False
         # threaded retire executor (started lazily at first dispatch)
@@ -440,7 +516,7 @@ class AlignSession:
         self._max_inflight = spec.max_inflight
         self._inflight_win: deque = deque(maxlen=spec.occupancy_window)
         self.stats = {"dispatches": 0, "lanes": 0, "pad_lanes": 0,
-                      "requests": 0, "rescue_dispatches": 0,
+                      "requests": 0, "cancelled": 0, "rescue_dispatches": 0,
                       "rescue_lanes": 0, "lane_class_steps": 0,
                       "inflight_steps": 0,
                       "wall_s": 0.0, "retire_wall_s": 0.0}
@@ -460,9 +536,18 @@ class AlignSession:
         abandons queued/in-flight work: its futures fail fast with
         SessionPoisonedError (both executors).  Always stops the
         background retire thread (sentinel + join); idempotent.  A closed
-        session refuses further submits."""
-        if drain and self._poisoned is None and not self._closed:
-            self.flush()
+        session refuses further submits.
+
+        Safe against concurrent client threads: the closed flag flips
+        under the submit lock BEFORE draining, so a racing submit either
+        lands (and is drained here) or refuses — it can never slip into a
+        queue nobody will dispatch (the close()-while-outstanding race,
+        tests/test_gateway.py)."""
+        with self._submit_lock:
+            was_closed, self._closed = self._closed, True
+            if drain and self._poisoned is None and not was_closed:
+                self.flush()
+        if drain and self._poisoned is None and not was_closed:
             self._drain()
         if not drain and self._poisoned is None:
             # fail-fast every outstanding future (and whatever the retire
@@ -541,11 +626,14 @@ class AlignSession:
 
     # ---- streaming -----------------------------------------------------
 
-    def _check_usable(self):
+    def _check_poisoned(self):
         if self._poisoned is not None:
             raise SessionPoisonedError(
                 "session is poisoned; no further dispatches") \
                 from self._poisoned
+
+    def _check_usable(self):
+        self._check_poisoned()
         if self._closed:
             raise RuntimeError("session is closed")
 
@@ -553,24 +641,27 @@ class AlignSession:
         """Queue one encoded (read, ref) pair; dispatches fire whenever a
         bucket queue reaches its current lane class (earlier batches keep
         computing — the executor overlaps them with padding and, when
-        threaded, with host decode)."""
-        self._check_usable()
-        fut = AlignFuture(self, self._next_rid)
-        self._next_rid += 1
-        with self._lock:
-            self._open[fut.rid] = fut
-            self.stats["requests"] += 1
-        bucket = self.bucket_for(len(read), len(ref))
-        q = self._queues.setdefault(bucket, [])
-        q.append((fut, read, ref))
-        if len(q) >= self._current_lanes(bucket):
-            self._dispatch(bucket, self._queues.pop(bucket))
-        return fut
+        threaded, with host decode).  Callable from many client threads:
+        the submit lock serialises queue mutation + dispatch."""
+        with self._submit_lock:
+            self._check_usable()
+            fut = AlignFuture(self, self._next_rid)
+            self._next_rid += 1
+            with self._lock:
+                self._open[fut.rid] = fut
+                self.stats["requests"] += 1
+            bucket = self.bucket_for(len(read), len(ref))
+            q = self._queues.setdefault(bucket, [])
+            q.append((fut, read, ref))
+            if len(q) >= self._current_lanes(bucket):
+                self._dispatch(bucket, self._queues.pop(bucket))
+            return fut
 
     def flush(self):
-        """Dispatch every partially-filled bucket queue."""
-        for bucket in list(self._queues):
-            self._dispatch(bucket, self._queues.pop(bucket))
+        """Dispatch every partially-filled bucket queue (thread-safe)."""
+        with self._submit_lock:
+            for bucket in list(self._queues):
+                self._dispatch(bucket, self._queues.pop(bucket))
 
     def results(self) -> dict[int, dict]:
         """Flush, retire every in-flight dispatch, and return
@@ -649,8 +740,9 @@ class AlignSession:
         shallower bound retires results sooner).  Purely a scheduling
         choice: like lane classes, it cannot change values — the sync
         backpressure loop and the threaded queue guard just read the
-        current bound.  Only the dispatch thread writes _max_inflight,
-        so readers need no lock (the retire thread never reads it)."""
+        current bound.  _max_inflight is only written under the submit
+        lock (every dispatch holds it), so readers need no extra lock
+        (the retire thread never reads it)."""
         if not self.spec.adaptive_inflight:
             return
         win = self._inflight_win
@@ -679,8 +771,9 @@ class AlignSession:
         the put blocks when retire falls max_inflight behind, which is the
         backpressure).  A raising dispatch poisons the session: its own
         futures carry the exception, all other outstanding futures fail
-        with SessionPoisonedError, and the exception re-raises here."""
-        self._check_usable()
+        with SessionPoisonedError, and the exception re-raises here.
+        Callers hold the submit lock (submit/flush/_force/close)."""
+        self._check_poisoned()
         try:
             self._dispatch_inner(bucket, items)
         except BaseException as e:
@@ -693,7 +786,7 @@ class AlignSession:
         if not threaded:
             while len(self._inflight) >= self._max_inflight:
                 self._retire_guarded(self._inflight.popleft())
-        t0 = time.time()
+        t0 = self._clock()
         futs = [it[0] for it in items]
         reads = [it[1] for it in items]
         refs = [it[2] for it in items]
@@ -714,7 +807,7 @@ class AlignSession:
             self.stats["dispatches"] += 1
             self.stats["lanes"] += lanes
             self.stats["pad_lanes"] += lanes - len(items)
-            self.stats["wall_s"] += time.time() - t0
+            self.stats["wall_s"] += self._clock() - t0
         self._adapt(bucket, len(items))
         self._adapt_inflight(len(items) >= cls)
 
@@ -800,8 +893,9 @@ class AlignSession:
         executors); errors surface on the futures / via poisoning."""
         if self._retire_thread is not None:
             self._retire_q.join()
-        while self._inflight:
-            self._retire_guarded(self._inflight.popleft())
+        with self._submit_lock:
+            while self._inflight:
+                self._retire_guarded(self._inflight.popleft())
 
     def _retire_guarded(self, d: _Dispatch):
         """Sync-path retire: a raising retire poisons the session (its
@@ -818,7 +912,7 @@ class AlignSession:
         """Force one dispatch: download once, decode via the off-thread
         entrypoint (core.cigar), run compacted bucket-rescue rounds if
         needed, fulfill futures."""
-        t0 = time.time()
+        t0 = self._clock()
         n = len(d.futures)
         keys = ("ops", "n_ops", "dist", "failed", "read_consumed",
                 "ref_consumed") + (("k_used",) if "k_used" in d.out else ())
@@ -832,7 +926,7 @@ class AlignSession:
         for fut, rec in zip(d.futures, recs):
             fut._fulfill(rec)
         with self._lock:
-            self.stats["retire_wall_s"] += time.time() - t0
+            self.stats["retire_wall_s"] += self._clock() - t0
 
     def _rescue_compacted(self, d, failed, dist, k_used, rcon, fcon,
                           all_ops):
@@ -903,23 +997,71 @@ class AlignSession:
         with self._lock:
             self._open.pop(rid, None)
 
-    def _force(self, fut: AlignFuture):
+    def _cancel(self, fut: AlignFuture) -> bool:
+        """Cancel `fut` if still queued: remove its (future, read, ref)
+        slot under the submit lock — atomic vs dispatch, so the slot
+        either cancels or dispatches, never both (a lane can't be freed
+        twice) — fail the future with RequestCancelled, and forget the
+        rid.  True when cancelled (idempotent on repeats), False once
+        dispatched or done."""
+        with self._submit_lock:
+            if fut.done():
+                return fut._cancelled
+            for bucket, q in list(self._queues.items()):
+                for i, it in enumerate(q):
+                    if it[0] is fut:
+                        del q[i]
+                        if not q:
+                            del self._queues[bucket]
+                        fut._cancelled = True
+                        fut._fail(RequestCancelled(
+                            f"request rid={fut.rid} cancelled before "
+                            f"dispatch"))
+                        self._forget(fut.rid)
+                        with self._lock:
+                            self.stats["cancelled"] += 1
+                        return True
+            return False                     # dispatched: lane committed
+
+    def load(self) -> dict:
+        """The occupancy/in-flight signal a gateway's admission control
+        reads: dispatches in flight (retire-queue depth under the
+        threaded executor, the inline deque under sync), the current
+        in-flight bound (adaptive or static) and queued-but-undispatched
+        pairs.  Cheap — safe to call per admission decision."""
+        if self._retire_q is not None:
+            inflight = self._retire_q.qsize()
+        else:
+            inflight = len(self._inflight)
+        with self._submit_lock:
+            queued = sum(len(q) for q in self._queues.values())
+        return {"inflight": inflight, "max_inflight": self._max_inflight,
+                "queued_pairs": queued}
+
+    def _force(self, fut: AlignFuture, timeout: float | None = None):
         """Resolve one future: dispatch its queue if still held, then
         retire until it is done — inline (sync) or by waiting on the
         background executor (threaded), with a liveness check so a dead
-        retire thread can never hang the caller."""
-        for bucket, q in list(self._queues.items()):
-            if any(it[0] is fut for it in q):
-                self._dispatch(bucket, self._queues.pop(bucket))
-                break
+        retire thread can never hang the caller.  `timeout` bounds the
+        threaded wait (monotonic deadline); on expiry the future is left
+        unresolved for the caller to raise TimeoutError — a later force
+        can still collect it (timeout-then-fulfill)."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._submit_lock:
+            for bucket, q in list(self._queues.items()):
+                if any(it[0] is fut for it in q):
+                    self._dispatch(bucket, self._queues.pop(bucket))
+                    break
+            while self._inflight and not fut.done():
+                self._retire_guarded(self._inflight.popleft())
         if self._retire_thread is not None:
             while not fut._event.wait(0.05):
                 if not self._retire_thread.is_alive():
                     fut._fail(SessionPoisonedError(
                         "retire thread died before this future resolved"))
                     return
-        while self._inflight and not fut.done():
-            self._retire_guarded(self._inflight.popleft())
+                if deadline is not None and time.monotonic() >= deadline:
+                    return
 
     def session_stats(self) -> dict:
         """Serving + compile-cache counters in one dict (benchmarks/CI).

@@ -118,6 +118,16 @@ class AlignmentEngine:
         self.flush()
         return self.stats
 
+    def gateway(self, policy=None, clock=None, auto_pump: bool = True):
+        """A multi-tenant Gateway fronting this engine's session: priority
+        lanes, per-request deadlines, cancellation and load shedding over
+        the same executables (see docs/api.md, "The multi-tenant
+        gateway").  The caller owns the returned gateway's close(); the
+        engine keeps owning the session."""
+        from ..api import Gateway, GatewayPolicy
+        return Gateway(self.aligner, policy or GatewayPolicy(),
+                       clock=clock, auto_pump=auto_pump)
+
     def close(self):
         """Shut down the underlying session (stops its background retire
         thread when executor='thread'; a no-op for the sync executor)."""

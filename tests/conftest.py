@@ -1,5 +1,35 @@
+import sys
+
 import numpy as np
 import pytest
+
+
+def pytest_addoption(parser):
+    """The CI stress job's knobs (no pytest-repeat dependency): --count
+    re-runs every collected test N times, --switch-interval shrinks the
+    interpreter's thread switch interval so the executor/gateway thread
+    suites are forced through many more interleavings per run."""
+    parser.addoption("--count", type=int, default=1, metavar="N",
+                     help="repeat each test N times (stress job)")
+    parser.addoption("--switch-interval", type=float, default=None,
+                     metavar="S",
+                     help="sys.setswitchinterval(S) for the whole run "
+                          "(e.g. 1e-5 to jitter thread interleavings; "
+                          "the CPython default is 5e-3)")
+
+
+def pytest_configure(config):
+    si = config.getoption("--switch-interval")
+    if si is not None:
+        sys.setswitchinterval(si)
+
+
+def pytest_generate_tests(metafunc):
+    count = metafunc.config.getoption("--count")
+    if count > 1:
+        metafunc.fixturenames.append("_stress_rep")
+        metafunc.parametrize("_stress_rep", range(count),
+                             ids=[f"rep{i}" for i in range(count)])
 
 
 def mutate_seq(p, n_edits, rng, extend_to=None):

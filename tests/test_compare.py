@@ -68,3 +68,56 @@ def test_added_and_removed_metrics_report_only():
     rows, regs, added, removed = compare(cur, base, 0.30)
     assert regs == [] and removed == []
     assert added == ["mapper.mapper_mapped_reads_per_s"]
+
+
+def test_gateway_slo_latency_semantics():
+    """The PR-8 SLO keys: latency_p99_ms and shed_rate gate GROWTH (a
+    ceiling, like vmem_bytes), deadline_hit_rate gates DROPS (a floor,
+    like throughput) — latency at its widened tolerance (see
+    test_latency_p99_widened_tolerance), the rates at the default."""
+    base = _report(gateway={"latency_p99_ms": 10.0, "shed_rate": 0.20,
+                            "deadline_hit_rate": 1.0})
+    ok_cur = _report(gateway={"latency_p99_ms": 12.0, "shed_rate": 0.25,
+                              "deadline_hit_rate": 0.80})
+    _, regs, _, _ = compare(ok_cur, base, 0.30)
+    assert regs == []
+    worse = _report(gateway={"latency_p99_ms": 25.0, "shed_rate": 0.22,
+                             "deadline_hit_rate": 0.60})
+    _, regs, _, _ = compare(worse, base, 0.30)
+    assert set(regs) == {"gateway.latency_p99_ms",
+                         "gateway.deadline_hit_rate"}
+    # the shed ceiling fails on its own too
+    shed_storm = _report(gateway={"latency_p99_ms": 10.0,
+                                  "shed_rate": 0.50,
+                                  "deadline_hit_rate": 1.0})
+    _, regs, _, _ = compare(shed_storm, base, 0.30)
+    assert regs == ["gateway.shed_rate"]
+
+
+def test_gateway_slo_improvements_never_gate():
+    """Lower latency, fewer sheds, higher hit rate: all strictly better —
+    the direction-aware gate must stay green in the good direction."""
+    base = _report(gateway={"latency_p99_ms": 10.0, "shed_rate": 0.20,
+                            "deadline_hit_rate": 0.90})
+    better = _report(gateway={"latency_p99_ms": 1.0, "shed_rate": 0.0,
+                              "deadline_hit_rate": 1.0})
+    rows, regs, _, _ = compare(better, base, 0.30)
+    assert regs == []
+    assert all(status == "ok" for *_, status in rows)
+
+
+def test_latency_p99_widened_tolerance():
+    """latency_p99_ms carries a 3x tolerance multiplier (1-core runner
+    tail noise): +80% growth passes at the default 0.30 threshold, while
+    a genuine order-of-magnitude regression still fails."""
+    base = _report(gateway={"latency_p99_ms": 10.0, "shed_rate": 0.20})
+    noisy = _report(gateway={"latency_p99_ms": 18.0, "shed_rate": 0.20})
+    _, regs, _, _ = compare(noisy, base, 0.30)
+    assert regs == []                      # within 30% * 3.0 = 90%
+    bad = _report(gateway={"latency_p99_ms": 25.0, "shed_rate": 0.20})
+    _, regs, _, _ = compare(bad, base, 0.30)
+    assert regs == ["gateway.latency_p99_ms"]
+    # shed_rate keeps the TIGHT default: +40% growth fails
+    shed = _report(gateway={"latency_p99_ms": 10.0, "shed_rate": 0.28})
+    _, regs, _, _ = compare(shed, base, 0.30)
+    assert regs == ["gateway.shed_rate"]

@@ -445,3 +445,158 @@ def test_adaptive_inflight_preserves_poison_semantics(rng):
         s.submit(r24a, f24a)
     s.close(drain=False)
     assert s._retire_thread is None
+
+
+# --------------------------------------------------------------------------
+# AlignFuture.result(timeout=) + cancel() (the PR-8 gateway primitives)
+# --------------------------------------------------------------------------
+
+def test_result_timeout_then_fulfill(rng):
+    """result(timeout=) bounds the WAIT, not the future: a timed-out
+    future stays collectable and fulfills normally once the (gated)
+    retire thread gets to it.  The gate is an Event, not a sleep."""
+    reads, refs = _exact_pairs(rng, 2, 24)
+    s = plan(DCFG, rescue_rounds=0, batch_lanes=2, executor="thread",
+             cache="private")
+    gate = threading.Event()
+    orig = s._retire
+
+    def gated(d):
+        gate.wait(30)
+        orig(d)
+
+    s._retire = gated
+    futs = [s.submit(r, f) for r, f in zip(reads, refs)]  # full -> dispatch
+    with pytest.raises(TimeoutError, match="not ready"):
+        futs[0].result(timeout=0.05)
+    assert not futs[0].done()                  # still pending, not failed
+    gate.set()
+    assert futs[0].result(timeout=30)["dist"] == 0   # timeout-then-fulfill
+    assert futs[1].result()["dist"] == 0
+    s.close()
+
+
+def test_cancel_queued_frees_slot_before_dispatch(rng):
+    """cancel() on a still-queued future removes its slot atomically: the
+    future fails with RequestCancelled, the rid is forgotten, and the
+    bucket dispatches WITHOUT the cancelled lane."""
+    from repro.api import RequestCancelled
+    (ra, rb), (fa, fb) = _exact_pairs(rng, 2, 24)
+    s = plan(DCFG, rescue_rounds=0, batch_lanes=2, cache="private")
+    fut = s.submit(ra, fa)                     # queued: bucket not full
+    assert fut.cancel() is True
+    assert fut.cancelled() and fut.done()
+    with pytest.raises(RequestCancelled):
+        fut.result()
+    assert fut.cancel() is True                # idempotent on repeats
+    assert s.stats["cancelled"] == 1
+    f2 = s.submit(rb, fb)
+    s.flush()
+    assert f2.result()["dist"] == 0
+    assert s.stats["dispatches"] == 1          # only the survivor's batch
+    s.close()
+
+
+def test_cancel_after_dispatch_never_frees_a_lane_twice(rng):
+    """Once the slot is on a dispatched lane, cancel() is False and stays
+    False: the lane is committed exactly once and the result arrives
+    normally (sync and threaded executors)."""
+    for executor in ("sync", "thread"):
+        rng2 = np.random.default_rng(7)
+        reads, refs = _exact_pairs(rng2, 2, 24)
+        s = plan(DCFG, rescue_rounds=0, batch_lanes=2, executor=executor,
+                 cache="private")
+        futs = [s.submit(r, f) for r, f in zip(reads, refs)]  # dispatched
+        assert futs[0].cancel() is False       # committed: not cancellable
+        assert not futs[0].cancelled()
+        assert futs[0].result(timeout=30)["dist"] == 0
+        assert futs[0].cancel() is False       # done-and-uncancelled stays
+        assert s.stats["cancelled"] == 0
+        assert s.stats["dispatches"] == 1      # the lane ran exactly once
+        s.close()
+
+
+def test_multi_client_submit_hammer_bit_identical_to_serial(rng):
+    """8 client threads hammer ONE threaded session concurrently (mixed
+    buckets, submit + per-thread flush + result) — every per-request
+    record must be bit-identical to a serial single-thread run of the
+    same pairs.  Per-lane results are batch-composition independent
+    (PR-3 invariance), so ANY interleaving must yield the same values."""
+    per_thread = []
+    for t in range(8):
+        trng = np.random.default_rng(500 + t)
+        pairs = []
+        for _ in range(6):
+            n = int(trng.integers(16, 120))
+            ref = trng.integers(0, 4, n).astype(np.uint8)
+            read = ref.copy()
+            read[::9] = (read[::9] + 1) % 4    # a few subs: rescue-free
+            pairs.append((read, ref))
+        per_thread.append(pairs)
+
+    # shared cache on purpose: hermeticity is irrelevant to a value
+    # claim, and the serial twin's lowerings feed the threaded run
+    base = plan(DCFG, rescue_rounds=ROUNDS, rescue_mode="bucket",
+                batch_lanes=4)
+    serial = [[base.submit(r, f) for r, f in pairs] for pairs in per_thread]
+    base.flush()
+    want = [[sf.result() for sf in row] for row in serial]
+    base.close()
+
+    s = plan(DCFG, rescue_rounds=ROUNDS, rescue_mode="bucket",
+             batch_lanes=4, executor="thread")
+    got = [None] * 8
+    errs = []
+
+    def client(i):
+        try:
+            futs = [s.submit(r, f) for r, f in per_thread[i]]
+            s.flush()
+            got[i] = [ft.result(timeout=60) for ft in futs]
+        except BaseException as e:             # pragma: no cover
+            errs.append(e)
+
+    threads = [threading.Thread(target=client, args=(i,)) for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs, errs
+    for i in range(8):
+        _assert_results_equal(AlignResult.from_records(want[i]),
+                              AlignResult.from_records(got[i]))
+    s.close()
+
+
+def test_close_while_outstanding_race(rng):
+    """close() racing concurrent submits: every submit either lands (and
+    close's drain fulfills it) or refuses with 'closed' — no future is
+    ever left hanging and the retire thread always joins."""
+    reads, refs = _exact_pairs(rng, 16, 24)
+    s = plan(DCFG, rescue_rounds=0, batch_lanes=2, executor="thread",
+             cache="private")
+    start = threading.Barrier(3)
+    landed, refused, errs = [], [], []
+
+    def submitter(lo):
+        start.wait()
+        for i in range(lo, lo + 8):
+            try:
+                landed.append(s.submit(reads[i], refs[i]))
+            except RuntimeError as e:
+                if "closed" not in str(e):     # pragma: no cover
+                    errs.append(e)
+                refused.append(i)
+                return
+
+    t1 = threading.Thread(target=submitter, args=(0,))
+    t2 = threading.Thread(target=submitter, args=(8,))
+    t1.start(); t2.start()
+    start.wait()                               # maximise the overlap
+    s.close(drain=True)
+    t1.join(); t2.join()
+    assert not errs, errs
+    for fut in landed:                         # landed => drained by close
+        assert fut.done()
+        assert fut.result(timeout=5)["dist"] == 0
+    assert s._retire_thread is None
