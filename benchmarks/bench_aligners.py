@@ -142,15 +142,25 @@ def rescue_paths(n_reads=8, read_len=400, seed=3, rescue_rounds=2):
 
 
 def session_stream(n_reads=24, max_len=400, seed=7,
-                   backends=("jnp", "pallas_fused")):
+                   backends=("jnp", "pallas_fused"), obs=None):
     """The front-door claim in numbers: a RAGGED mixed-length request
     stream served by repro.api.AlignSession — pairs/s per backend at
     steady state (warm compile cache), with the bucket-hit / lowering
     counters that prove shape stability.  The legacy exact-shape door
     would re-trace on every new batch max-length; the session compiles
-    once per (length bucket, lane class) and then only ever hits."""
-    from repro.api import plan
+    once per (length bucket, lane class) and then only ever hits.
 
+    Every counter in the emitted rows is read from the obs registry (one
+    shared bundle, labelled ``session=<backend>`` per leg) — pass
+    ``obs`` to keep the bundle and export its Prometheus/perfetto
+    artifacts (``benchmarks.run --obs-dir``).  A final ``obs='off'`` leg
+    re-runs the jnp stream with observability disabled, measuring what
+    the telemetry costs on the hot path (gated manually against the
+    enabled row's baseline)."""
+    from repro.api import plan
+    from repro.obs import Obs
+
+    obs = obs if obs is not None else Obs.private()
     g = synth_genome(200_000, seed=seed)
     lens = [max(48, max_len // 4), max(64, max_len // 2), max_len]
     per = -(-n_reads // len(lens))
@@ -164,7 +174,8 @@ def session_stream(n_reads=24, max_len=400, seed=7,
     rows, derived = [], {}
     for backend in backends:
         cfg = AlignerConfig(W=32, O=12, k=8, backend=backend)
-        ses = plan(cfg, rescue_rounds=1, batch_lanes=8)
+        view = obs.labeled(session=backend)
+        ses = plan(cfg, rescue_rounds=1, batch_lanes=8, obs=view)
 
         def stream(ses=ses):
             futs = [ses.submit(reads[i], refs[i]) for i in order]
@@ -173,22 +184,46 @@ def session_stream(n_reads=24, max_len=400, seed=7,
 
         t = _median_time(stream)
         res = stream()
-        st = ses.session_stats()
-        cc = st["compile_cache"]
+        # every counter below is a registry read (the legacy accessors
+        # are views over the same metrics — tests/test_obs.py asserts
+        # the equality)
+        lowerings = view.counter("session_cache_lowerings_total").value
+        hits = view.counter("session_cache_hits_total").value
+        lanes = view.counter("session_lanes_total").value
+        pad_lanes = view.counter("session_pad_lanes_total").value
+        executables = ses.session_stats()["compile_cache"]["executables"]
         pairs_s = len(reads) / t
         rows.append((f"aligners/session_stream_{backend}",
                      t * 1e6 / len(reads),
                      f"pairs_per_s={pairs_s:.1f}_lowerings="
-                     f"{cc['lowerings']}_hits={cc['hits']}_buckets="
-                     f"{cc['executables']}"))
+                     f"{lowerings}_hits={hits}_buckets="
+                     f"{executables}"))
         derived[f"session_{backend}_pairs_per_s"] = pairs_s
-        derived[f"session_{backend}_lowerings"] = cc["lowerings"]
-        derived[f"session_{backend}_cache_hits"] = cc["hits"]
-        derived[f"session_{backend}_executables"] = cc["executables"]
+        derived[f"session_{backend}_lowerings"] = lowerings
+        derived[f"session_{backend}_cache_hits"] = hits
+        derived[f"session_{backend}_executables"] = executables
         derived[f"session_{backend}_aligned"] = sum(
             1 for r in res if r["ok"])
         derived[f"session_{backend}_pad_lane_frac"] = (
-            st["pad_lanes"] / max(1, st["lanes"]))
+            pad_lanes / max(1, lanes))
+
+    # the obs-off leg: same jnp stream, telemetry traded away entirely —
+    # its pairs/s must stay within compare.py tolerance of the enabled
+    # row (the "no-op when disabled" claim, measured not asserted)
+    cfg = AlignerConfig(W=32, O=12, k=8, backend="jnp")
+    ses = plan(cfg, rescue_rounds=1, batch_lanes=8, obs="off")
+
+    def stream_off(ses=ses):
+        futs = [ses.submit(reads[i], refs[i]) for i in order]
+        ses.flush()
+        return [f.result() for f in futs]
+
+    t_off = _median_time(stream_off)
+    pairs_s_off = len(reads) / t_off
+    rows.append(("aligners/session_stream_jnp_obs_off",
+                 t_off * 1e6 / len(reads),
+                 f"pairs_per_s={pairs_s_off:.1f}_telemetry=disabled"))
+    derived["session_jnp_obs_off_pairs_per_s"] = pairs_s_off
     return rows, derived
 
 

@@ -151,12 +151,33 @@ def _fmt(name: str, v: float | None) -> str:
     return f"{v:.1f}"
 
 
+def _meta_line(label: str, report: dict) -> str | None:
+    """One-line provenance for a report's ``meta`` block (benchmarks.run
+    writes it) — shown beside the gate table so a regression caused by a
+    different machine/jax/sha is diagnosable at a glance."""
+    m = report.get("meta")
+    if not m:
+        return f"{label}: no meta block (pre-PR9 report)"
+    return (f"{label}: jax={m.get('jax_version', '?')} "
+            f"cpus={m.get('cpu_count', '?')} sha={m.get('git_sha', '?')} "
+            f"at={m.get('timestamp_utc', '?')} "
+            f"[{m.get('platform', '?')}]")
+
+
 def render(rows, regressions, added, removed, threshold: float,
-           baseline_path: str) -> str:
+           baseline_path: str, current: dict | None = None,
+           baseline: dict | None = None) -> str:
     lines = [
         f"### Bench trajectory vs `{os.path.basename(baseline_path)}` "
         f"(gate: -{threshold:.0%} pairs/s, +{threshold:.0%} vmem_bytes)",
         "",
+    ]
+    meta_lines = [ln for ln in
+                  (_meta_line("current", current or {}),
+                   _meta_line("baseline", baseline or {})) if ln]
+    if meta_lines:
+        lines += [f"> {ln}" for ln in meta_lines] + [""]
+    lines += [
         "| metric | baseline | current | delta | status |",
         "|---|---:|---:|---:|---|",
     ]
@@ -202,7 +223,7 @@ def main() -> int:
     rows, regressions, added, removed = compare(current, baseline,
                                                 args.threshold)
     table = render(rows, regressions, added, removed, args.threshold,
-                   baseline_path)
+                   baseline_path, current=current, baseline=baseline)
     print(table)
     summary = os.environ.get("GITHUB_STEP_SUMMARY")
     if summary:

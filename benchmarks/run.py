@@ -6,8 +6,35 @@ Prints ``name,us_per_call,derived`` CSV (assignment format).
 from __future__ import annotations
 
 import argparse
+import datetime
 import json
+import os
+import platform
+import subprocess
 import sys
+
+
+def _meta() -> dict:
+    """Provenance for one bench run — committed beside the numbers so a
+    trajectory regression is diagnosable at a glance (PR 8's -28%
+    container-noise confusion: same numbers, different machine)."""
+    import jax
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=root,
+            capture_output=True, text=True, timeout=10).stdout.strip()
+    except Exception:
+        sha = ""
+    return {
+        "jax_version": jax.__version__,
+        "cpu_count": os.cpu_count(),
+        "platform": platform.platform(),
+        "git_sha": sha or "unknown",
+        "timestamp_utc": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+    }
 
 
 def main() -> None:
@@ -23,8 +50,16 @@ def main() -> None:
                          "forced host devices (re-execs a fresh "
                          "interpreter; reports per-device pairs/s and "
                          "transfer bytes)")
+    ap.add_argument("--obs-dir", metavar="DIR", default=None,
+                    help="dump the session-stream observability bundle "
+                         "(Prometheus text, JSONL + perfetto traces) "
+                         "into DIR — uploaded as nightly CI artifacts")
     args = ap.parse_args()
 
+    meta = _meta()
+    print(f"# meta: jax={meta['jax_version']} cpus={meta['cpu_count']} "
+          f"sha={meta['git_sha']} at={meta['timestamp_utc']}")
+    print(f"# meta: {meta['platform']}")
     print("name,us_per_call,derived")
     all_rows = []
     all_derived = {}
@@ -52,12 +87,20 @@ def main() -> None:
           f"{derived['dc_engine_vs_edlib_like']:.2f}x_paper_cpu1.7x")
 
     # the session front door: ragged-stream pairs/s + bucket-hit stats
-    # (the compile-stability numbers the PR-over-PR trajectory tracks)
+    # (the compile-stability numbers the PR-over-PR trajectory tracks).
+    # One obs bundle spans the backend legs (labelled session=<backend>)
+    # so --obs-dir can export the whole run's metrics + trace.
+    from repro.obs import Obs, write_artifacts
+    bench_obs = Obs.private()
     rows, derived = bench_aligners.session_stream(
         n_reads=9 if args.fast else 24,
-        max_len=160 if args.fast else 400)
+        max_len=160 if args.fast else 400, obs=bench_obs)
     emit(rows)
     all_derived["session"] = derived
+    if args.obs_dir:
+        paths = write_artifacts(bench_obs, args.obs_dir, prefix="obs")
+        for kind, p in paths.items():
+            print(f"# wrote {kind} artifact: {p}", file=sys.stderr)
 
     # the serving executor: sync vs background-retire on a rescue-heavy
     # ragged stream (decode-overlap gain) + cross-session cache sharing.
@@ -115,8 +158,8 @@ def main() -> None:
     print(json.dumps(all_derived, indent=1, default=float))
     if args.json:
         with open(args.json, "w") as fh:
-            json.dump({"rows": all_rows, "derived": all_derived}, fh,
-                      indent=1, default=float)
+            json.dump({"meta": meta, "rows": all_rows,
+                       "derived": all_derived}, fh, indent=1, default=float)
         print(f"# wrote {args.json}", file=sys.stderr)
 
 

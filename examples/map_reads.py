@@ -79,4 +79,14 @@ print(f"first batch {t_first:.2f}s (compiles), steady {t_steady:.2f}s = "
 assert recall >= 0.95, f"recall {recall:.1%} below the 95% floor"
 assert decoy_hits == 0, f"{decoy_hits} reads mapped at planted decoys"
 assert st["kill_rate"] > 0.2, "pre-filter killed nothing"
+
+# the batch stats above are registry-counter DELTAS; the cumulative story
+# (both batches, plus the session's own serving counters) lives on the
+# shared obs registry — docs/observability.md maps every name
+snap = mapper.obs.snapshot()
+print(f"registry: mapper_reads_total={snap['mapper_reads_total']} "
+      f"mapper_candidates_total={snap['mapper_candidates_total']} "
+      f"session_dispatches_total={snap['session_dispatches_total']} "
+      f"({len(snap)} metrics — see `serve_alignment.py --metrics-dump` "
+      f"for the full Prometheus dump)")
 print("OK")

@@ -30,6 +30,11 @@ ap.add_argument("--gateway", action="store_true",
                 help="additionally demo the multi-tenant gateway: two "
                      "tenants (latency lane with deadlines vs bulk) on "
                      "concurrent client threads, with the SLO readout")
+ap.add_argument("--metrics-dump", action="store_true",
+                help="after each demo, dump its obs registry as "
+                     "Prometheus exposition text (every printed number "
+                     "above is derivable from this dump — see "
+                     "docs/observability.md)")
 args = ap.parse_args()
 
 cfg = AlignerConfig(W=32, O=12, k=8) if args.fast \
@@ -100,6 +105,12 @@ with plan(cfg, rescue_rounds=1, batch_lanes=8,
           f"cigar[:60]={r0['cigar'][:60]}")
     assert ok > 0
 
+if args.metrics_dump:
+    # every stat printed above is a view over this registry — the dump IS
+    # the session's whole story (docs/observability.md)
+    print("\n# ---- session metrics (Prometheus exposition text) ----")
+    print(session.obs.prometheus(), end="")
+
 if args.gateway:
     # ---- the multi-tenant gateway: SLOs on top of the same session ----
     # two tenants on their own client threads: a latency lane (priority
@@ -155,3 +166,10 @@ if args.gateway:
             print(f"  tenant {name}: submitted={ts['submitted']} "
                   f"completed={ts['completed']} hits={ts['deadline_hits']}")
         assert st["completed"] > 0 and st["expired"] == 0
+        if args.metrics_dump:
+            # the gateway shares the session's obs domain: one dump
+            # carries admission (gateway_*) AND serving (session_*)
+            # counters, tenants as labels (docs/observability.md)
+            print("\n# ---- gateway metrics (Prometheus exposition "
+                  "text) ----")
+            print(gw.obs.prometheus(), end="")

@@ -69,6 +69,7 @@ import threading
 import time
 from collections import deque
 
+from ..obs import resolve_obs
 from .session import AlignSession, RequestCancelled, SessionPoisonedError
 
 
@@ -237,13 +238,45 @@ class Gateway:
     ``pump(now)`` manually with a fake clock — every scheduling decision
     is a pure function of (queues, now)."""
 
+    #: legacy stats key -> registry metric name (see docs/observability.md)
+    STAT_METRICS = {
+        "submitted": "gateway_submitted_total",
+        "shed": "gateway_shed_total",
+        "expired": "gateway_expired_total",
+        "cancelled": "gateway_cancelled_total",
+        "dispatched": "gateway_dispatched_total",
+        "completed": "gateway_completed_total",
+        "failed": "gateway_failed_total",
+        "deadline_hits": "gateway_deadline_hits_total",
+        "deadline_misses": "gateway_deadline_misses_total",
+        "pumps": "gateway_pumps_total",
+        "partial_dispatches": "gateway_partial_dispatches_total",
+    }
+    #: per-tenant counter families, labelled ``tenant="<name>"``
+    TENANT_KEYS = ("submitted", "shed", "expired", "cancelled",
+                   "completed", "deadline_hits")
+
     def __init__(self, session: AlignSession,
                  policy: GatewayPolicy = GatewayPolicy(), clock=None,
-                 auto_pump: bool = True):
+                 auto_pump: bool = True, obs=None):
         self.session = session
         self.policy = policy
         self._clock = clock if clock is not None else time.monotonic
         self.auto_pump = auto_pump
+        # the gateway shares the session's observability domain by
+        # default — one registry/trace tells the whole admission ->
+        # dispatch -> retire story; pass obs= to split it out
+        self.obs = session.obs if obs is None else \
+            resolve_obs(obs, clock=self._clock)
+        self._m = {k: self.obs.counter(name)
+                   for k, name in self.STAT_METRICS.items()}
+        self._tm: dict[str, dict] = {}          # tenant -> key -> counter
+        # live-load gauges mirror _n_queued/_n_outstanding; the plain
+        # ints stay the functional source of truth so admission control
+        # keeps working under obs='off' (gauges would read 0)
+        self._g_queued = self.obs.gauge("gateway_queued")
+        self._g_outstanding = self.obs.gauge("gateway_outstanding")
+        self._h_latency = self.obs.histogram("gateway_latency_seconds")
         # _lock: scheduling state (queues, dispatch) — client threads only.
         # _stats_lock: counters + future finalisation — ALSO taken by the
         # session's retire thread (completion callbacks), so nothing may
@@ -258,23 +291,40 @@ class Gateway:
         self._n_outstanding = 0                 # dispatched, not finalized
         self._sweeper: threading.Thread | None = None
         self._sweeper_stop: threading.Event | None = None
-        self.stats = {"submitted": 0, "shed": 0, "expired": 0,
-                      "cancelled": 0, "dispatched": 0, "completed": 0,
-                      "failed": 0, "deadline_hits": 0, "deadline_misses": 0,
-                      "pumps": 0, "partial_dispatches": 0}
-        self.tenant_stats: dict[str, dict] = {}
         #: (priority, bucket, n_real) per dispatch, newest last — the
         #: observable the deterministic preemption tests assert on
         self.dispatch_log: deque = deque(maxlen=1024)
+
+    @property
+    def stats(self) -> dict:
+        """Scheduling counters as the legacy dict — a view over the obs
+        registry (asserted equal to registry reads in tests/test_obs.py)."""
+        return {k: m.value for k, m in self._m.items()}
+
+    @property
+    def tenant_stats(self) -> dict:
+        """{tenant: {key: value}} — a view over the per-tenant labelled
+        counters (``gateway_tenant_*_total{tenant=...}``)."""
+        return {name: {k: c.value for k, c in tm.items()}
+                for name, tm in self._tm.items()}
+
+    def _tenant_metrics(self, name: str) -> dict:
+        """The tenant's counter family, created on first touch (under the
+        stats lock — callers hold it or are __init__/tenant())."""
+        tm = self._tm.get(name)
+        if tm is None:
+            tm = self._tm[name] = {
+                k: self.obs.counter(f"gateway_tenant_{k}_total",
+                                    tenant=name)
+                for k in self.TENANT_KEYS}
+        return tm
 
     # ---- tenants -------------------------------------------------------
 
     def tenant(self, name: str, priority: int = 1,
                deadline_s: float | None = None) -> Tenant:
         with self._stats_lock:
-            self.tenant_stats.setdefault(
-                name, {"submitted": 0, "shed": 0, "expired": 0,
-                       "cancelled": 0, "completed": 0, "deadline_hits": 0})
+            self._tenant_metrics(name)
         return Tenant(self, name, priority=priority, deadline_s=deadline_s)
 
     # ---- admission -----------------------------------------------------
@@ -304,31 +354,34 @@ class Gateway:
         (priority, bucket) and — with auto_pump — dispatches whatever
         became full/urgent.  Thread-safe."""
         now = self._clock()
-        with self._lock:
-            if self._closed:
-                raise GatewayClosedError("gateway is closed")
-            n, cap = self.in_system(), self.capacity()
-            if n >= cap * self.policy.frac_for(priority):
+        with self.obs.span("gateway.admit", tenant=tenant.name,
+                           priority=priority):
+            with self._lock:
+                if self._closed:
+                    raise GatewayClosedError("gateway is closed")
+                n, cap = self.in_system(), self.capacity()
+                if n >= cap * self.policy.frac_for(priority):
+                    with self._stats_lock:
+                        self._m["shed"].inc()
+                        self._tenant_metrics(tenant.name)["shed"].inc()
+                    raise ShedError(
+                        f"priority-{priority} request shed: {n} pairs in "
+                        f"system >= {self.policy.frac_for(priority):.0%} of "
+                        f"capacity {cap}")
+                bucket = self.session.bucket_for(len(read), len(ref))
+                deadline = None if deadline_s is None else now + deadline_s
+                gf = GatewayFuture(self, self._next_rid, tenant.name,
+                                   priority, bucket, deadline, now)
+                self._next_rid += 1
+                gf._read, gf._ref = read, ref
+                self._queues.setdefault((priority, bucket), []).append(gf)
                 with self._stats_lock:
-                    self.stats["shed"] += 1
-                    self.tenant_stats[tenant.name]["shed"] += 1
-                raise ShedError(
-                    f"priority-{priority} request shed: {n} pairs in "
-                    f"system >= {self.policy.frac_for(priority):.0%} of "
-                    f"capacity {cap}")
-            bucket = self.session.bucket_for(len(read), len(ref))
-            deadline = None if deadline_s is None else now + deadline_s
-            gf = GatewayFuture(self, self._next_rid, tenant.name, priority,
-                               bucket, deadline, now)
-            self._next_rid += 1
-            gf._read, gf._ref = read, ref
-            self._queues.setdefault((priority, bucket), []).append(gf)
-            with self._stats_lock:
-                self._n_queued += 1
-                self.stats["submitted"] += 1
-                self.tenant_stats[tenant.name]["submitted"] += 1
-        if self.auto_pump:
-            self.pump(now)
+                    self._n_queued += 1
+                    self._g_queued.add(1)
+                    self._m["submitted"].inc()
+                    self._tenant_metrics(tenant.name)["submitted"].inc()
+            if self.auto_pump:
+                self.pump(now)
         return gf
 
     # ---- the pump: sweep + priority-ordered dispatch -------------------
@@ -344,8 +397,7 @@ class Gateway:
         with self._lock:
             if now is None:
                 now = self._clock()
-            with self._stats_lock:
-                self.stats["pumps"] += 1
+            self._m["pumps"].inc()
             self._sweep_deadlines(now)
             while True:
                 key = self._next_dispatchable(now)
@@ -409,9 +461,11 @@ class Gateway:
         with self._stats_lock:
             self._n_queued -= len(batch)
             self._n_outstanding += len(batch)
-            self.stats["dispatched"] += len(batch)
+            self._g_queued.add(-len(batch))
+            self._g_outstanding.add(len(batch))
+            self._m["dispatched"].inc(len(batch))
             if len(batch) < lanes:
-                self.stats["partial_dispatches"] += 1
+                self._m["partial_dispatches"].inc()
         self.dispatch_log.append((priority, bucket, len(batch)))
         t_disp = self._clock()
         err = None
@@ -463,32 +517,32 @@ class Gateway:
             gf._finalized = True
             gf.t_done = self._clock()
             gf._value, gf._error = value, error
-            ts = self.tenant_stats.setdefault(
-                gf.tenant, {"submitted": 0, "shed": 0, "expired": 0,
-                            "cancelled": 0, "completed": 0,
-                            "deadline_hits": 0})
+            ts = self._tenant_metrics(gf.tenant)
             if outstanding:
                 self._n_outstanding -= 1
+                self._g_outstanding.add(-1)
             else:
                 self._n_queued -= 1
+                self._g_queued.add(-1)
             if kind == "completed":
-                self.stats["completed"] += 1
-                ts["completed"] += 1
+                self._m["completed"].inc()
+                ts["completed"].inc()
+                self._h_latency.observe(gf.t_done - gf.t_submit)
                 if gf.deadline is None or gf.t_done <= gf.deadline:
-                    self.stats["deadline_hits"] += 1
-                    ts["deadline_hits"] += 1
+                    self._m["deadline_hits"].inc()
+                    ts["deadline_hits"].inc()
                 else:
-                    self.stats["deadline_misses"] += 1
+                    self._m["deadline_misses"].inc()
             elif kind == "expired":
                 gf._cancelled = True
-                self.stats["expired"] += 1
-                ts["expired"] += 1
+                self._m["expired"].inc()
+                ts["expired"].inc()
             elif kind == "cancelled":
                 gf._cancelled = True
-                self.stats["cancelled"] += 1
-                ts["cancelled"] += 1
+                self._m["cancelled"].inc()
+                ts["cancelled"].inc()
             else:
-                self.stats["failed"] += 1
+                self._m["failed"].inc()
         gf._event.set()
 
     # ---- forcing / cancellation ----------------------------------------
@@ -614,9 +668,8 @@ class Gateway:
     def gateway_stats(self) -> dict:
         """Counters + live load + per-tenant breakdown (benchmarks/CI)."""
         with self._stats_lock:
-            out = dict(self.stats)
-            out["tenants"] = {k: dict(v) for k, v in
-                              self.tenant_stats.items()}
+            out = self.stats                   # registry-backed property
+            out["tenants"] = self.tenant_stats
             out["queued"] = self._n_queued
             out["outstanding"] = self._n_outstanding
         out["capacity"] = self.capacity()

@@ -71,6 +71,7 @@ from ..core.windowing import (SENTINEL_READ, SENTINEL_REF, bucket_avals,
                               pad_geometry, pow2_bucket, rescue_schedule)
 from ..distributed.sharding import (bucket_lanes, lane_classes,
                                     mesh_fingerprint)
+from ..obs import MetricsRegistry, default_registry, resolve_obs
 
 
 class SessionPoisonedError(RuntimeError):
@@ -178,7 +179,7 @@ def plan(cfg: AlignerConfig | None = None, *, backend: str | None = None,
          adaptive_lanes: bool = False, occupancy_window: int = 8,
          adaptive_inflight: bool = False, inflight_ceiling: int = 8,
          mesh=None, cache: "CompileCache | str" = "shared",
-         clock=None, **cfg_overrides) -> "AlignSession":
+         clock=None, obs=None, **cfg_overrides) -> "AlignSession":
     """Resolve a cfg-like spec into a planned :class:`AlignSession`.
 
     Accepts an AlignerConfig (or None for defaults) plus any AlignerConfig
@@ -196,6 +197,13 @@ def plan(cfg: AlignerConfig | None = None, *, backend: str | None = None,
     (default ``time.monotonic``) — the gateway's deterministic-clock test
     layer threads a fake clock through here so zero ``time.sleep`` is
     needed to test scheduling behaviour.
+
+    ``obs`` selects the observability domain (see repro.obs): ``None``
+    (default) gives the session a private enabled bundle on the same
+    clock; ``'off'`` disables all telemetry for zero hot-path overhead
+    (``session.stats`` then reads zeros — the trade is explicit); an
+    :class:`repro.obs.Obs` shares a caller-scoped bundle (benchmarks
+    label one registry per backend).
     """
     cfg = resolve_config(cfg, backend=backend, **cfg_overrides)
     spec = AlignSpec(cfg=cfg, rescue_rounds=rescue_rounds,
@@ -206,7 +214,7 @@ def plan(cfg: AlignerConfig | None = None, *, backend: str | None = None,
                      occupancy_window=occupancy_window,
                      adaptive_inflight=adaptive_inflight,
                      inflight_ceiling=inflight_ceiling, mesh=mesh)
-    return AlignSession(spec, cache=cache, clock=clock)
+    return AlignSession(spec, cache=cache, clock=clock, obs=obs)
 
 
 # --------------------------------------------------------------------------
@@ -236,15 +244,38 @@ class CompileCache:
     exactly once.  The module-level instance behind
     :func:`shared_compile_cache` is what makes serving multi-tenant: N
     sessions of the same spec lower each bucket exactly once per process.
-    Per-session accounting lives in :class:`_SessionCacheView`."""
+    Per-session accounting lives in :class:`_SessionCacheView`.
 
-    def __init__(self):
+    Counters live on a metrics registry (``compile_cache_*_total``): the
+    process-shared instance sits on the obs default registry beside the
+    transfer family; privately-constructed caches (tests) get a private
+    registry so they never pollute the process totals.  The ``hits`` /
+    ``misses`` / ``lowerings`` attributes remain the public contract —
+    now read-only views over those counters (``bucket_hits`` stays a
+    plain dict: per-key cardinality belongs in the stats dump, not the
+    metric namespace)."""
+
+    def __init__(self, registry=None):
         self._lock = threading.RLock()
         self._exe: dict = {}
-        self.hits = 0
-        self.misses = 0
-        self.lowerings = 0
+        self._reg = registry if registry is not None else MetricsRegistry()
+        self._m_hits = self._reg.counter("compile_cache_hits_total")
+        self._m_misses = self._reg.counter("compile_cache_misses_total")
+        self._m_lowerings = self._reg.counter(
+            "compile_cache_lowerings_total")
         self.bucket_hits: dict = {}     # key -> times served from cache
+
+    @property
+    def hits(self) -> int:
+        return self._m_hits.value
+
+    @property
+    def misses(self) -> int:
+        return self._m_misses.value
+
+    @property
+    def lowerings(self) -> int:
+        return self._m_lowerings.value
 
     def fetch(self, key, build):
         while True:
@@ -252,11 +283,11 @@ class CompileCache:
                 entry = self._exe.get(key)
                 if entry is None:
                     pending = self._exe[key] = _Pending()
-                    self.misses += 1
-                    self.lowerings += 1
+                    self._m_misses.inc()
+                    self._m_lowerings.inc()
                     break                       # this thread builds
                 if not isinstance(entry, _Pending):
-                    self.hits += 1
+                    self._m_hits.inc()
                     self.bucket_hits[key] = self.bucket_hits.get(key, 0) + 1
                     return entry, False
             # someone else is building this key: wait off-lock, then
@@ -297,7 +328,7 @@ class CompileCache:
                                     for k, v in self.bucket_hits.items()}}
 
 
-_PROCESS_CACHE = CompileCache()
+_PROCESS_CACHE = CompileCache(registry=default_registry())
 
 
 def shared_compile_cache() -> CompileCache:
@@ -315,17 +346,36 @@ class _SessionCacheView:
     ``shared_hits`` the subset of hits whose executable some *other*
     session lowered (first-touch hits).  They reconcile with the store:
     summed over sessions, hits+misses equals the store's and lowerings
-    equals the store's (tests/test_executor.py)."""
+    equals the store's (tests/test_executor.py).  The counters live on
+    the owning session's obs registry (``session_cache_*_total``); the
+    attribute names stay the public contract as read-only views."""
 
-    def __init__(self, store: CompileCache):
+    def __init__(self, store: CompileCache, registry=None):
         self.store = store
         self._lock = threading.Lock()
         self._seen: set = set()
-        self.hits = 0
-        self.misses = 0
-        self.lowerings = 0
-        self.shared_hits = 0
+        reg = registry if registry is not None else MetricsRegistry()
+        self._m_hits = reg.counter("session_cache_hits_total")
+        self._m_misses = reg.counter("session_cache_misses_total")
+        self._m_lowerings = reg.counter("session_cache_lowerings_total")
+        self._m_shared_hits = reg.counter("session_cache_shared_hits_total")
         self.bucket_hits: dict = {}
+
+    @property
+    def hits(self) -> int:
+        return self._m_hits.value
+
+    @property
+    def misses(self) -> int:
+        return self._m_misses.value
+
+    @property
+    def lowerings(self) -> int:
+        return self._m_lowerings.value
+
+    @property
+    def shared_hits(self) -> int:
+        return self._m_shared_hits.value
 
     def get(self, key, build):
         exe, built = self.store.fetch(key, build)
@@ -333,13 +383,13 @@ class _SessionCacheView:
             first = key not in self._seen
             self._seen.add(key)
             if built:
-                self.misses += 1
-                self.lowerings += 1
+                self._m_misses.inc()
+                self._m_lowerings.inc()
             else:
-                self.hits += 1
+                self._m_hits.inc()
                 self.bucket_hits[key] = self.bucket_hits.get(key, 0) + 1
                 if first:
-                    self.shared_hits += 1
+                    self._m_shared_hits.inc()
         return exe
 
     def __len__(self):
@@ -420,9 +470,11 @@ class AlignFuture:
         """Run ``fn(self)`` when the future resolves (fulfil, fail, or
         cancel) — immediately if already done.  Callbacks fire on
         whichever thread resolves the future (retire thread under
-        executor='thread'); exceptions from callbacks are swallowed.
-        This is the gateway's completion hook (deadline-hit accounting
-        needs the completion TIME, not the collection time)."""
+        executor='thread'); exceptions from callbacks are swallowed and
+        recorded on the session's ``callback_errors`` counter
+        (``session_callback_errors_total``).  This is the gateway's
+        completion hook (deadline-hit accounting needs the completion
+        TIME, not the collection time)."""
         self._callbacks.append(fn)
         if self._event.is_set():
             self._run_callbacks()
@@ -437,8 +489,13 @@ class AlignFuture:
                 return
             try:
                 fn(self)
-            except Exception:       # noqa: BLE001 — callbacks never poison
-                pass
+            except BaseException as e:  # noqa: BLE001 — callbacks NEVER
+                # poison: these run on whichever thread resolves the
+                # future (the retire thread under executor='thread'), so
+                # even a BaseException (KeyboardInterrupt in a client
+                # hook) must be swallowed-and-recorded, not allowed to
+                # unwind into _retire_loop and poison the session
+                self._session._callback_error(e)
 
     # internal — called by the session (either thread)
     def _fulfill(self, value) -> None:
@@ -478,12 +535,37 @@ class AlignSession:
     context manager does it for you; only required for executor='thread').
     """
 
+    #: legacy stats key -> registry metric name: ``session.stats`` is a
+    #: read-only view building this dict from the obs counters (the
+    #: docs/observability.md catalogue mirrors this table)
+    STAT_METRICS = {
+        "dispatches": "session_dispatches_total",
+        "lanes": "session_lanes_total",
+        "pad_lanes": "session_pad_lanes_total",
+        "requests": "session_requests_total",
+        "cancelled": "session_cancelled_total",
+        "rescue_dispatches": "session_rescue_dispatches_total",
+        "rescue_lanes": "session_rescue_lanes_total",
+        "lane_class_steps": "session_lane_class_steps_total",
+        "inflight_steps": "session_inflight_steps_total",
+        "callback_errors": "session_callback_errors_total",
+        "wall_s": "session_wall_seconds_total",
+        "retire_wall_s": "session_retire_wall_seconds_total",
+    }
+
     def __init__(self, spec: AlignSpec, cache: CompileCache | str = "shared",
-                 clock=None):
+                 clock=None, obs=None):
         self.spec = spec
         self.cfg = spec.cfg          # resolved; exposed for shims/stats
         self.mesh = spec.mesh
         self._clock = clock if clock is not None else time.monotonic
+        # one observability domain per session (registry + tracer on the
+        # session clock); 'off' -> the null bundle, zero hot-path cost
+        self.obs = resolve_obs(obs, clock=self._clock)
+        # metric objects are fetched ONCE here; the hot path pays a
+        # locked += per event (or a no-op call when obs='off')
+        self._m = {k: self.obs.counter(name)
+                   for k, name in self.STAT_METRICS.items()}
         if cache == "shared":
             store = _PROCESS_CACHE
         elif cache == "private":
@@ -491,13 +573,13 @@ class AlignSession:
         else:
             assert isinstance(cache, CompileCache), cache
             store = cache
-        self.cache = _SessionCacheView(store)
+        self.cache = _SessionCacheView(store, registry=self.obs.registry)
         self._mesh_fp = mesh_fingerprint(spec.mesh)
         self._queues: dict[tuple, list] = {}   # bucket -> [(future, r, f)]
         self._inflight: deque[_Dispatch] = deque()   # sync executor only
         self._open: dict[int, AlignFuture] = {}   # not yet handed out
         self._next_rid = 0
-        self._lock = threading.Lock()          # stats + _open + poisoning
+        self._lock = threading.Lock()          # _open + poisoning
         # serialises queue mutation + dispatch across CLIENT threads (the
         # retire thread never takes it — no deadlock with close/_drain);
         # re-entrant because flush()/close() nest dispatches under it
@@ -515,11 +597,18 @@ class AlignSession:
         # — in-flight depth is a property of the pipeline, not of a shape)
         self._max_inflight = spec.max_inflight
         self._inflight_win: deque = deque(maxlen=spec.occupancy_window)
-        self.stats = {"dispatches": 0, "lanes": 0, "pad_lanes": 0,
-                      "requests": 0, "cancelled": 0, "rescue_dispatches": 0,
-                      "rescue_lanes": 0, "lane_class_steps": 0,
-                      "inflight_steps": 0,
-                      "wall_s": 0.0, "retire_wall_s": 0.0}
+
+    @property
+    def stats(self) -> dict:
+        """Serving counters as the legacy dict — a point-in-time view
+        over the obs registry (asserted equal to registry reads in
+        tests/test_obs.py).  Zeros when ``obs='off'``."""
+        return {k: m.value for k, m in self._m.items()}
+
+    def _callback_error(self, exc: BaseException) -> None:
+        """Swallow-and-record for done-callbacks (see
+        AlignFuture._run_callbacks): must never raise."""
+        self._m["callback_errors"].inc()
 
     # ---- context management / shutdown --------------------------------
 
@@ -649,7 +738,7 @@ class AlignSession:
             self._next_rid += 1
             with self._lock:
                 self._open[fut.rid] = fut
-                self.stats["requests"] += 1
+            self._m["requests"].inc()
             bucket = self.bucket_for(len(read), len(ref))
             q = self._queues.setdefault(bucket, [])
             q.append((fut, read, ref))
@@ -724,8 +813,7 @@ class AlignSession:
         else:
             return
         win.clear()                      # fresh window for the new class
-        with self._lock:
-            self.stats["lane_class_steps"] += 1
+        self._m["lane_class_steps"].inc()
 
     # ---- adaptive in-flight window -------------------------------------
 
@@ -757,8 +845,7 @@ class AlignSession:
         else:
             return
         win.clear()                      # fresh window for the new bound
-        with self._lock:
-            self.stats["inflight_steps"] += 1
+        self._m["inflight_steps"].inc()
 
     # ---- dispatch ------------------------------------------------------
 
@@ -792,22 +879,28 @@ class AlignSession:
         refs = [it[2] for it in items]
         rb, fb = bucket
         lanes = bucket_lanes(len(items), self.cfg, self.mesh)
-        device_mode = self.spec.rescue_mode == "device"
-        rounds = self.spec.rescue_rounds if device_mode else None
-        exe = self._executable(self.cfg, lanes, rb, fb, rescue_rounds=rounds)
-        Lr, Lf = pad_geometry(self.cfg, rb, fb, rounds or 0)
-        dev = transfer.to_device(self._pad_batch(reads, refs, lanes, Lr, Lf))
-        out, _ = exe(*dev)
+        with self.obs.span("session.dispatch", bucket=f"{rb}x{fb}",
+                           lanes=lanes, n_real=len(items)):
+            device_mode = self.spec.rescue_mode == "device"
+            rounds = self.spec.rescue_rounds if device_mode else None
+            exe = self._executable(self.cfg, lanes, rb, fb,
+                                   rescue_rounds=rounds)
+            Lr, Lf = pad_geometry(self.cfg, rb, fb, rounds or 0)
+            dev = transfer.to_device(
+                self._pad_batch(reads, refs, lanes, Lr, Lf))
+            # the launch is async under jax dispatch: this span covers
+            # upload + enqueue, not device occupancy
+            with self.obs.span("device.execute", lanes=lanes):
+                out, _ = exe(*dev)
         d = _Dispatch(futs, reads, refs, out)
         if threaded:
             self._enqueue_retire(d)
         else:
             self._inflight.append(d)
-        with self._lock:
-            self.stats["dispatches"] += 1
-            self.stats["lanes"] += lanes
-            self.stats["pad_lanes"] += lanes - len(items)
-            self.stats["wall_s"] += self._clock() - t0
+        self._m["dispatches"].inc()
+        self._m["lanes"].inc(lanes)
+        self._m["pad_lanes"].inc(lanes - len(items))
+        self._m["wall_s"].inc(self._clock() - t0)
         self._adapt(bucket, len(items))
         self._adapt_inflight(len(items) >= cls)
 
@@ -914,19 +1007,21 @@ class AlignSession:
         needed, fulfill futures."""
         t0 = self._clock()
         n = len(d.futures)
-        keys = ("ops", "n_ops", "dist", "failed", "read_consumed",
-                "ref_consumed") + (("k_used",) if "k_used" in d.out else ())
-        host = transfer.to_host({k: d.out[k] for k in keys})
-        failed, dist, k_used, rcon, fcon, all_ops = \
-            decode_batch(host, n, self.cfg.k)
-        if self.spec.rescue_mode == "bucket" and failed.any():
-            self._rescue_compacted(d, failed, dist, k_used, rcon, fcon,
-                                   all_ops)
-        recs = records_from_state(failed, dist, k_used, rcon, fcon, all_ops)
-        for fut, rec in zip(d.futures, recs):
-            fut._fulfill(rec)
-        with self._lock:
-            self.stats["retire_wall_s"] += self._clock() - t0
+        with self.obs.span("retire.decode", n=n):
+            keys = ("ops", "n_ops", "dist", "failed", "read_consumed",
+                    "ref_consumed") + (("k_used",)
+                                       if "k_used" in d.out else ())
+            host = transfer.to_host({k: d.out[k] for k in keys})
+            failed, dist, k_used, rcon, fcon, all_ops = \
+                decode_batch(host, n, self.cfg.k)
+            if self.spec.rescue_mode == "bucket" and failed.any():
+                self._rescue_compacted(d, failed, dist, k_used, rcon, fcon,
+                                       all_ops)
+            recs = records_from_state(failed, dist, k_used, rcon, fcon,
+                                      all_ops)
+            for fut, rec in zip(d.futures, recs):
+                fut._fulfill(rec)
+        self._m["retire_wall_s"].inc(self._clock() - t0)
 
     def _rescue_compacted(self, d, failed, dist, k_used, rcon, fcon,
                           all_ops):
@@ -947,17 +1042,19 @@ class AlignSession:
             rb = self.spec.read_bucket(max(len(r) for r in reads))
             fb = self.spec.ref_bucket(max(len(f) for f in refs))
             lanes = bucket_lanes(len(todo), cfg_r, self.mesh)
-            exe = self._executable(cfg_r, lanes, rb, fb, rescue_rounds=None)
-            Lr, Lf = pad_geometry(cfg_r, rb, fb, 0)
-            dev = transfer.to_device(
-                self._pad_batch(reads, refs, lanes, Lr, Lf))
-            out, _ = exe(*dev)
-            host = transfer.to_host(
-                {k: out[k] for k in ("ops", "n_ops", "dist", "failed",
-                                     "read_consumed", "ref_consumed")})
-            with self._lock:
-                self.stats["rescue_dispatches"] += 1
-                self.stats["rescue_lanes"] += lanes
+            with self.obs.span("rescue.rung", k=cfg_r.k, lanes=lanes,
+                               n_todo=len(todo)):
+                exe = self._executable(cfg_r, lanes, rb, fb,
+                                       rescue_rounds=None)
+                Lr, Lf = pad_geometry(cfg_r, rb, fb, 0)
+                dev = transfer.to_device(
+                    self._pad_batch(reads, refs, lanes, Lr, Lf))
+                out, _ = exe(*dev)
+                host = transfer.to_host(
+                    {k: out[k] for k in ("ops", "n_ops", "dist", "failed",
+                                         "read_consumed", "ref_consumed")})
+            self._m["rescue_dispatches"].inc()
+            self._m["rescue_lanes"].inc(lanes)
             ok = ~np.asarray(host["failed"])
             for loc, glob in enumerate(todo):
                 if ok[loc]:
@@ -1018,8 +1115,7 @@ class AlignSession:
                             f"request rid={fut.rid} cancelled before "
                             f"dispatch"))
                         self._forget(fut.rid)
-                        with self._lock:
-                            self.stats["cancelled"] += 1
+                        self._m["cancelled"].inc()
                         return True
             return False                     # dispatched: lane committed
 
@@ -1067,8 +1163,7 @@ class AlignSession:
         """Serving + compile-cache counters in one dict (benchmarks/CI).
         With adaptive_lanes, `occupancy` reports each bucket's negotiated
         lane class and recent fills."""
-        with self._lock:
-            out = dict(self.stats)
+        out = self.stats                 # registry-backed property
         out["compile_cache"] = self.cache.stats()
         if self.spec.adaptive_lanes:
             out["occupancy"] = {

@@ -7,15 +7,23 @@ serve.engine goes through ``to_device`` / ``to_host`` below, so tests and
 benchmarks can assert transfer *counts* (one upload + one download per
 batch for the on-device rescue path, regardless of rescue rounds) and
 report transfer *bytes* per round.  Pure bookkeeping — no behavior change.
+
+The counters live on the process-global :mod:`repro.obs` registry
+(``transfer_h2d_calls_total`` etc.) — transfers are cross-cutting, not
+per-session, so they sit beside the shared compile-cache counters.  The
+legacy :func:`stats`/:func:`reset` contract is a view over those
+registry counters and keeps its exact semantics (``reset()`` resets only
+this family, never the whole registry).
 """
 from __future__ import annotations
 
 import dataclasses
-import threading
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from ..obs import default_registry
 
 
 @dataclasses.dataclass
@@ -26,23 +34,27 @@ class TransferStats:
     d2h_bytes: int = 0
 
 
-_STATS = TransferStats()
 # the session's background retire executor downloads concurrently with the
-# dispatch thread's uploads; counter increments must stay exact for the
-# 1-upload/1-download assertions (read-modify-write races otherwise)
-_LOCK = threading.Lock()
+# dispatch thread's uploads; Counter.inc is locked, so the counts stay
+# exact for the 1-upload/1-download assertions
+_REG = default_registry()
+_H2D_CALLS = _REG.counter("transfer_h2d_calls_total")
+_H2D_BYTES = _REG.counter("transfer_h2d_bytes_total")
+_D2H_CALLS = _REG.counter("transfer_d2h_calls_total")
+_D2H_BYTES = _REG.counter("transfer_d2h_bytes_total")
 
 
 def reset() -> None:
-    global _STATS
-    with _LOCK:
-        _STATS = TransferStats()
+    for c in (_H2D_CALLS, _H2D_BYTES, _D2H_CALLS, _D2H_BYTES):
+        c.reset()
 
 
 def stats() -> TransferStats:
     """Snapshot of the counters since the last reset()."""
-    with _LOCK:
-        return dataclasses.replace(_STATS)
+    return TransferStats(h2d_calls=_H2D_CALLS.value,
+                         h2d_bytes=_H2D_BYTES.value,
+                         d2h_calls=_D2H_CALLS.value,
+                         d2h_bytes=_D2H_BYTES.value)
 
 
 def _nbytes(tree) -> int:
@@ -52,18 +64,14 @@ def _nbytes(tree) -> int:
 
 def to_device(x):
     """Upload a host array (or pytree of arrays); counts as ONE transfer."""
-    nb = _nbytes(x)
-    with _LOCK:
-        _STATS.h2d_calls += 1
-        _STATS.h2d_bytes += nb
+    _H2D_CALLS.inc()
+    _H2D_BYTES.inc(_nbytes(x))
     return jax.tree_util.tree_map(jnp.asarray, x)
 
 
 def to_host(x):
     """Download a device array (or pytree); counts as ONE transfer."""
     out = jax.device_get(x)
-    nb = _nbytes(out)
-    with _LOCK:
-        _STATS.d2h_calls += 1
-        _STATS.d2h_bytes += nb
+    _D2H_CALLS.inc()
+    _D2H_BYTES.inc(_nbytes(out))
     return out

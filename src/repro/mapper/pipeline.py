@@ -23,6 +23,15 @@ Per read, the best surviving alignment (min edit distance, chain score
 as tie-break) becomes its :class:`MappedRead`; the batch-level
 :class:`MapBatchResult` carries the funnel telemetry (candidates,
 kill rate, alignments) that ``benchmarks/run.py --json`` exports.
+
+The funnel rides the session's observability domain (repro.obs): each
+stage runs under its own span (``mapper.map_batch`` ->
+``index.lookup`` / ``chain`` / ``prefilter`` / ``align``) and the
+cumulative counters (``mapper_*_total``) live on the session's
+registry; ``MapBatchResult.stats`` is the per-batch DELTA of those
+counters (start-vs-end snapshot), so every number it reports is
+derivable from the registry.  With ``obs='off'`` the funnel, like the
+session, trades its telemetry for zero overhead (stats read zeros).
 """
 from __future__ import annotations
 
@@ -98,6 +107,17 @@ class ReadMapper:
     ``rescue_rounds=``) and closes it with the mapper.
     """
 
+    #: MapBatchResult.stats key -> cumulative registry metric (deltas
+    #: per batch; kill_rate is derived) — see docs/observability.md
+    FUNNEL_METRICS = {
+        "n_reads": "mapper_reads_total",
+        "n_mapped": "mapper_mapped_total",
+        "n_candidates": "mapper_candidates_total",
+        "n_killed": "mapper_killed_total",
+        "n_aligned": "mapper_aligned_total",
+        "n_no_candidates": "mapper_no_candidates_total",
+    }
+
     def __init__(self, genome, cfg: MapperConfig | None = None, *,
                  session=None, **plan_kwargs):
         self.cfg = cfg or MapperConfig()
@@ -109,6 +129,12 @@ class ReadMapper:
         self._owns_session = session is None
         self.session = session if session is not None else api_session.plan(
             **plan_kwargs)
+        # the mapper shares the session's observability domain: one
+        # registry/trace carries the whole funnel -> align story
+        self.obs = self.session.obs
+        self._m = {k: self.obs.counter(name)
+                   for k, name in self.FUNNEL_METRICS.items()}
+        self._m_batches = self.obs.counter("mapper_batches_total")
 
     # -- stages ------------------------------------------------------------
 
@@ -146,32 +172,47 @@ class ReadMapper:
     # -- front end ---------------------------------------------------------
 
     def map_batch(self, reads) -> MapBatchResult:
-        """Map a batch of reads (strings or ``encode`` code arrays)."""
+        """Map a batch of reads (strings or ``encode`` code arrays).
+        Each funnel stage runs under its own span; the batch stats are
+        the registry-counter deltas across this call."""
+        before = {k: m.value for k, m in self._m.items()}
         codes = [encode(r) if isinstance(r, str) else
                  np.asarray(r, np.uint8) for r in reads]
 
-        per_read = [self.candidates(rc) for rc in codes]
-        pairs = [(i, c) for i, cs in enumerate(per_read) for c in cs]
+        with self.obs.span("mapper.map_batch", n_reads=len(codes)):
+            with self.obs.span("index.lookup"):
+                anchors = [self.index.anchors(rc) for rc in codes]
+            with self.obs.span("chain"):
+                per_read = [
+                    chain_anchors(qpos, rpos, len(rc),
+                                  min_anchors=self.cfg.min_anchors,
+                                  max_candidates=self.cfg.max_candidates,
+                                  genome_len=self.index.genome_len)
+                    for (qpos, rpos), rc in zip(anchors, codes)]
+            pairs = [(i, c) for i, cs in enumerate(per_read) for c in cs]
 
-        if self.cfg.prefilter and pairs:
-            scores = self._filter_scores(pairs, codes)
-            keep = [s >= self._keep_threshold(len(codes[i]), c)
-                    for s, (i, c) in zip(scores, pairs)]
-        else:
-            scores = np.zeros(len(pairs), np.int32)
-            keep = [True] * len(pairs)
+            if self.cfg.prefilter and pairs:
+                with self.obs.span("prefilter", n_pairs=len(pairs)):
+                    scores = self._filter_scores(pairs, codes)
+                    keep = [s >= self._keep_threshold(len(codes[i]), c)
+                            for s, (i, c) in zip(scores, pairs)]
+            else:
+                scores = np.zeros(len(pairs), np.int32)
+                keep = [True] * len(pairs)
 
-        futs = {}                      # pair index -> AlignFuture
-        for p, ((i, c), k) in enumerate(zip(pairs, keep)):
-            if k:
-                futs[p] = self.session.submit(
-                    codes[i], self.genome[c.ref_start:c.ref_end])
-        self.session.flush()
+            with self.obs.span("align", n_pairs=sum(keep)):
+                futs = {}                  # pair index -> AlignFuture
+                for p, ((i, c), k) in enumerate(zip(pairs, keep)):
+                    if k:
+                        futs[p] = self.session.submit(
+                            codes[i], self.genome[c.ref_start:c.ref_end])
+                self.session.flush()
+                results = {p: f.result() for p, f in futs.items()}
+        return self._finalize(codes, per_read, pairs, scores, keep,
+                              results, before)
 
-        results = {p: f.result() for p, f in futs.items()}
-        return self._finalize(codes, per_read, pairs, scores, keep, results)
-
-    def _finalize(self, codes, per_read, pairs, scores, keep, results):
+    def _finalize(self, codes, per_read, pairs, scores, keep, results,
+                  before):
         outcomes = [[] for _ in codes]    # CandidateOutcome per read
         best = [None] * len(codes)        # (dist, -chain_score, p)
         for p, ((i, c), s, k) in enumerate(zip(pairs, scores, keep)):
@@ -199,16 +240,20 @@ class ReadMapper:
                 int(res["dist"]), res["cigar"], int(res["k_used"]),
                 tuple(outcomes[i])))
 
-        n_killed = sum(1 for k in keep if not k)
-        stats = {
-            "n_reads": len(codes),
-            "n_mapped": sum(1 for m in mapped if m.ok),
-            "n_candidates": len(pairs),
-            "n_killed": n_killed,
-            "kill_rate": n_killed / max(1, len(pairs)),
-            "n_aligned": len(results),
-            "n_no_candidates": sum(1 for cs in per_read if not cs),
-        }
+        # record the funnel into the registry, then report this batch as
+        # the counter DELTA across the call — MapBatchResult telemetry
+        # is a registry view, not a hand-collected dict
+        self._m_batches.inc()
+        self._m["n_reads"].inc(len(codes))
+        self._m["n_mapped"].inc(sum(1 for m in mapped if m.ok))
+        self._m["n_candidates"].inc(len(pairs))
+        self._m["n_killed"].inc(sum(1 for k in keep if not k))
+        self._m["n_aligned"].inc(len(results))
+        self._m["n_no_candidates"].inc(
+            sum(1 for cs in per_read if not cs))
+        stats = {k: self._m[k].value - before[k] for k in self._m}
+        stats["kill_rate"] = (stats["n_killed"]
+                              / max(1, stats["n_candidates"]))
         return MapBatchResult(mapped, stats)
 
     def map_read(self, read) -> MappedRead:

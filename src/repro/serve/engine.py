@@ -55,17 +55,20 @@ class AlignmentEngine:
                  backend: str | None = None, rescue_rounds: int = 2,
                  pad_to_batch: bool = True, mesh=None,
                  executor: str = "sync", adaptive_lanes: bool = False,
-                 cache="shared"):
+                 cache="shared", obs=None):
         # the engine's aligner IS a planned session: one spec resolution,
         # bucketed AOT executables, compacted bucket rescue.  executor /
-        # adaptive_lanes / cache pass straight through to the session
-        # (background retire thread, occupancy-adaptive lane classes,
-        # process-shared compile cache — see docs/api.md)
+        # adaptive_lanes / cache / obs pass straight through to the
+        # session (background retire thread, occupancy-adaptive lane
+        # classes, process-shared compile cache, observability domain —
+        # see docs/api.md and docs/observability.md)
         self.aligner = plan(cfg, backend=backend,
                             rescue_rounds=rescue_rounds,
                             batch_lanes=batch_size, mesh=mesh,
                             executor=executor,
-                            adaptive_lanes=adaptive_lanes, cache=cache)
+                            adaptive_lanes=adaptive_lanes, cache=cache,
+                            obs=obs)
+        self.obs = self.aligner.obs
         self.pad_multiple = pair_pad_multiple(self.aligner.cfg, mesh)
         self.batch_size = quantise_lanes(batch_size, self.aligner.cfg, mesh)
         self.max_wait_s = max_wait_s

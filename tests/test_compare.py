@@ -106,6 +106,27 @@ def test_gateway_slo_improvements_never_gate():
     assert all(status == "ok" for *_, status in rows)
 
 
+def test_meta_provenance_rendered_beside_table():
+    """benchmarks.run writes a ``meta`` block (jax version, cpu count,
+    git sha, timestamp, platform); render() must show it for both
+    reports — and say so explicitly when a pre-PR9 report has none — so
+    a regression caused by a different machine/jax/sha is diagnosable
+    at a glance."""
+    base = _report(session={"pairs_per_s": 100.0})
+    cur = {"derived": {"session": {"pairs_per_s": 100.0}},
+           "meta": {"jax_version": "0.4.37", "cpu_count": 1,
+                    "git_sha": "abc1234",
+                    "timestamp_utc": "2026-08-08T00:00:00+00:00",
+                    "platform": "Linux-x86_64"}}
+    rows, regs, added, removed = compare(cur, base, 0.30)
+    table = render(rows, regs, added, removed, 0.30, "BENCH_X.json",
+                   current=cur, baseline=base)
+    assert "> current: jax=0.4.37 cpus=1 sha=abc1234" in table
+    assert "> baseline: no meta block (pre-PR9 report)" in table
+    # meta must never leak into the gate itself
+    assert regs == [] and added == [] and removed == []
+
+
 def test_latency_p99_widened_tolerance():
     """latency_p99_ms carries a 3x tolerance multiplier (1-core runner
     tail noise): +80% growth passes at the default 0.30 threshold, while
