@@ -107,6 +107,55 @@ def run(n_reads=24, read_len=1000, error_rate=0.10, seed=0):
     return rows, n_reads, read_len
 
 
+def gpu_rows(t, n_reads=24, read_len=1000, error_rate=0.10, seed=0):
+    """The tentpole's paper-headline GPU row family (§IV of the paper:
+    4.1x vs the CPU GenASM pipeline, 62x vs KSW2, 7.2x vs Edlib).
+
+    On a machine with a CUDA/ROCm device the improved pipeline runs
+    COMPILED under backend='pallas_gpu' (the Triton lowering of the fused
+    DC+TB kernels) and the three ratios are measured against the CPU
+    contender times in ``t`` (the run() table — same corpus recipe, same
+    W=64/O=24/k=12 geometry).  Without one, every measured cell is 0.0:
+    compare.py renders zero-vs-zero as ``pending-hardware (not gated)``,
+    so the row family, derived keys and ratio definitions are committed
+    and trajectory-stable BEFORE hardware lands — and flip to gated
+    throughput rows (``gpu_pairs_per_s`` matches the gate's substring)
+    the first nightly that runs on a GPU runner.
+
+    Interpret-mode timing is deliberately NOT substituted when no GPU is
+    present: it measures the Pallas interpreter, not the Triton kernels,
+    and a plausible-looking wrong number is worse than an honest zero."""
+    import jax
+
+    from repro.kernels.ops import GPU_PLATFORMS
+
+    on_gpu = jax.default_backend() in GPU_PLATFORMS
+    rows, derived = [], {}
+    t_gpu = 0.0
+    if on_gpu:
+        g = synth_genome(400_000, seed=seed)
+        rs = simulate_reads(g, n_reads, ReadSimConfig(read_len=read_len,
+                                                      error_rate=error_rate,
+                                                      seed=seed + 1))
+        cfg = AlignerConfig(W=64, O=24, k=12, backend="pallas_gpu")
+        al = GenASMAligner(cfg, rescue_rounds=1)
+        t_gpu = _median_time(
+            lambda: al.align(rs.reads, rs.ref_segments)) / n_reads
+    mode = "compiled_triton" if on_gpu else "pending-hardware_no_cuda_device"
+    rows.append(("aligners/genasm_gpu_improved", t_gpu * 1e6, mode))
+    derived["gpu_pairs_per_s"] = (1.0 / t_gpu) if t_gpu else 0.0
+    for key, base_name, target in (
+            ("gpu_vs_cpu_genasm", "genasm_improved", "paper_gpu4.1x"),
+            ("gpu_vs_ksw2_like", "ksw2_like_affine_dp", "paper_gpu62x"),
+            ("gpu_vs_edlib_like", "edlib_like_myers", "paper_gpu7.2x")):
+        ratio = (t.get(base_name, 0.0) / t_gpu) if t_gpu else 0.0
+        derived[key] = ratio
+        rows.append((f"aligners/speedup_{key}", 0.0,
+                     f"{ratio:.2f}x_{target}" if on_gpu
+                     else f"pending-hardware_{target}"))
+    return rows, derived
+
+
 def rescue_paths(n_reads=8, read_len=400, seed=3, rescue_rounds=2):
     """On-device masked k-doubling vs the host numpy rescue loop on a
     high-error read set (most pairs need at least one rescue round).
@@ -573,6 +622,9 @@ def table(n_reads=24, read_len=1000):
         "dc_engine_vs_edlib_like": t["edlib_like_myers"]
                                    / t["genasm_dc_distance_only"],
     }
+    g_rows, g_derived = gpu_rows(t, n_reads=n, read_len=L)
+    out += g_rows
+    derived.update(g_derived)
     r_rows, r_derived = rescue_paths(n_reads=max(4, n_reads // 3),
                                      read_len=min(400, L))
     out += r_rows

@@ -29,7 +29,10 @@ PR-8 gateway SLO keys (``latency_p99_ms``, ``shed_rate``,
 Only metrics present in BOTH reports can fail the gate.  Added metrics
 (no baseline) and removed metrics (no current value) are listed
 explicitly after the table — loudly, so a silently-renamed key can't
-dodge the gate unnoticed — but exit 0.
+dodge the gate unnoticed — but exit 0.  A metric at zero in BOTH
+reports is a committed placeholder for hardware the runner lacks (the
+``pallas_gpu`` rows on CPU CI) and renders as ``pending-hardware (not
+gated)``; zero on only the baseline side renders ``zero-baseline``.
 
 A markdown trajectory table (throughput and footprint columns side by
 side) is printed, and appended to ``$GITHUB_STEP_SUMMARY`` when set (the
@@ -121,8 +124,14 @@ def compare(current: dict, baseline: dict, threshold: float):
         if b == 0:
             # a zero baseline gates nothing: the floor c >= 0 (or ceiling
             # c <= 0) is trivially true for any throughput and the delta
-            # is undefined — surface it instead of a misleading "ok +0.0%"
-            rows.append((name, b, c, None, "zero-baseline (not gated)"))
+            # is undefined — surface it instead of a misleading "ok +0.0%".
+            # Zero on BOTH sides is a different situation: a committed
+            # placeholder for hardware this runner lacks (the pallas_gpu
+            # rows on CPU CI) — annotate it as such so the table reads as
+            # "structured, awaiting hardware", not as a suspicious zero.
+            status = ("pending-hardware (not gated)" if c == 0
+                      else "zero-baseline (not gated)")
+            rows.append((name, b, c, None, status))
             continue
         delta = (c - b) / b
         eff = threshold * _tolerance_mult(name)

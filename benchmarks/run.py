@@ -85,6 +85,10 @@ def main() -> None:
           f"{derived['improved_vs_ksw2_like']:.2f}x_paper_cpu15.2x")
     print(f"aligners/speedup_dc_engine_vs_edlib_like,0.0,"
           f"{derived['dc_engine_vs_edlib_like']:.2f}x_paper_cpu1.7x")
+    # The pallas_gpu paper-headline family (4.1x / 62x / 7.2x) rides in
+    # the table() rows above (bench_aligners.gpu_rows): pending-hardware
+    # zeros on CPU-only runners, measured — and gated via the
+    # gpu_pairs_per_s derived key — on runners with a CUDA/ROCm device.
 
     # the session front door: ragged-stream pairs/s + bucket-hit stats
     # (the compile-stability numbers the PR-over-PR trajectory tracks).

@@ -24,7 +24,19 @@ ap.add_argument("--decoys", type=int, default=1)
 ap.add_argument("--error-rate", type=float, default=0.10)
 ap.add_argument("--genome", type=int, default=1_000_000)
 ap.add_argument("--W", type=int, default=64)
+ap.add_argument("--backend", choices=("jnp", "pallas", "pallas_fused",
+                                      "pallas_gpu"), default="jnp",
+                help="aligner execution path (docs/backends.md)")
 args = ap.parse_args()
+
+if args.backend != "jnp":
+    # the backend names a lowering; default_interpret decides where it
+    # actually runs on this host (docs/backends.md)
+    import jax
+    from repro.kernels.ops import default_interpret
+    mode = "interpret" if default_interpret(args.backend) else "compiled"
+    print(f"backend {args.backend}: {mode} mode on this host "
+          f"(jax default_backend={jax.default_backend()})")
 
 genome = synth_genome(args.genome, seed=11)
 rs = simulate_reads(genome, args.reads,
@@ -36,7 +48,8 @@ print(f"{args.reads} reads x {args.rlen}bp @ {args.error_rate:.0%} error, "
 
 # the session front door: plan once, warm the one bucket this pipeline
 # hits, and the steady-state pass is pure cache hits (no re-tracing)
-session = plan(AlignerConfig(W=args.W, O=args.W * 3 // 8, k=args.W * 3 // 16),
+session = plan(AlignerConfig(W=args.W, O=args.W * 3 // 8, k=args.W * 3 // 16,
+                             backend=args.backend),
                rescue_rounds=1, batch_lanes=len(chains))
 reads = [rs.reads[i] for i, _ in chains]
 refs = [seg for _, seg in chains]
@@ -67,7 +80,8 @@ print(f"aligned true loci: {aligned_true}/{n_true}; "
       f"rejected decoys: {rejected_decoys}/{len(chains)-n_true}")
 print(f"summary: {res.summary(base_k=session.cfg.k)}")
 print(f"steady-state: {t_steady:.2f}s = {len(chains)/t_steady:.1f} pairs/s = "
-      f"{bp/t_steady/1e6:.2f} Mbp/s (single CPU core, jnp backend)")
+      f"{bp/t_steady/1e6:.2f} Mbp/s (single CPU core, {args.backend} "
+      f"backend)")
 print(f"mean edit distance of true alignments: "
       f"{np.mean([res.dist[i] for i in range(len(chains)) if i % (1+args.decoys)==0 and ok[i]]):.1f} "
       f"(expected ~{args.error_rate*args.rlen*0.95:.0f})")

@@ -22,6 +22,11 @@ ap.add_argument("--requests", type=int, default=32)
 ap.add_argument("--len", type=int, default=800, dest="rlen")
 ap.add_argument("--fast", action="store_true",
                 help="small geometry for CI smoke runs")
+ap.add_argument("--backend", choices=("jnp", "pallas", "pallas_fused",
+                                      "pallas_gpu"), default="jnp",
+                help="aligner execution path (docs/backends.md); Pallas "
+                     "backends print whether they run interpreted or "
+                     "compiled on this host")
 ap.add_argument("--executor", choices=("thread", "sync"), default="thread",
                 help="'thread' (default) retires dispatches on the "
                      "background executor so CIGAR decode overlaps "
@@ -37,8 +42,16 @@ ap.add_argument("--metrics-dump", action="store_true",
                      "docs/observability.md)")
 args = ap.parse_args()
 
-cfg = AlignerConfig(W=32, O=12, k=8) if args.fast \
-    else AlignerConfig(W=64, O=24, k=12)
+cfg = AlignerConfig(W=32, O=12, k=8, backend=args.backend) if args.fast \
+    else AlignerConfig(W=64, O=24, k=12, backend=args.backend)
+if args.backend != "jnp":
+    # say which execution mode is actually in effect on this host — the
+    # backend names a lowering, default_interpret decides where it runs
+    # (docs/backends.md, "Three-way execution modes")
+    from repro.kernels.ops import default_interpret
+    mode = "interpret" if default_interpret(args.backend) else "compiled"
+    print(f"backend {args.backend}: {mode} mode on this host "
+          f"(jax default_backend={__import__('jax').default_backend()})")
 genome = synth_genome(200_000 if args.fast else 500_000, seed=3)
 # a RAGGED stream: three read-length classes hitting different buckets
 lens = [max(64, args.rlen // 4), max(96, args.rlen // 2), args.rlen]

@@ -6,6 +6,14 @@ import hashlib
 
 from .bitops import WORD_BITS, n_words
 
+#: valid knob choices, named so validation errors, docs and the docs-CI
+#: coverage checker share one source of truth
+BACKENDS = ("jnp", "pallas", "pallas_fused", "pallas_gpu")
+#: the backends that dispatch Pallas kernels (lane-tile pad quantum applies)
+PALLAS_BACKENDS = ("pallas", "pallas_fused", "pallas_gpu")
+STORES = ("edges4", "and", "band")
+TAIL_STORES = ("auto", "band", "full")
+
 
 @dataclasses.dataclass(frozen=True)
 class AlignerConfig:
@@ -23,11 +31,17 @@ class AlignerConfig:
                  holds the solution.
 
     backend (requires store='band' for the pallas variants; interpret mode
-    on CPU, compiled on TPU — see docs/backends.md):
+    on CPU, compiled on the matching accelerator — see docs/backends.md):
       'jnp'          — pure-jnp fills (core.genasm) + host traceback
       'pallas'       — Pallas DC kernel, band shipped to HBM, jnp traceback
-      'pallas_fused' — Pallas DC+TB kernel: traceback walks the DENT band
-                       in VMEM scratch; only ops/meta leave the chip
+      'pallas_fused' — Pallas DC+TB kernel (TPU lowering): traceback walks
+                       the DENT band in VMEM scratch; only ops/meta leave
+                       the chip
+      'pallas_gpu'   — the same fused DC+TB kernels lowered through
+                       Pallas's Triton backend for CUDA GPUs: the Triton
+                       path has no scratch memory, so the band rides a
+                       GMEM-backed output block and the live DP columns
+                       stay in registers (core.counting.gpu_* model)
     """
     W: int = 64
     O: int = 24
@@ -35,7 +49,7 @@ class AlignerConfig:
     store: str = "band"
     early_term: bool = True
     tb_margin: int = 3          # extra stored columns beyond the provable band
-    backend: str = "jnp"        # 'jnp' | 'pallas' | 'pallas_fused'
+    backend: str = "jnp"        # 'jnp' | 'pallas' | 'pallas_fused' | 'pallas_gpu'
     n_symbols: int = 4
     lane_tile: int = 128        # problems per Pallas grid step (one VPU-lane
                                 # tile); also the per-shard batch pad unit
@@ -46,15 +60,34 @@ class AlignerConfig:
                                 # 'auto' = band whenever it is a strict win
 
     def __post_init__(self):
-        assert 0 < self.O < self.W
-        assert 0 < self.k < self.W
-        assert self.lane_tile > 0
-        assert self.store in ("edges4", "and", "band")
-        assert self.tail_store in ("auto", "band", "full")
-        assert self.backend in ("jnp", "pallas", "pallas_fused")
+        # ValueError (not assert): these run under ``python -O`` too, and
+        # each names the offending knob plus the valid choices — the error
+        # IS the documentation when a typo'd backend reaches resolve_config
+        if not 0 < self.O < self.W:
+            raise ValueError(f"O={self.O} must satisfy 0 < O < W "
+                             f"(W={self.W}: the overlap is a strict part "
+                             f"of every window)")
+        if not 0 < self.k < self.W:
+            raise ValueError(f"k={self.k} must satisfy 0 < k < W "
+                             f"(W={self.W}: the edit budget cannot exceed "
+                             f"the window)")
+        if self.lane_tile <= 0:
+            raise ValueError(f"lane_tile={self.lane_tile} must be a "
+                             f"positive lane count")
+        if self.store not in STORES:
+            raise ValueError(f"store={self.store!r} is not one of {STORES}")
+        if self.tail_store not in TAIL_STORES:
+            raise ValueError(f"tail_store={self.tail_store!r} is not one "
+                             f"of {TAIL_STORES}")
+        if self.backend not in BACKENDS:
+            raise ValueError(f"backend={self.backend!r} is not one of "
+                             f"{BACKENDS}")
         # the Pallas kernels implement the fully-improved (banded) DP only
-        assert self.backend == "jnp" or self.store == "band", \
-            "pallas backends require store='band'"
+        if self.backend != "jnp" and self.store != "band":
+            raise ValueError(f"backend={self.backend!r} requires "
+                             f"store='band' (got store={self.store!r}): "
+                             f"the Pallas kernels implement the banded DP "
+                             f"only")
 
     @property
     def nw(self) -> int:

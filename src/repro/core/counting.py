@@ -90,6 +90,34 @@ def tail_scratch_words(cfg: AlignerConfig, tile: int,
     return (cfg.k + 1) * (n_text + 1) * cfg.nw * tile
 
 
+def gpu_store_words(cfg: AlignerConfig, tile: int) -> int:
+    """Per-program DP-store words of the square fused kernel on the Triton
+    (pallas_gpu) path.  The store is the *same* DENT band as the TPU
+    path's VMEM scratch — only the memory space differs: jax's Triton
+    lowering has no scratch memory, so the band rides a GMEM-backed output
+    block (kernels.genasm_dc.gpu_fused_store_shapes, asserted equal in
+    tests/test_scratch_accounting.py)."""
+    return kernel_scratch_words(cfg, tile)
+
+
+def gpu_tail_store_words(cfg: AlignerConfig, tile: int,
+                         n_text: int | None = None,
+                         banded: bool | None = None) -> int:
+    """Per-program DP-store words of the rectangular-tail kernel on the
+    Triton path (same words as tail_scratch_words, GMEM-backed)."""
+    return tail_scratch_words(cfg, tile, n_text, banded)
+
+
+def gpu_lane_state_words(cfg: AlignerConfig) -> int:
+    """Register-resident live DP state per lane on the Triton path, in
+    32-bit words: the column-major fill carries the previous AND current
+    column's k+1 level vectors (nw words each) in the loop state — the
+    lane-per-thread mapping's binding resource, so this is what the GPU
+    lane-tile planner budgets against (core.windowing.plan_lane_tile)
+    instead of the TPU's 16 MiB VMEM scratch budget."""
+    return 2 * (cfg.k + 1) * cfg.nw
+
+
 def reduction_report(cfg: AlignerConfig, avg_levels: float,
                      tb_steps: float | None = None) -> dict:
     """Footprint / access reduction factors for a steady-state main window.

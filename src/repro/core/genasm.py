@@ -225,12 +225,12 @@ def dc(pat_codes, text_codes, m_len, n_len, cfg: AlignerConfig,
     shard_maps the kernel dispatch over the mesh's pair axes (jnp fills
     ignore it — GSPMD shards them from the caller's constraints)."""
     if cfg.store == "band":
-        if cfg.backend in ("pallas", "pallas_fused"):
+        if cfg.backend in ("pallas", "pallas_fused", "pallas_gpu"):
             # local import: kernels.ops imports build_pm_ext from this module
             from ..kernels.ops import default_interpret, genasm_dc_op
-            dist, band, lvl = genasm_dc_op(pat_codes, text_codes, cfg=cfg,
-                                           interpret=default_interpret(),
-                                           mesh=mesh)
+            dist, band, lvl = genasm_dc_op(
+                pat_codes, text_codes, cfg=cfg,
+                interpret=default_interpret(cfg.backend), mesh=mesh)
             B = pat_codes.shape[0]
             r_fin = jnp.zeros((B, cfg.k + 1, cfg.nw), jnp.uint32)
             return DCResult(dist, dist <= cfg.k, r_fin, {"Rb": band}, lvl)

@@ -77,20 +77,56 @@ def bucket_avals(cfg: AlignerConfig, lanes: int, read_bucket: int,
             sds((lanes, Lf), jnp.uint8), sds((lanes,), jnp.int32))
 
 
-def plan_lane_tile(cfg: AlignerConfig, vmem_budget_bytes: int = 16 * 2**20,
-                   quantum: int = 128, ceiling: int = 4096) -> int:
-    """Largest lane tile (multiple of `quantum`, the VPU lane width) whose
-    square fused kernel AND tail kernel DP stores both fit the per-core
-    VMEM budget.
+#: GPU lane-tile planning constants: the quantum is a warp (32 threads,
+#: one lane per thread), the ceiling a CTA (1024 threads), and the budget
+#: one SM's 32-bit register file (64K registers) — the live DP columns are
+#: the Triton mapping's binding resource, not scratch bytes (the band
+#: store is GMEM-backed on that path; see core.counting.gpu_*).
+GPU_LANE_QUANTUM = 32
+GPU_LANE_CEILING = 1024
+GPU_REG_BUDGET_WORDS = 64 * 1024
 
-    This is where the tentpole's reclaimed bytes get *spent*: the tail
-    kernel's store was the binding constraint, and the Scrooge-style band
-    (cfg.tail_banded) roughly halves it at the default geometry, so the
-    planner's ceiling doubles — more lanes per kernel launch, fewer grid
-    steps per batch.  Sessions opt in with plan(..., lane_tile='auto')
-    (repro.api); the bucket pad unit (lane_tile * n_shards) follows
-    automatically through kernels.ops._pad_unit."""
-    from .counting import kernel_scratch_words, tail_scratch_words
+
+def plan_lane_tile(cfg: AlignerConfig, vmem_budget_bytes: int = 16 * 2**20,
+                   quantum: int = 128, ceiling: int = 4096,
+                   reg_budget_words: int = GPU_REG_BUDGET_WORDS) -> int:
+    """Largest lane tile whose kernels fit the backend's on-chip budget.
+
+    TPU backends (and jnp, which shares their geometry when a pallas
+    backend is swapped in later): the largest multiple of `quantum` (the
+    VPU lane width) whose square fused kernel AND tail kernel VMEM scratch
+    both fit `vmem_budget_bytes`.  This is where the tentpole's reclaimed
+    bytes get *spent*: the tail kernel's store was the binding constraint,
+    and the Scrooge-style band (cfg.tail_banded) roughly halves it at the
+    default geometry, so the planner's ceiling doubles — more lanes per
+    kernel launch, fewer grid steps per batch.
+
+    backend='pallas_gpu': a *register* model instead — the Triton lowering
+    keeps the band store in GMEM (no scratch memory) and the live DP
+    columns in registers, so the tile is the largest multiple of a warp
+    (GPU_LANE_QUANTUM) whose per-lane live state
+    (core.counting.gpu_lane_state_words) fits `reg_budget_words`, capped
+    at a CTA (GPU_LANE_CEILING).
+
+    Sessions opt in with plan(..., lane_tile='auto') (repro.api); the
+    bucket pad unit (lane_tile * n_shards) follows automatically through
+    kernels.ops._pad_unit.  Raises ValueError (naming the W/k geometry and
+    bytes) when even one quantum of lanes over-commits the budget —
+    flooring silently would launch kernels past the budget."""
+    from .counting import (gpu_lane_state_words, kernel_scratch_words,
+                           tail_scratch_words)
+    if cfg.backend == "pallas_gpu":
+        per_lane = gpu_lane_state_words(cfg)
+        tile = (reg_budget_words // (per_lane * GPU_LANE_QUANTUM)) \
+            * GPU_LANE_QUANTUM
+        if tile == 0:
+            raise ValueError(
+                f"one warp of live DP state does not fit the register "
+                f"budget: geometry W={cfg.W} k={cfg.k} needs "
+                f"{per_lane * GPU_LANE_QUANTUM:,} words for "
+                f"{GPU_LANE_QUANTUM} lanes but reg_budget_words="
+                f"{reg_budget_words:,}")
+        return int(min(tile, GPU_LANE_CEILING))
     assert quantum > 0 and ceiling >= quantum
     per_lane = 4 * max(kernel_scratch_words(cfg, 1),
                        tail_scratch_words(cfg, 1))
@@ -167,13 +203,16 @@ def align_pairs(reads, read_len, refs, ref_len, *, cfg: AlignerConfig,
         wfull = jnp.full((B,), W, jnp.int32)
         pat = _slice_rev(reads, read_pos, W, wfull)
         txt = _slice_rev(refs, ref_pos, W, wfull)
-        if cfg.store == "band" and cfg.backend == "pallas_fused":
+        if cfg.store == "band" and cfg.backend in ("pallas_fused",
+                                                   "pallas_gpu"):
             # fused kernel: DC + committed traceback in one Pallas call, the
-            # DENT band never leaves VMEM — no host-side traceback walk
+            # DENT band never leaves the chip — no host-side traceback walk
+            # ('pallas_gpu' lowers the same kernel body through Triton)
             from ..kernels.ops import default_interpret, genasm_tb_fused_op
             tb = genasm_tb_fused_op(pat, txt, cfg=cfg, commit_limit=stride,
                                     max_ops=max_ops_w, max_steps=max_steps_w,
-                                    interpret=default_interpret(), mesh=mesh)
+                                    interpret=default_interpret(cfg.backend),
+                                    mesh=mesh)
             solved, levels_run = tb["solved"], tb["levels"]
         else:
             res = dc(pat, txt, wfull, wfull, cfg, mesh=mesh)
@@ -209,15 +248,16 @@ def align_pairs(reads, read_len, refs, ref_len, *, cfg: AlignerConfig,
     tail_bad = (n_rem > wt) | (n_rem < jnp.maximum(m_tail - 2 * k, 0))
     pat_t = _slice_rev(reads, read_pos, W, m_tail)
     txt_t = _slice_rev(refs, ref_pos, wt, n_tail)
-    if cfg.store == "band" and cfg.backend == "pallas_fused":
-        # rectangular-tail fused kernel: the tail's SENE store is walked in
-        # VMEM scratch too, so whole-read alignment never ships DP state to
+    if cfg.store == "band" and cfg.backend in ("pallas_fused", "pallas_gpu"):
+        # rectangular-tail fused kernel: the tail's SENE store is walked
+        # on-chip too, so whole-read alignment never ships DP state to
         # HBM (bit-identical to the jnp 'and'-store path below)
         from ..kernels.ops import default_interpret, genasm_tail_fused_op
         tb_t = genasm_tail_fused_op(pat_t, txt_t, m_tail, n_tail, cfg=cfg,
                                     n_text=wt, commit_limit=2 * (W + wt),
                                     max_ops=max_ops_t, max_steps=max_steps_t,
-                                    interpret=default_interpret(), mesh=mesh)
+                                    interpret=default_interpret(cfg.backend),
+                                    mesh=mesh)
         solved_t = tb_t["solved"]
     else:
         res_t = dc_jmajor(pat_t, txt_t, m_tail, n_tail, k=k, n=wt, nw=cfg.nw,

@@ -67,7 +67,8 @@ def pair_pad_multiple(cfg, mesh) -> int:
     n = n_pair_shards(mesh)
     if n == 1:
         return 1
-    tile = cfg.lane_tile if cfg.backend in ("pallas", "pallas_fused") else 1
+    from ..core.config import PALLAS_BACKENDS
+    tile = cfg.lane_tile if cfg.backend in PALLAS_BACKENDS else 1
     return n * tile
 
 

@@ -40,6 +40,30 @@ The traceback walk is bit-identical to core.traceback mode='band' (same
 =,X,D,I preference, same commit-limit semantics); tests assert ops/dist
 equality against the jnp path.
 
+GPU lowering (``cfg.backend == 'pallas_gpu'``): the same three kernel
+bodies compile through Pallas's *Triton* backend for CUDA GPUs.  One
+Triton program per problem tile (lane-per-thread: the innermost problem
+axis vectorises across the program's threads, ``gpu_num_warps`` warps of
+32), with two mapping differences from the TPU path, both decided here at
+trace time:
+
+  * **No scratch memory.**  jax 0.4.37's Triton lowering rejects
+    ``scratch_shapes`` outright, so the DENT band / SENE store that the
+    TPU path keeps in VMEM scratch rides a GMEM-backed *output block*
+    instead.  Kernel bodies are reused unchanged — Pallas passes output
+    refs before scratch refs, so ``band_ref`` sits in the same positional
+    slot either way; the wrapper simply discards the extra output.  The
+    live DP columns stay loop-carried (registers), which is why the
+    per-backend planner budget is a register model
+    (``core.counting.gpu_lane_state_words``), not a 16 MiB VMEM budget.
+  * **GPU-shaped tiles.**  The lane tile quantum is a warp (32) and the
+    ceiling a CTA (1024 threads), planned by
+    ``core.windowing.plan_lane_tile`` from the register model.
+
+Outputs are bit-identical to the TPU/interpret path — asserted per grid
+point by tests/test_kernel_fused.py and on the full differential corpus
+by tests/test_differential.py.
+
 The pure-jnp oracle is kernels/ref.py (which defers to core.genasm); the
 jit'd wrapper with layout marshalling is kernels/ops.py.
 """
@@ -79,12 +103,52 @@ def default_max_steps(cfg: AlignerConfig) -> int:
     return cfg.tb_max_steps
 
 
+def gpu_num_warps(tile: int) -> int:
+    """Warps per Triton program for a `tile`-lane block: one thread per
+    lane up to the CTA ceiling (warp = 32 threads, <= 8 warps so two CTAs
+    can co-reside per SM at the default tile)."""
+    return max(1, min(8, tile // 32))
+
+
+def _gpu_compiler_params(tile: int):
+    """TritonCompilerParams for a compiled GPU launch (unused in interpret
+    mode).  num_stages stays 1: the DC fill is a serial column recurrence —
+    software-pipelining its loads buys nothing and costs registers, the
+    binding resource of the lane-per-thread mapping."""
+    from jax.experimental.pallas import triton as plgpu
+    return plgpu.TritonCompilerParams(num_warps=gpu_num_warps(tile),
+                                      num_stages=1)
+
+
 def fused_scratch_shapes(cfg: AlignerConfig, tile: int):
     """The declared VMEM scratch of the square fused kernel: the DENT band,
     nothing else — the DC fill's live columns are loop-carried values.
     Single source for `genasm_tb_fused_pallas` and the accounting tests."""
     return [pltpu.VMEM((cfg.k + 1, cfg.ncols_band, cfg.nwb, tile),
                        jnp.uint32)]
+
+
+def gpu_fused_store_shapes(cfg: AlignerConfig, tile: int):
+    """Declared per-program DP store of the square fused kernel on the
+    Triton path: the identical DENT band, as a GMEM-backed output block
+    (Triton has no scratch memory), one `jax.ShapeDtypeStruct` per store.
+    Same words as `fused_scratch_shapes` — only the memory space differs —
+    which tests/test_scratch_accounting.py asserts against the
+    `core.counting.gpu_store_words` model."""
+    return [jax.ShapeDtypeStruct((cfg.k + 1, cfg.ncols_band, cfg.nwb, tile),
+                                 jnp.uint32)]
+
+
+def gpu_tail_store_shapes(cfg: AlignerConfig, tile: int, n_text: int,
+                          banded: bool | None = None):
+    """Declared per-program DP store of the rectangular-tail kernel on the
+    Triton path (GMEM output block, same words as `tail_scratch_shapes`)."""
+    banded = cfg.tail_banded if banded is None else banded
+    if banded:
+        return [jax.ShapeDtypeStruct((cfg.k + 1, n_text, cfg.nwb, tile),
+                                     jnp.uint32)]
+    return [jax.ShapeDtypeStruct((cfg.k + 1, n_text + 1, cfg.nw, tile),
+                                 jnp.uint32)]
 
 
 def tail_scratch_shapes(cfg: AlignerConfig, tile: int, n_text: int,
@@ -430,12 +494,14 @@ def genasm_dc_pallas(pm, text, *, cfg: AlignerConfig, tile: int = 128,
     """pm: (5, NW, B) uint32; text: (W, B) int32 (kernel layout, problems
     innermost).  Returns (dist (B,), band (k+1, ncb, nwb, B), levels (B,)).
     No VMEM scratch at all: the DC state is loop-carried, the band is the
-    output block."""
+    output block — which is why this kernel lowers through the Triton
+    backend (cfg.backend == 'pallas_gpu') completely unchanged."""
     _, nw, B = pm.shape
     W = text.shape[0]
     assert W == cfg.W and nw == cfg.nw and B % tile == 0
     ncb, nwb, k = cfg.ncols_band, cfg.nwb, cfg.k
     grid = (B // tile,)
+    gpu = cfg.backend == "pallas_gpu"
     kern = functools.partial(_kernel, cfg=cfg)
     out = pl.pallas_call(
         kern,
@@ -454,6 +520,8 @@ def genasm_dc_pallas(pm, text, *, cfg: AlignerConfig, tile: int = 128,
             jax.ShapeDtypeStruct((1, B), jnp.int32),
             jax.ShapeDtypeStruct((1, B), jnp.int32),
         ],
+        compiler_params=_gpu_compiler_params(tile)
+        if gpu and not interpret else None,
         interpret=interpret,
     )(pm, text)
     band, dist, lvl = out
@@ -467,8 +535,12 @@ def genasm_tb_fused_pallas(pm, text, *, cfg: AlignerConfig, commit_limit: int,
     """Fused DC+TB.  pm: (5, NW, B) uint32; text: (W, B) int32 (kernel
     layout).  Returns (ops (max_ops, B) int32 front-first with OP_NONE
     padding, meta (META_ROWS, B) int32 — see META_* row constants).  The
-    DENT band lives and dies in VMEM scratch — the only scratch there is
-    (`fused_scratch_shapes`)."""
+    DENT band lives and dies on-chip: VMEM scratch on the TPU path
+    (`fused_scratch_shapes`), a discarded GMEM output block on the Triton
+    path (`gpu_fused_store_shapes` — cfg.backend == 'pallas_gpu', whose
+    lowering has no scratch memory).  The kernel body is identical either
+    way: output refs precede scratch refs, so band_ref occupies the same
+    positional slot as 3rd output or 1st scratch."""
     _, nw, B = pm.shape
     W = text.shape[0]
     assert W == cfg.W and nw == cfg.nw and B % tile == 0
@@ -477,26 +549,39 @@ def genasm_tb_fused_pallas(pm, text, *, cfg: AlignerConfig, commit_limit: int,
     if max_steps is None:
         max_steps = default_max_steps(cfg)
     grid = (B // tile,)
+    gpu = cfg.backend == "pallas_gpu"
     kern = functools.partial(_kernel_fused, cfg=cfg, commit_limit=commit_limit,
                              max_ops=max_ops, max_steps=max_steps)
-    ops, meta = pl.pallas_call(
+    ncb, nwb, k = cfg.ncols_band, cfg.nwb, cfg.k
+    out_specs = [
+        pl.BlockSpec((max_ops, tile), lambda i: (0, i)),
+        pl.BlockSpec((META_ROWS, tile), lambda i: (0, i)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((max_ops, B), jnp.int32),
+        jax.ShapeDtypeStruct((META_ROWS, B), jnp.int32),
+    ]
+    if gpu:
+        out_specs.append(pl.BlockSpec((k + 1, ncb, nwb, tile),
+                                      lambda i: (0, 0, 0, i)))
+        (blk,) = gpu_fused_store_shapes(cfg, tile)
+        out_shape.append(jax.ShapeDtypeStruct(blk.shape[:-1] + (B,),
+                                              blk.dtype))
+    out = pl.pallas_call(
         kern,
         grid=grid,
         in_specs=[
             pl.BlockSpec((5, nw, tile), lambda i: (0, 0, i)),
             pl.BlockSpec((W, tile), lambda i: (0, i)),
         ],
-        out_specs=[
-            pl.BlockSpec((max_ops, tile), lambda i: (0, i)),
-            pl.BlockSpec((META_ROWS, tile), lambda i: (0, i)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((max_ops, B), jnp.int32),
-            jax.ShapeDtypeStruct((META_ROWS, B), jnp.int32),
-        ],
-        scratch_shapes=fused_scratch_shapes(cfg, tile),
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=() if gpu else fused_scratch_shapes(cfg, tile),
+        compiler_params=_gpu_compiler_params(tile)
+        if gpu and not interpret else None,
         interpret=interpret,
     )(pm, text)
+    ops, meta = out[0], out[1]       # gpu: out[2] is the discarded band
     return ops, meta
 
 
@@ -792,16 +877,35 @@ def genasm_tail_fused_pallas(pm, text, m_len, n_len, *, cfg: AlignerConfig,
     like genasm_tb_fused_pallas; the SENE store lives and dies in VMEM
     scratch — banded (`cfg.tail_banded`, ~2x less scratch at the default
     geometry) or full on the fallback — and the tail window never touches
-    HBM either.  Both variants are bit-identical on every output
+    HBM either.  On the Triton path (cfg.backend == 'pallas_gpu', no
+    scratch memory in that lowering) the same store is a discarded GMEM
+    output block (`gpu_tail_store_shapes`); kernel bodies unchanged.  All
+    variants are bit-identical on every output
     (tests/test_kernel_fused.py, tests/test_differential.py)."""
     _, nw, B = pm.shape
     assert text.shape[0] == n_text and nw == cfg.nw and B % tile == 0
     grid = (B // tile,)
+    gpu = cfg.backend == "pallas_gpu"
     body = _kernel_tail_banded if cfg.tail_banded else _kernel_tail_fused
     kern = functools.partial(body, cfg=cfg, n_text=n_text,
                              commit_limit=commit_limit, max_ops=max_ops,
                              max_steps=max_steps)
-    ops, meta = pl.pallas_call(
+    out_specs = [
+        pl.BlockSpec((max_ops, tile), lambda i: (0, i)),
+        pl.BlockSpec((META_ROWS, tile), lambda i: (0, i)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((max_ops, B), jnp.int32),
+        jax.ShapeDtypeStruct((META_ROWS, B), jnp.int32),
+    ]
+    if gpu:
+        (blk,) = gpu_tail_store_shapes(cfg, tile, n_text)
+        nd = len(blk.shape)
+        out_specs.append(pl.BlockSpec(
+            blk.shape, lambda i, nd=nd: (0,) * (nd - 1) + (i,)))
+        out_shape.append(jax.ShapeDtypeStruct(blk.shape[:-1] + (B,),
+                                              blk.dtype))
+    out = pl.pallas_call(
         kern,
         grid=grid,
         in_specs=[
@@ -810,15 +914,12 @@ def genasm_tail_fused_pallas(pm, text, m_len, n_len, *, cfg: AlignerConfig,
             pl.BlockSpec((1, tile), lambda i: (0, i)),
             pl.BlockSpec((1, tile), lambda i: (0, i)),
         ],
-        out_specs=[
-            pl.BlockSpec((max_ops, tile), lambda i: (0, i)),
-            pl.BlockSpec((META_ROWS, tile), lambda i: (0, i)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((max_ops, B), jnp.int32),
-            jax.ShapeDtypeStruct((META_ROWS, B), jnp.int32),
-        ],
-        scratch_shapes=tail_scratch_shapes(cfg, tile, n_text),
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=() if gpu else tail_scratch_shapes(cfg, tile, n_text),
+        compiler_params=_gpu_compiler_params(tile)
+        if gpu and not interpret else None,
         interpret=interpret,
     )(pm, text, m_len, n_len)
+    ops, meta = out[0], out[1]       # gpu: out[2] is the discarded store
     return ops, meta

@@ -1,8 +1,11 @@
 """jit'd wrappers for the Pallas kernels (layout marshalling + dispatch).
 
-On this CPU container the kernels execute in interpret mode; on a real TPU
-pass interpret=False (the BlockSpecs/VMEM scratch are TPU-shaped).  The
-``backend`` knob in AlignerConfig selects jnp (core) vs pallas paths.
+On this CPU container the kernels execute in interpret mode; on a real
+accelerator pass interpret=False — cfg.backend picks the lowering the
+kernel wrappers build ('pallas'/'pallas_fused' → Mosaic TPU with VMEM
+scratch, 'pallas_gpu' → Triton with the store as a GMEM output block; see
+kernels.genasm_dc and docs/backends.md).  ``default_interpret(cfg.backend)``
+is the one place that decides interpret-vs-compiled from the platform.
 
 Multi-device: every op takes an optional ``mesh``.  When given, the
 pallas_call is wrapped in ``shard_map`` over the mesh's pair axes
@@ -37,8 +40,19 @@ from .genasm_dc import (META_DFIN, META_DIST, META_LVL, META_NOPS, META_OK,
                         genasm_tail_fused_pallas, genasm_tb_fused_pallas)
 
 
-def default_interpret() -> bool:
-    """Interpret-mode Pallas everywhere but real TPUs (CPU CI, tests)."""
+#: jax.default_backend() values that carry a CUDA/ROCm device — the
+#: platforms where the Triton lowering compiles for real
+GPU_PLATFORMS = ("gpu", "cuda", "rocm")
+
+
+def default_interpret(backend: str | None = None) -> bool:
+    """Interpret-mode Pallas everywhere the cfg.backend's real lowering
+    target is absent: 'pallas_gpu' compiles only on a CUDA/ROCm device,
+    the TPU backends only on a real TPU — CPU CI interprets both.  Called
+    with cfg.backend by every dispatch site (core.windowing, core.genasm);
+    the no-argument form keeps the historical TPU-only contract."""
+    if backend == "pallas_gpu":
+        return jax.default_backend() not in GPU_PLATFORMS
     return jax.default_backend() != "tpu"
 
 

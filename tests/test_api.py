@@ -178,9 +178,31 @@ def test_plan_resolves_and_validates_once():
         plan(CFG, not_a_knob=1)
     with pytest.raises(AssertionError):
         plan(CFG, rescue_mode="teleport")
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError, match="store"):
         resolve_config(CFG, backend="pallas_fused", store="and")
     assert AlignSpec(cfg=CFG).key() == AlignSpec(cfg=CFG).key()
+
+
+def test_gpu_spec_keys_cache_separately_from_fused():
+    """A pallas_gpu spec round-trips through fingerprint()/CompileCache
+    without colliding with pallas_fused: the backend knob is hashed like
+    every other field (fingerprint covers ALL dataclass fields), so the
+    two lowerings of the same geometry can never serve each other's
+    executables from the process-wide shared cache."""
+    gpu = resolve_config(CFG, backend="pallas_gpu")
+    tpu = resolve_config(CFG, backend="pallas_fused")
+    assert gpu.fingerprint() != tpu.fingerprint()
+    # equal configs fingerprint equal: the round-trip half of the contract
+    assert gpu.fingerprint() == resolve_config(CFG,
+                                               backend="pallas_gpu"
+                                               ).fingerprint()
+    ka, kb = AlignSpec(cfg=gpu).key(), AlignSpec(cfg=tpu).key()
+    assert ka != kb
+    c = CompileCache()
+    assert c.get((ka, 64), lambda: "exe-gpu") == "exe-gpu"
+    assert c.get((kb, 64), lambda: "exe-tpu") == "exe-tpu"
+    assert c.get((ka, 64), lambda: "never") == "exe-gpu"   # hit, no rebuild
+    assert (c.hits, c.misses) == (1, 2)
 
 
 def test_lane_and_bucket_quantisation_math(monkeypatch):

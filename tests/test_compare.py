@@ -39,6 +39,36 @@ def test_zero_baseline_reports_but_never_gates():
     assert regs2 == ["session.pairs_per_s"]
 
 
+def test_pending_hardware_rows_annotated_not_gated():
+    """Zero on BOTH sides is a committed placeholder for hardware the
+    runner lacks (the pallas_gpu family on CPU CI): it must render as
+    'pending-hardware', distinct from the suspicious one-sided
+    'zero-baseline', and gate nothing — until the first GPU nightly puts
+    a real number on both sides, at which point the ordinary floor
+    applies."""
+    base = _report(aligners={"gpu_pairs_per_s": 0.0})
+    cur = _report(aligners={"gpu_pairs_per_s": 0.0})
+    rows, regs, added, removed = compare(cur, base, 0.30)
+    assert regs == [] and added == [] and removed == []
+    (name, b, c, delta, status), = rows
+    assert name == "aligners.gpu_pairs_per_s" and (b, c) == (0.0, 0.0)
+    assert delta is None
+    assert status == "pending-hardware (not gated)"
+    table = render(rows, regs, added, removed, 0.30, "BENCH_X.json")
+    assert "pending-hardware (not gated)" in table
+    assert "✅" not in table and "❌" not in table
+    # first measured GPU run against the placeholder: still ungated
+    # (zero-baseline), NOT a spurious pass or fail
+    measured = _report(aligners={"gpu_pairs_per_s": 450.0})
+    rows2, regs2, _, _ = compare(measured, base, 0.30)
+    assert regs2 == []
+    assert rows2[0][4] == "zero-baseline (not gated)"
+    # and once both sides are measured, the throughput floor gates
+    _, regs3, _, _ = compare(_report(aligners={"gpu_pairs_per_s": 100.0}),
+                             measured, 0.30)
+    assert regs3 == ["aligners.gpu_pairs_per_s"]
+
+
 def test_direction_signs_gate_floor_and_ceiling():
     base = _report(session={"pairs_per_s": 100.0},
                    memory={"vmem_bytes": 1000.0})

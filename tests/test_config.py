@@ -1,0 +1,84 @@
+"""AlignerConfig validation: every bad knob raises ValueError, not a bare
+assert.
+
+The contract (this PR's satellite): ``__post_init__`` names the offending
+knob AND the valid choices in the message, so a misconfigured AlignSession
+/ Gateway / MapperConfig front door fails with an actionable error instead
+of a stack-trace-only AssertionError — and so callers can catch ValueError
+uniformly (assert statements vanish under ``python -O``)."""
+import pytest
+
+from repro.core.config import (BACKENDS, PALLAS_BACKENDS, STORES,
+                               TAIL_STORES, AlignerConfig)
+
+
+def _err(**kw):
+    base = dict(W=16, O=6, k=4)
+    base.update(kw)
+    with pytest.raises(ValueError) as ei:
+        AlignerConfig(**base)
+    return str(ei.value)
+
+
+def test_overlap_bounds_name_the_knobs():
+    for bad_O in (0, 16, 20, -3):
+        msg = _err(O=bad_O)
+        assert "O" in msg and "W" in msg and str(bad_O) in msg
+
+
+def test_k_bounds_name_the_knobs():
+    for bad_k in (0, 16, 99, -1):
+        msg = _err(k=bad_k)
+        assert "k" in msg and "W" in msg and str(bad_k) in msg
+
+
+def test_lane_tile_must_be_positive():
+    for bad in (0, -8):
+        msg = _err(lane_tile=bad)
+        assert "lane_tile" in msg and str(bad) in msg
+
+
+def test_enum_knobs_name_knob_and_choices():
+    """Each enum knob's message carries the knob name, the bad value, and
+    every valid choice — copy-pasteable without opening the source."""
+    cases = [("store", STORES), ("tail_store", TAIL_STORES),
+             ("backend", BACKENDS)]
+    for knob, choices in cases:
+        msg = _err(**{knob: "warp_speed"})
+        assert knob in msg and "warp_speed" in msg
+        for choice in choices:
+            assert choice in msg, f"{knob} error must list {choice!r}"
+
+
+def test_pallas_backends_require_band_store():
+    """The Pallas kernels implement the banded DP only; pairing any of them
+    with a non-band store must say so, naming both knobs."""
+    for backend in PALLAS_BACKENDS:
+        for store in ("edges4", "and"):
+            msg = _err(backend=backend, store=store)
+            assert backend in msg and store in msg and "band" in msg
+
+
+def test_valid_configs_construct():
+    """The happy paths stay open — including the new pallas_gpu backend and
+    jnp with every store mode."""
+    for backend in BACKENDS:
+        cfg = AlignerConfig(W=16, O=6, k=4, backend=backend)
+        assert cfg.backend == backend
+    for store in STORES:
+        assert AlignerConfig(W=16, O=6, k=4, store=store).store == store
+    for ts in TAIL_STORES:
+        c = AlignerConfig(W=64, O=24, k=12, backend="pallas_gpu",
+                          tail_store=ts)
+        assert c.tail_store == ts
+
+
+def test_valueerror_not_assertionerror():
+    """Regression pin: the old bare asserts raised AssertionError; callers
+    that catch ValueError must keep working."""
+    try:
+        AlignerConfig(W=16, O=6, k=4, backend="nope")
+    except ValueError:
+        pass
+    else:  # pragma: no cover
+        pytest.fail("invalid backend must raise ValueError")

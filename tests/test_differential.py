@@ -1,6 +1,7 @@
 """Differential fuzz suite: seeded random (read, ref, error-profile) pairs
-aligned by EVERY backend (jnp / pallas / pallas_fused) and by both rescue
-modes (host numpy loop vs on-device masked k-doubling), checked against the
+aligned by EVERY backend (jnp / pallas / pallas_fused / pallas_gpu) and by
+both rescue modes (host numpy loop vs on-device masked k-doubling),
+checked against the
 classic DP oracle (core.oracle) and the KSW2-like banded DP baseline
 (baselines.dp) with unit costs.
 
@@ -162,6 +163,24 @@ def test_fused_banded_tail_bit_identical(corpus, diff_aligned):
     res = GenASMAligner(cfg, rescue_rounds=ROUNDS,
                         backend="pallas_fused").align(reads, refs)
     _assert_bit_identical(res, diff_aligned("jnp"), "banded tail")
+
+
+def test_gpu_backend_bit_identical(corpus, diff_aligned):
+    """pallas_gpu (the Triton lowering of the same fused kernels, band as
+    a GMEM output block instead of VMEM scratch) == jnp on the
+    mixed-profile corpus, bit for bit — interpret mode on this CPU
+    runner, the compiled-CUDA parity leg lives in test_kernel_fused and
+    is inverse-guarded in CI."""
+    _assert_bit_identical(diff_aligned("pallas_gpu"), diff_aligned("jnp"),
+                          "pallas_gpu")
+
+
+def test_gpu_backend_host_rescue_bit_identical(corpus, diff_aligned):
+    """pallas_gpu under the host numpy rescue loop too: both rescue modes
+    of the new backend hit the full corpus (the acceptance contract —
+    5 profiles x both rescue modes, bit-identical to jnp)."""
+    _assert_bit_identical(diff_aligned("pallas_gpu", "host"),
+                          diff_aligned("jnp"), "pallas_gpu host rescue")
 
 
 @pytest.mark.slow

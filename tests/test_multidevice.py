@@ -26,6 +26,11 @@ What tier-1 proves (one subprocess, the differential corpus profiles):
     on the retire thread against mesh-sharded executables) stays
     bit-identical to the single-device baseline, and shuts down cleanly.
 
+A second tier-1 subprocess proves the same contract for the Triton
+lowering: backend='pallas_gpu' (interpret mode on these forced-host
+devices) sharded over the 8-device mesh == unsharded, bit for bit, with
+the GPU pad quantum (lane_tile * n_devices via PALLAS_BACKENDS) applied.
+
 The nightly (@slow) sweep extends the same parity to the jnp and split
 pallas backends, the host rescue mode, a 2-D ('data','model') mesh and
 the plain (no-rescue) factory.
@@ -194,6 +199,33 @@ def test_sharded_fused_rescue_bit_identical_and_engine_padding():
     """)
     assert "PARITY OK" in out and "ENGINE OK" in out and "FACTORY OK" in out
     assert "SESSION-THREAD OK" in out and "BAND OK" in out
+
+
+def test_sharded_gpu_backend_bit_identical():
+    """backend='pallas_gpu' (the Triton lowering, interpret mode on these
+    forced-host devices) sharded over the 8-device mesh == unsharded, bit
+    for bit, on the ragged differential corpus — including the GPU pad
+    quantum: pair_pad_multiple = lane_tile * n_devices applies to
+    pallas_gpu exactly as to the TPU backends (PALLAS_BACKENDS)."""
+    out = run_py(PRELUDE + """
+    from repro.distributed.sharding import pair_pad_multiple
+
+    cfg = AlignerConfig(W=16, O=6, k=4, lane_tile=4, backend='pallas_gpu')
+    mesh = make_test_mesh((8,), ('data',))
+    reads, refs, profs = make_corpus(seed=20260727, n_per_profile=6)
+    assert len(reads) == 30                              # ragged vs 4*8
+    assert pair_pad_multiple(cfg, mesh) == 32            # GPU pad quantum
+
+    base = GenASMAligner(cfg, rescue_rounds=1).align(reads, refs)
+    transfer.reset()
+    shard = GenASMAligner(cfg, rescue_rounds=1, mesh=mesh).align(reads, refs)
+    ts = transfer.stats()
+    assert (ts.h2d_calls, ts.d2h_calls) == (1, 1), ts    # no per-round trips
+    assert_bit_identical(shard, base, 'sharded pallas_gpu')
+    assert (base.k_used[~base.failed] > cfg.k).any()     # rescue exercised
+    print('GPU PARITY OK', int(base.failed.sum()))
+    """)
+    assert "GPU PARITY OK" in out
 
 
 @pytest.mark.slow

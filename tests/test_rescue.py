@@ -138,6 +138,20 @@ def test_failed_flag_agrees_host_vs_device(corpus, dev_res, host_res):
     assert not dev_res.failed[0]               # the clean lane always does
 
 
+def test_gpu_backend_rescue_ladder_bit_identical(corpus, dev_res):
+    """The full k-doubling ladder under backend='pallas_gpu' (Triton
+    lowering, interpret mode here) == the jnp on-device ladder, bit for
+    bit — including the decoy lane that fails every rung."""
+    gpu = GenASMAligner(CFG, rescue_rounds=ROUNDS,
+                        backend="pallas_gpu").align(*corpus)
+    np.testing.assert_array_equal(gpu.failed, dev_res.failed)
+    np.testing.assert_array_equal(gpu.k_used, dev_res.k_used)
+    np.testing.assert_array_equal(gpu.dist, dev_res.dist)
+    assert gpu.cigars == dev_res.cigars
+    for a, b in zip(gpu.ops, dev_res.ops):
+        np.testing.assert_array_equal(a, b)
+
+
 def test_lane_independence_under_permutation(corpus, dev_res):
     """Permuting the batch permutes the results: the rescue mask freezes
     solved lanes without leaking state across lanes.  Same shapes/config as

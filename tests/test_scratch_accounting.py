@@ -21,11 +21,16 @@ import numpy as np
 import pytest
 
 from repro.core.config import AlignerConfig, resolve_config
-from repro.core.counting import (kernel_scratch_words, reduction_report,
-                                 tail_scratch_words)
-from repro.core.windowing import plan_lane_tile
-from repro.kernels.genasm_dc import (fused_scratch_shapes, tail_scratch_shapes,
-                                     vmem_bytes, vmem_bytes_tail)
+from repro.core.counting import (gpu_lane_state_words, gpu_store_words,
+                                 gpu_tail_store_words, kernel_scratch_words,
+                                 reduction_report, tail_scratch_words)
+from repro.core.windowing import (GPU_LANE_CEILING, GPU_LANE_QUANTUM,
+                                  plan_lane_tile)
+from repro.kernels.genasm_dc import (fused_scratch_shapes,
+                                     gpu_fused_store_shapes,
+                                     gpu_tail_store_shapes,
+                                     tail_scratch_shapes, vmem_bytes,
+                                     vmem_bytes_tail)
 
 # (W, k) grid: headline geometry, a wide-k square, a band-not-a-win
 # boundary case (nwb == nw at W=16/k=4 and W=32/k=15), and a multi-word one
@@ -92,6 +97,55 @@ def test_auto_mode_bands_exactly_when_strict_win(W, k):
     else:
         assert vmem_bytes_tail(auto, 8, n_text) == vmem_bytes_tail(full, 8,
                                                                    n_text)
+
+
+@pytest.mark.parametrize("W,k", GRID)
+@pytest.mark.parametrize("tile", TILES)
+def test_gpu_declared_equals_model_and_tpu_band(W, k, tile):
+    """The Triton path's per-backend scratch model: the band the GPU
+    wrappers declare as a GMEM output block (gpu_*_store_shapes) equals
+    the core.counting gpu_* model word for word — and equals the TPU
+    path's VMEM scratch, because the store IS the same band; only the
+    memory space differs (jax's Triton lowering has no scratch memory)."""
+    cfg = _cfg(W, k, backend="pallas_gpu")
+    declared = _declared_bytes(gpu_fused_store_shapes(cfg, tile))
+    assert declared == 4 * gpu_store_words(cfg, tile)
+    assert declared == _declared_bytes(fused_scratch_shapes(cfg, tile))
+    n_text = cfg.W + 4 * cfg.k
+    for store in ("auto", "band", "full"):
+        cfg_s = _cfg(W, k, backend="pallas_gpu", tail_store=store)
+        d = _declared_bytes(gpu_tail_store_shapes(cfg_s, tile, n_text))
+        assert d == 4 * gpu_tail_store_words(cfg_s, tile, n_text)
+        assert d == _declared_bytes(tail_scratch_shapes(cfg_s, tile, n_text))
+
+
+def test_gpu_planner_uses_register_model():
+    """backend='pallas_gpu' switches plan_lane_tile to the register-budget
+    model: warp quantum, CTA ceiling, and the live-column word count per
+    lane (two live columns x (k+1) levels x nw words) as the denominator —
+    NOT the 16 MiB VMEM scratch budget (the GPU band store is GMEM)."""
+    for W, k in GRID:
+        cfg = _cfg(W, k, backend="pallas_gpu")
+        tile = plan_lane_tile(cfg)
+        assert tile % GPU_LANE_QUANTUM == 0
+        assert GPU_LANE_QUANTUM <= tile <= GPU_LANE_CEILING
+        per_lane = gpu_lane_state_words(cfg)
+        assert per_lane == 2 * (cfg.k + 1) * cfg.nw
+        budget = 64 * 1024
+        if tile < GPU_LANE_CEILING:
+            assert per_lane * tile <= budget
+            assert per_lane * (tile + GPU_LANE_QUANTUM) > budget \
+                or tile == GPU_LANE_QUANTUM
+    # headline geometry: 52 words/lane -> capped at the CTA ceiling
+    assert plan_lane_tile(_cfg(64, 12, backend="pallas_gpu")) == 1024
+    # the refusal contract carries over, naming the geometry
+    with pytest.raises(ValueError, match=r"W=64 k=12"):
+        plan_lane_tile(_cfg(64, 12, backend="pallas_gpu"),
+                       reg_budget_words=10)
+    # and 'auto' resolves through the same per-backend model
+    c = resolve_config(None, W=64, O=24, k=12, backend="pallas_gpu",
+                       lane_tile="auto")
+    assert c.lane_tile == 1024
 
 
 def test_headline_reduction_is_at_least_2x():
